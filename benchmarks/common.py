@@ -1,0 +1,74 @@
+"""Shared benchmark fixtures: the full trained testbed + routing episodes."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (EdgeDetectionEstimator, Gateway, GreedyEstimateRouter,
+                        HighestMAPPerGroupRouter, HighestMAPRouter,
+                        LowestEnergyRouter, LowestInferenceRouter,
+                        OracleEstimator, OracleRouter, OutputBasedEstimator,
+                        RandomRouter, RoundRobinRouter)
+from repro.core.estimators import SSDFrontEndEstimator
+from repro.detection import scenes as sc
+
+
+@functools.lru_cache(maxsize=1)
+def testbed():
+    from repro.detection.train import default_testbed
+    return default_testbed()
+
+
+def router_matrix(table, params, delta: float = 5.0):
+    """All (router, estimator) combos of the paper's evaluation."""
+    return [
+        ("Orc", OracleRouter(table, delta), OracleEstimator()),
+        ("RR", RoundRobinRouter(table, delta), None),
+        ("Rnd", RandomRouter(table, delta), None),
+        ("LE", LowestEnergyRouter(table, delta), None),
+        ("LI", LowestInferenceRouter(table, delta), None),
+        ("HM", HighestMAPRouter(table, delta), None),
+        ("HMG", HighestMAPPerGroupRouter(table, delta), None),
+        ("ED", GreedyEstimateRouter(table, delta), EdgeDetectionEstimator()),
+        ("SF", GreedyEstimateRouter(table, delta),
+         SSDFrontEndEstimator(params["ssd_v1"], "ssd_v1")),
+        ("OB", GreedyEstimateRouter(table, delta), OutputBasedEstimator()),
+    ]
+
+
+def run_all_routers(scenes, delta: float = 5.0, subset: Optional[set] = None):
+    params, table = testbed()
+    rows = []
+    for name, router, est in router_matrix(table, params, delta):
+        if subset and name not in subset:
+            continue
+        router.name = name
+        t0 = time.perf_counter()
+        stats = Gateway(router, table, params, est).process_stream(scenes)
+        wall = time.perf_counter() - t0
+        rows.append({
+            "router": name,
+            "map": stats.map_pct,
+            "backend_energy_mwh": stats.backend_energy_mwh,
+            "gateway_energy_mwh": stats.gateway_energy_mwh,
+            "total_energy_mwh": stats.total_energy_mwh,
+            "backend_time_ms": stats.backend_time_ms,
+            "gateway_time_ms": stats.gateway_time_ms,
+            "total_time_ms": stats.total_time_ms,
+            "wall_s": wall,
+            "pairs": stats.pair_histogram,
+        })
+    return rows
+
+
+def print_rows(name: str, rows: List[Dict]):
+    print(f"\n== {name} ==")
+    print("router,mAP,total_energy_mWh,total_time_ms,gateway_energy_mWh,"
+          "gateway_time_ms")
+    for r in rows:
+        print(f"{r['router']},{r['map']:.2f},{r['total_energy_mwh']:.4f},"
+              f"{r['total_time_ms']:.1f},{r['gateway_energy_mwh']:.5f},"
+              f"{r['gateway_time_ms']:.2f}")

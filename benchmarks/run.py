@@ -1,0 +1,292 @@
+"""Benchmark harness: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints ``name,metric,...`` CSV blocks per figure and writes JSON artifacts
+to artifacts/bench/.  Figure map (see DESIGN.md §7):
+
+  motivation    — Fig. 2  energy/accuracy crossover by object count
+  pareto        — Fig. 5  all 64 (model x device) pairs
+  full_dataset  — Fig. 6  routers on the full corpus, delta=5
+  balanced      — Fig. 7  balanced-sorted corpus
+  video         — Fig. 8  temporally-correlated stream
+  delta_sweep   — Fig. 9  Orc/ED/SF/OB across delta in {0,5,10,15,20,25}
+  overhead      — gateway-overhead metric (per estimator)
+  kernels       — kernel timings (CPU oracle path; Pallas checked in tests)
+  pool_routing  — framework-level: ECORE over the TPU dry-run pool
+  roofline      — per (arch x shape x mesh) roofline terms from the dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.detection import scenes as sc
+
+ART = "artifacts/bench"
+
+
+def _save(name, obj):
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1, default=str)
+
+
+# ----------------------------------------------------------- Fig. 2 analog
+
+def bench_motivation(quick=False):
+    from repro.core.metrics import MAPAccumulator
+    from repro.detection.train import run_detector
+    from repro.detection.detectors import DETECTOR_CONFIGS
+    from repro.detection.devices import DEVICES
+    params, _ = common.testbed()
+    n = 80 if quick else 240
+    scenes = [s for s in sc.full_dataset(n, seed=21)]
+    single = [s for s in scenes if s.count == 1]
+    many = [s for s in scenes if s.count >= 4]
+    print("\n== motivation (Fig 2) ==")
+    print("model,group,mAP,energy_mwh_per_image")
+    rows = []
+    for model in ("ssd_lite", "yolov8_n"):
+        for label, group in (("1 object", single), ("4+ objects", many)):
+            acc = MAPAccumulator(sc.NUM_CLASSES)
+            imgs = np.stack([s.image for s in group])
+            for s, (b, sc_, c) in zip(group, run_detector(params[model], imgs)):
+                acc.add_image(b, sc_, c, s.boxes, s.classes)
+            e = DEVICES["pi5"].energy_mwh(DETECTOR_CONFIGS[model].flops)
+            rows.append((model, label, acc.map(), e))
+            print(f"{model},{label},{acc.map():.1f},{e:.5f}")
+    _save("motivation", rows)
+
+
+# ----------------------------------------------------------- Fig. 5 analog
+
+def bench_pareto(quick=False):
+    from repro.detection.train import profile_pairs
+    from repro.detection.devices import DEVICES
+    from repro.detection.detectors import DETECTOR_CONFIGS
+    params, _ = common.testbed()
+    pairs = [(m, d) for m in DETECTOR_CONFIGS for d in DEVICES]
+    val = sc.full_dataset(60 if quick else 150, seed=23)
+    table = profile_pairs(params, pairs, val_scenes=val)
+    print("\n== pareto (Fig 5): 64 model-device pairs ==")
+    print("model,device,mean_mAP,energy_mwh,time_ms")
+    rows = []
+    for m, d in table.pairs():
+        e = table.entry((m, d), 4)
+        mm = table.mean_map((m, d))
+        rows.append((m, d, mm, e.energy_mwh, e.time_ms))
+        print(f"{m},{d},{mm:.1f},{e.energy_mwh:.5f},{e.time_ms:.2f}")
+    front = []
+    for r in rows:
+        if not any(o[3] <= r[3] and o[2] >= r[2] and o != r for o in rows):
+            front.append(r[:2])
+    print("pareto_front:", front)
+    _save("pareto", {"rows": rows, "front": front})
+
+
+# -------------------------------------------------- Fig. 6 / 7 / 8 analogs
+
+def bench_full_dataset(quick=False):
+    scenes = sc.full_dataset(100 if quick else 300, seed=31)
+    rows = common.run_all_routers(scenes, delta=5.0)
+    common.print_rows("full dataset (Fig 6), delta=5", rows)
+    _save("full_dataset", rows)
+    return rows
+
+
+def bench_balanced(quick=False):
+    scenes = sc.balanced_sorted_dataset(per_group=20 if quick else 50,
+                                        seed=32)
+    rows = common.run_all_routers(scenes, delta=5.0)
+    common.print_rows("balanced sorted (Fig 7), delta=5", rows)
+    _save("balanced", rows)
+    return rows
+
+
+def bench_video(quick=False):
+    scenes = sc.video_dataset(n_frames=100 if quick else 300, seed=33)
+    rows = common.run_all_routers(scenes, delta=5.0)
+    common.print_rows("video (Fig 8), delta=5", rows)
+    _save("video", rows)
+    return rows
+
+
+# ----------------------------------------------------------- Fig. 9 analog
+
+def bench_delta_sweep(quick=False):
+    scenes = sc.full_dataset(80 if quick else 200, seed=34)
+    out = {}
+    print("\n== delta sweep (Fig 9) ==")
+    print("delta,router,mAP,total_energy_mWh,total_time_ms")
+    for delta in (0, 5, 10, 15, 20, 25):
+        rows = common.run_all_routers(scenes, delta=float(delta),
+                                      subset={"Orc", "ED", "SF", "OB"})
+        out[delta] = rows
+        for r in rows:
+            print(f"{delta},{r['router']},{r['map']:.2f},"
+                  f"{r['total_energy_mwh']:.4f},{r['total_time_ms']:.1f}")
+    _save("delta_sweep", out)
+    return out
+
+
+# -------------------------------------------------------- gateway overhead
+
+def bench_overhead(quick=False):
+    scenes = sc.full_dataset(60 if quick else 150, seed=35)
+    rows = common.run_all_routers(scenes, delta=5.0,
+                                  subset={"Orc", "ED", "SF", "OB", "RR"})
+    print("\n== gateway overhead ==")
+    print("router,gateway_energy_mWh,gateway_time_ms,share_of_total_energy")
+    for r in rows:
+        share = r["gateway_energy_mwh"] / max(r["total_energy_mwh"], 1e-12)
+        print(f"{r['router']},{r['gateway_energy_mwh']:.5f},"
+              f"{r['gateway_time_ms']:.2f},{share:.3f}")
+    _save("overhead", rows)
+
+
+# ------------------------------------------------------------ kernel bench
+
+def bench_kernels(quick=False):
+    import jax
+    import jax.numpy as jnp
+    print("\n== kernels (us_per_call; CPU xla-oracle path — Pallas kernels "
+          "validated via interpret mode in tests/test_kernels.py) ==")
+    print("name,us_per_call,derived")
+
+    def timeit(fn, *args, n=5):
+        jax.block_until_ready(fn(*args))  # compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n * 1e6
+
+    from repro.kernels.flash_attention.ops import attention
+    from repro.kernels.decode_attention.ops import decode
+    from repro.kernels.sobel.ops import sobel_grad
+    from repro.kernels.rglru_scan import ref as lru_ref
+    from repro.kernels.ssd_scan import ref as ssd_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    B, H, KV, S, D = 1, 8, 2, (256 if quick else 1024), 64
+    q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, D), jnp.float32)
+    us = timeit(lambda a, b, c: attention(a, b, c, impl="xla"), q, k, v)
+    flops = 2 * 2 * B * H * S * S * D / 2  # causal half
+    print(f"flash_attention_s{S},{us:.0f},{flops/us*1e-6:.2f}GFLOP/s")
+
+    qd = jax.random.normal(ks[3], (8, H, D), jnp.float32)
+    kd = jax.random.normal(ks[4], (8, KV, S, D), jnp.float32)
+    lengths = jnp.full((8,), S, jnp.int32)
+    us = timeit(lambda a, b, c, l: decode(a, b, c, l, impl="xla"),
+                qd, kd, kd, lengths)
+    print(f"decode_attention_t{S},{us:.0f},{8*KV*S*D*8/us*1e-3:.1f}MB/s-cache")
+
+    img = jax.random.uniform(ks[5], (8, 64, 64))
+    us = timeit(lambda a: sobel_grad(a, impl="xla"), img)
+    print(f"sobel_64x64x8,{us:.0f},{8*64*64/us:.2f}Mpx/s")
+
+    a = jax.random.uniform(ks[6], (2, 512, 256), minval=0.5, maxval=0.99)
+    b = jax.random.normal(ks[7], (2, 512, 256))
+    us = timeit(lambda x, y: lru_ref.linear_scan(x, y), a, b)
+    print(f"rglru_scan_512x256,{us:.0f},{2*512*256/us:.2f}Melem/s")
+
+    x2 = jax.random.normal(ks[2], (1, 512, 4, 32))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, 4)))
+    A = -jnp.exp(jax.random.normal(ks[3], (4,)))
+    Bm = jax.random.normal(ks[4], (1, 512, 16))
+    Cm = jax.random.normal(ks[5], (1, 512, 16))
+    Dv = jnp.ones((4,))
+    us = timeit(lambda *args: ssd_ref.ssd_chunked(*args, chunk=64),
+                x2, dt, A, Bm, Cm, Dv)
+    print(f"ssd_scan_512,{us:.0f},chunked")
+
+
+# ------------------------------------------------- framework pool routing
+
+def bench_pool_routing(quick=False):
+    path = "artifacts/dryrun.jsonl"
+    if not os.path.exists(path):
+        print("\n== pool_routing: no dry-run artifact; skipping ==")
+        return
+    from repro.serving.pool import ServingPool, bucket_of, pool_table_from_dryrun
+    table = pool_table_from_dryrun(path)
+    pool = ServingPool(table, delta=5.0)
+    rng = np.random.default_rng(0)
+    print("\n== TPU pool routing (framework; profiles from dry-run) ==")
+    print("bucket,arch,score,time_ms,energy_mwh")
+    chosen = {}
+    for plen in (64, 1000, 5000, 20_000, 100_000):
+        d = pool.route(plen)
+        chosen[d.bucket] = d.arch
+        print(f"{d.bucket},{d.arch},{d.score:.1f},{d.time_ms:.2f},"
+              f"{d.energy_mwh:.4f}")
+    total_greedy = total_max = 0.0
+    biggest = max(table.pairs(), key=table.mean_map)
+    for _ in range(200):
+        plen = int(rng.choice([64, 512, 4096, 40_000], p=[.4, .3, .2, .1]))
+        d = pool.route(plen)
+        total_greedy += d.energy_mwh
+        total_max += table.entry(biggest, min(bucket_of(plen), 4)).energy_mwh
+    print(f"energy_vs_always_{biggest[0]}: "
+          f"{100 * (1 - total_greedy / total_max):.1f}% saved")
+    _save("pool_routing", chosen)
+
+
+# ------------------------------------------------------------ roofline dump
+
+def bench_roofline(quick=False):
+    path = "artifacts/dryrun.jsonl"
+    if not os.path.exists(path):
+        print("\n== roofline: no dry-run artifact; run repro.launch.dryrun ==")
+        return
+    rows = [json.loads(l) for l in open(path)]
+    print("\n== roofline (from dry-run; per chip) ==")
+    print("arch,shape,mesh,t_compute_ms,t_memory_ms,t_collective_ms,"
+          "bottleneck,useful_flops,mem_gb,energy_j")
+    for r in rows:
+        if r.get("status") == "ok":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r['t_compute_s']*1e3:.2f},{r['t_memory_s']*1e3:.2f},"
+                  f"{r['t_collective_s']*1e3:.2f},{r['bottleneck']},"
+                  f"{r['useful_flops_ratio']:.3f},"
+                  f"{r['per_device_memory_gb']:.2f},{r['energy_j']:.1f}")
+        elif r.get("status") == "skip":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},skip,,,,,,")
+
+
+BENCHES = {
+    "motivation": bench_motivation,
+    "pareto": bench_pareto,
+    "full_dataset": bench_full_dataset,
+    "balanced": bench_balanced,
+    "video": bench_video,
+    "delta_sweep": bench_delta_sweep,
+    "overhead": bench_overhead,
+    "kernels": bench_kernels,
+    "pool_routing": bench_pool_routing,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(BENCHES)
+    for name in names:
+        t0 = time.time()
+        BENCHES[name](quick=args.quick)
+        print(f"[{name}: {time.time()-t0:.1f}s]")
+
+
+if __name__ == "__main__":
+    main()

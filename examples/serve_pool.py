@@ -1,0 +1,19 @@
+"""End-to-end serving driver: ECORE routing over a pool of LLM backends.
+
+  PYTHONPATH=src python examples/serve_pool.py --requests 16
+
+The production-framework face of the paper (DESIGN.md §2b): backends are the
+assigned architectures, profiled from the multi-pod dry-run roofline
+(artifacts/dryrun.jsonl); the gateway buckets each request by prompt length
+(the serving analog of the object count) and greedily picks the
+lowest-energy backend within the delta accuracy tolerance.  Requests are
+then actually served — batched prefill + greedy decode — on reduced variants
+of the chosen architectures (this container is CPU-only; on a TPU pod the
+same Backend wraps the full configs under the production mesh).
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:] if len(sys.argv) > 1 else ["--requests", "16"]))

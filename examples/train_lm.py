@@ -1,0 +1,18 @@
+"""Train a reduced assigned-architecture LM end to end on CPU.
+
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-370m --steps 100
+
+Any of the 10 assigned architectures works (--arch recurrentgemma-2b,
+deepseek-v2-lite-16b, ...); the model is the reduced smoke variant by
+default.  Loss decreases on the synthetic Markov-bigram corpus.  On a TPU
+pod, pass --full to train the exact assigned config under the production
+mesh (see repro/launch/train.py).
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    args = sys.argv[1:] or ["--arch", "qwen2.5-3b", "--steps", "60",
+                            "--batch", "8", "--seq", "128"]
+    sys.exit(main(args))

@@ -1,0 +1,36 @@
+"""Video-stream routing: the Output-Based (OB) estimator on temporal data.
+
+  PYTHONPATH=src python examples/video_stream.py
+
+Reproduces the paper's Insight #3: on temporally-correlated streams, reusing
+the previous frame's detected object count (OB) routes as accurately as
+running an estimator per frame (ED), at near-zero gateway overhead.
+"""
+from repro.core import (EdgeDetectionEstimator, Gateway, GreedyEstimateRouter,
+                        OracleEstimator, OracleRouter, OutputBasedEstimator)
+from repro.detection.scenes import video_dataset
+from repro.detection.train import default_testbed
+
+
+def main():
+    params, table = default_testbed()
+    frames = video_dataset(n_frames=150, seed=4)
+    counts = [s.count for s in frames]
+    print(f"{len(frames)} frames; object counts drift: "
+          f"{counts[:10]} ... {counts[-10:]}\n")
+
+    for router, est, label in [
+        (OracleRouter(table, 5.0), OracleEstimator(), "Orc (ideal)"),
+        (GreedyEstimateRouter(table, 5.0), OutputBasedEstimator(), "OB"),
+        (GreedyEstimateRouter(table, 5.0), EdgeDetectionEstimator(), "ED"),
+    ]:
+        stats = Gateway(router, table, params, est).process_stream(frames)
+        print(f"{label:12s} mAP={stats.map_pct:5.1f}  "
+              f"backendE={stats.backend_energy_mwh:7.4f} mWh  "
+              f"gatewayE={stats.gateway_energy_mwh:8.5f} mWh  "
+              f"latency={stats.total_time_ms:6.0f} ms")
+    print("\nOB ~ Orc accuracy with ~zero gateway energy (Insight #3).")
+
+
+if __name__ == "__main__":
+    main()

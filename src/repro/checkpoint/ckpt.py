@@ -1,0 +1,48 @@
+"""Flat-key pytree checkpointing to a single .npz (offline-friendly)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path)
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for pth, leaf in leaves_with_path:
+        key = SEP.join(_path_str(p) for p in pth)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: ckpt {arr.shape} != model {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)

@@ -1,0 +1,45 @@
+"""Config registry: one module per assigned architecture (+ variants).
+
+``get_config(name)`` returns the exact assigned full-size config;
+``get_config(name).reduced()`` is the CPU smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.base import ModelConfig
+
+_MODULES = {
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "deepseek-7b": "deepseek_7b",
+    "gemma2-9b": "gemma2_9b",
+    "whisper-small": "whisper_small",
+    "granite-moe-1b-a400m": "granite_moe_1b_a400m",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "mamba2-370m": "mamba2_370m",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "llama3-8b": "llama3_8b",
+    "llava-next-34b": "llava_next_34b",
+    # beyond-assignment sliding-window variants (enable long_500k on dense)
+    "gemma2-9b-swa": "gemma2_9b",
+    "llama3-8b-swa": "llama3_8b",
+}
+# The paper's own edge testbed (detection model-device pairs) is not a
+# transformer config; it lives in repro.detection.devices.TESTBED.
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    if name.endswith("-swa"):
+        return mod.SWA_VARIANT
+    return mod.CONFIG
+
+
+def list_configs(include_variants: bool = False) -> List[str]:
+    names = list(_MODULES)
+    if not include_variants:
+        names = [n for n in names if not n.endswith("-swa")]
+    return names

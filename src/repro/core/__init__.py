@@ -1,0 +1,11 @@
+"""ECORE core: profiling table, routing algorithms, estimators, gateway."""
+from .groups import DEFAULT_GROUP_RULES, group_of
+from .profiles import ProfileEntry, ProfileTable
+from .router import (BASELINE_ROUTERS, GreedyEstimateRouter,
+                     HighestMAPPerGroupRouter, HighestMAPRouter,
+                     LowestEnergyRouter, LowestInferenceRouter, OracleRouter,
+                     RandomRouter, RoundRobinRouter, greedy_route)
+from .estimators import (EdgeDetectionEstimator, OracleEstimator,
+                         OutputBasedEstimator, SSDFrontEndEstimator)
+from .gateway import EpisodeStats, Gateway
+from .metrics import MAPAccumulator, average_precision, iou

@@ -1,0 +1,85 @@
+"""Object-count estimators (paper §3.3): ED, SF, OB.
+
+Each estimator returns (count, gateway_flops) — the FLOPs drive the
+gateway-overhead energy/latency accounting the paper reports separately.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.detection.canny import canny_count
+from repro.detection.detectors import DETECTOR_CONFIGS
+from repro.detection.scenes import IMG
+
+
+class Estimator:
+    name = "base"
+
+    def estimate(self, image: np.ndarray) -> Tuple[int, float]:
+        raise NotImplementedError
+
+    def observe(self, detected_count: int) -> None:
+        """Feedback from the backend's detection result (used by OB)."""
+
+    def reset(self) -> None:
+        pass
+
+
+class EdgeDetectionEstimator(Estimator):
+    """ED: Canny edges -> connected-component count.  Cheapest, coarse."""
+    name = "ED"
+    # gaussian+sobel+nms+hysteresis: ~60 flops/pixel
+    FLOPS_PER_PIXEL = 60.0
+
+    def estimate(self, image):
+        return canny_count(image), image.size * self.FLOPS_PER_PIXEL
+
+
+class SSDFrontEndEstimator(Estimator):
+    """SF: a lightweight detector AT THE GATEWAY counts objects.  More
+    accurate than ED, at a higher gateway cost."""
+    name = "SF"
+
+    def __init__(self, detector_params, model: str = "ssd_v1",
+                 score_thr: float = 0.5):
+        from repro.detection.train import run_detector
+        self._run = run_detector
+        self._params = detector_params
+        self._flops = DETECTOR_CONFIGS[model].flops
+        self._thr = score_thr
+
+    def estimate(self, image):
+        boxes, scores, classes = self._run(self._params, image[None])[0]
+        return int((scores >= self._thr).sum()), self._flops
+
+
+class OutputBasedEstimator(Estimator):
+    """OB: reuse the object count detected by the backend for the previous
+    frame (temporal continuity); near-zero gateway cost."""
+    name = "OB"
+
+    def __init__(self, default: int = 0):
+        self._default = default
+        self._last: Optional[int] = None
+
+    def estimate(self, image):
+        return (self._last if self._last is not None else self._default), 0.0
+
+    def observe(self, detected_count: int) -> None:
+        self._last = int(detected_count)
+
+    def reset(self) -> None:
+        self._last = None
+
+
+class OracleEstimator(Estimator):
+    """Ground-truth count passthrough (for the Orc router wiring)."""
+    name = "GT"
+
+    def __init__(self):
+        self.true_count: Optional[int] = None
+
+    def estimate(self, image):
+        return int(self.true_count), 0.0

@@ -1,0 +1,104 @@
+"""The ECORE gateway: estimate -> route -> dispatch -> account.
+
+Mirrors Figure 3: cameras send frames to the gateway, which runs a
+lightweight estimator, feeds the count to the routing algorithm, forwards
+the frame to the selected (model, device) backend, and returns detections.
+Energy/latency for backends come from the profiled device models; gateway
+overhead (estimator cost) is accounted separately, exactly like the paper's
+"Gateway Overhead" metric.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.energy import gateway_cost
+from repro.core.estimators import Estimator, OracleEstimator
+from repro.core.metrics import MAPAccumulator
+from repro.core.profiles import ProfileTable
+from repro.core.router import Router
+from repro.detection.devices import DEVICES
+from repro.detection.detectors import DETECTOR_CONFIGS
+from repro.detection.scenes import NUM_CLASSES, Scene
+
+
+@dataclasses.dataclass
+class EpisodeStats:
+    router: str
+    estimator: Optional[str]
+    map_pct: float
+    backend_energy_mwh: float
+    backend_time_ms: float       # sum over requests (piggybacked => total)
+    gateway_energy_mwh: float
+    gateway_time_ms: float
+    pair_histogram: Dict[str, int]
+
+    @property
+    def total_energy_mwh(self) -> float:
+        return self.backend_energy_mwh + self.gateway_energy_mwh
+
+    @property
+    def total_time_ms(self) -> float:
+        return self.backend_time_ms + self.gateway_time_ms
+
+
+class Gateway:
+    """Routes a stream of scenes through detector backends."""
+
+    def __init__(self, router: Router, table: ProfileTable,
+                 detector_params: Dict[str, Dict],
+                 estimator: Optional[Estimator] = None):
+        from repro.detection.train import run_detector  # lazy: heavy import
+        self._run = run_detector
+        self.router = router
+        self.table = table
+        self.params = detector_params
+        self.estimator = estimator
+
+    def process_stream(self, stream: Sequence[Scene]) -> EpisodeStats:
+        acc = MAPAccumulator(NUM_CLASSES)
+        be_energy = be_time = gw_energy = gw_time = 0.0
+        hist: Dict[str, int] = {}
+        if self.estimator is not None:
+            self.estimator.reset()
+        self.router.reset()
+        for scene in stream:
+            est_count = None
+            if self.estimator is not None:
+                if isinstance(self.estimator, OracleEstimator):
+                    self.estimator.true_count = scene.count
+                est_count, est_flops = self.estimator.estimate(scene.image)
+                gc = gateway_cost(est_flops)
+                gw_energy += gc["energy_mwh"]
+                gw_time += gc["time_ms"]
+            else:
+                gc = gateway_cost(0.0)  # routing-table lookup only
+                gw_energy += gc["energy_mwh"]
+                gw_time += gc["time_ms"]
+            pair = self.router.route(estimated_count=est_count,
+                                     true_count=scene.count)
+            model, device = pair
+            hist[f"{model}@{device}"] = hist.get(f"{model}@{device}", 0) + 1
+            boxes, scores, classes = self._run(self.params[model],
+                                               scene.image[None])[0]
+            acc.add_image(boxes, scores, classes, scene.boxes, scene.classes)
+            dev = DEVICES[device]
+            flops = DETECTOR_CONFIGS[model].flops
+            be_energy += dev.energy_mwh(flops)
+            be_time += dev.time_ms(flops)
+            if self.estimator is not None:
+                # OB feedback: the count the BACKEND detected
+                self.estimator.observe(int((scores >= 0.5).sum()))
+        return EpisodeStats(
+            router=self.router.name,
+            estimator=self.estimator.name if self.estimator else None,
+            map_pct=acc.map(),
+            backend_energy_mwh=be_energy,
+            backend_time_ms=be_time,
+            gateway_energy_mwh=gw_energy,
+            gateway_time_ms=gw_time,
+            pair_histogram=hist,
+        )

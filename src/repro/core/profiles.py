@@ -1,0 +1,92 @@
+"""Offline profiling table: the data structure Algorithm 1 consumes.
+
+Each row profiles one (model, device) pair for one object-count group:
+mAP (per group — accuracy depends on scene complexity), inference time and
+energy (group-independent in the paper's testbed, replicated per group).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileEntry:
+    model: str
+    device: str
+    group: int
+    map_pct: float       # mean Average Precision in [0, 100]
+    time_ms: float       # inference latency
+    energy_mwh: float    # energy per request
+
+    @property
+    def pair(self) -> Tuple[str, str]:
+        return (self.model, self.device)
+
+    @property
+    def pair_name(self) -> str:
+        return f"{self.model}@{self.device}"
+
+
+class ProfileTable:
+    def __init__(self, entries: Iterable[ProfileEntry]):
+        self.entries: List[ProfileEntry] = list(entries)
+        if not self.entries:
+            raise ValueError("empty profiling table")
+
+    def for_group(self, group: int) -> List[ProfileEntry]:
+        return [e for e in self.entries if e.group == group]
+
+    def pairs(self) -> List[Tuple[str, str]]:
+        seen, out = set(), []
+        for e in self.entries:
+            if e.pair not in seen:
+                seen.add(e.pair)
+                out.append(e.pair)
+        return out
+
+    def entry(self, pair: Tuple[str, str], group: int) -> ProfileEntry:
+        for e in self.entries:
+            if e.pair == pair and e.group == group:
+                return e
+        raise KeyError((pair, group))
+
+    def mean_map(self, pair: Tuple[str, str]) -> float:
+        rows = [e.map_pct for e in self.entries if e.pair == pair]
+        return sum(rows) / len(rows)
+
+    # ----------------------------------------------------- dynamic profiling
+    def observe(self, pair: Tuple[str, str], group: int, *,
+                time_ms: Optional[float] = None,
+                energy_mwh: Optional[float] = None,
+                map_pct: Optional[float] = None,
+                alpha: float = 0.1) -> None:
+        """BEYOND-PAPER (paper §6 future work): EWMA-update a profile row
+        from runtime observations, so the router tracks drift (thermal
+        throttling, background load, battery state)."""
+        import dataclasses as _dc
+        for i, e in enumerate(self.entries):
+            if e.pair == pair and e.group == group:
+                upd = {}
+                if time_ms is not None:
+                    upd["time_ms"] = (1 - alpha) * e.time_ms + alpha * time_ms
+                if energy_mwh is not None:
+                    upd["energy_mwh"] = ((1 - alpha) * e.energy_mwh
+                                         + alpha * energy_mwh)
+                if map_pct is not None:
+                    upd["map_pct"] = (1 - alpha) * e.map_pct + alpha * map_pct
+                self.entries[i] = _dc.replace(e, **upd)
+                return
+        raise KeyError((pair, group))
+
+    # ------------------------------------------------------------------ io
+    def to_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump([dataclasses.asdict(e) for e in self.entries], f,
+                      indent=1)
+
+    @classmethod
+    def from_json(cls, path: str) -> "ProfileTable":
+        with open(path) as f:
+            return cls(ProfileEntry(**row) for row in json.load(f))

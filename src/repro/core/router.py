@@ -1,0 +1,194 @@
+"""Routing algorithms: the paper's greedy Algorithm 1 + all baselines.
+
+Algorithm 1 (faithful):
+  1-7   determine group from the (estimated) object count via group rules
+  8-9   filter profiling data to that group
+  10-11 mAP_max over the group; mAP_min = mAP_max - delta_mAP
+  12-13 keep pairs with mAP >= mAP_min (feasible set F)
+  14-15 return argmin energy over F
+
+Theorem 3.1: after the threshold filters the problem is a 1-D minimization,
+so the greedy argmin-energy pick is globally optimal — property-tested in
+tests/test_router.py.
+"""
+from __future__ import annotations
+
+import random
+from typing import Optional, Sequence, Tuple
+
+from .groups import DEFAULT_GROUP_RULES, group_of
+from .profiles import ProfileEntry, ProfileTable
+
+Pair = Tuple[str, str]
+
+
+def greedy_route(number_of_objects: int, profiling_data: ProfileTable,
+                 delta_map: float,
+                 group_rules: Sequence = DEFAULT_GROUP_RULES) -> ProfileEntry:
+    """Algorithm 1, line for line."""
+    group = group_of(number_of_objects, group_rules)        # lines 1-7
+    group_data = profiling_data.for_group(group)            # lines 8-9
+    max_map = max(e.map_pct for e in group_data)            # line 10
+    map_min = max_map - delta_map                           # line 11
+    refined = [e for e in group_data if e.map_pct >= map_min]  # lines 12-13
+    return min(refined, key=lambda e: e.energy_mwh)         # lines 14-15
+
+
+class Router:
+    """Base: given request metadata, pick a (model, device) pair."""
+    name = "base"
+    #: True if the router consumes an object-count estimate
+    uses_estimate = False
+    #: True if the router consumes the ground-truth count (oracle-class)
+    uses_ground_truth = False
+
+    def __init__(self, table: ProfileTable, delta_map: float = 5.0,
+                 group_rules: Sequence = DEFAULT_GROUP_RULES):
+        self.table = table
+        self.delta = delta_map
+        self.rules = group_rules
+
+    def route(self, *, estimated_count: Optional[int] = None,
+              true_count: Optional[int] = None) -> Pair:
+        raise NotImplementedError
+
+    def reset(self):
+        pass
+
+
+class GreedyEstimateRouter(Router):
+    """The ECORE router: Algorithm 1 over an ESTIMATED count (ED/SF/OB feed
+    this; the estimator lives in the gateway)."""
+    name = "greedy"
+    uses_estimate = True
+
+    def route(self, *, estimated_count=None, true_count=None) -> Pair:
+        return greedy_route(int(estimated_count or 0), self.table, self.delta,
+                            self.rules).pair
+
+
+class OracleRouter(Router):
+    """Orc: Algorithm 1 with perfect knowledge of the object count."""
+    name = "Orc"
+    uses_ground_truth = True
+
+    def route(self, *, estimated_count=None, true_count=None) -> Pair:
+        return greedy_route(int(true_count), self.table, self.delta,
+                            self.rules).pair
+
+
+class RoundRobinRouter(Router):
+    name = "RR"
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._i = 0
+        self._pairs = self.table.pairs()
+
+    def route(self, **_) -> Pair:
+        p = self._pairs[self._i % len(self._pairs)]
+        self._i += 1
+        return p
+
+    def reset(self):
+        self._i = 0
+
+
+class RandomRouter(Router):
+    name = "Rnd"
+
+    def __init__(self, *a, seed: int = 0, **kw):
+        super().__init__(*a, **kw)
+        self._rng = random.Random(seed)
+        self._pairs = self.table.pairs()
+
+    def route(self, **_) -> Pair:
+        return self._rng.choice(self._pairs)
+
+
+class LowestEnergyRouter(Router):
+    name = "LE"
+
+    def route(self, **_) -> Pair:
+        return min(self.table.entries, key=lambda e: e.energy_mwh).pair
+
+
+class LowestInferenceRouter(Router):
+    name = "LI"
+
+    def route(self, **_) -> Pair:
+        return min(self.table.entries, key=lambda e: e.time_ms).pair
+
+
+class HighestMAPRouter(Router):
+    """HM: highest overall mAP, independent of object count."""
+    name = "HM"
+
+    def route(self, **_) -> Pair:
+        return max(self.table.pairs(), key=self.table.mean_map)
+
+
+class HighestMAPPerGroupRouter(Router):
+    """HMG: best mAP within the (true) object-count group; the paper's
+    accuracy upper bound."""
+    name = "HMG"
+    uses_ground_truth = True
+
+    def route(self, *, estimated_count=None, true_count=None) -> Pair:
+        group = group_of(int(true_count), self.rules)
+        return max(self.table.for_group(group), key=lambda e: e.map_pct).pair
+
+
+class WeightedRouter(Router):
+    """BEYOND-PAPER (the paper's §6 future work): multi-objective greedy —
+    min  w_e * energy/energy_max + w_t * time/time_max
+    s.t. group match and mAP >= mAP_max - delta.
+
+    Setting (w_e, w_t) = (1, 0) recovers Algorithm 1 exactly; Theorem 3.1's
+    argument still applies because the filtered selection remains a 1-D
+    minimization of a fixed scalar score."""
+    name = "Wgt"
+    uses_estimate = True
+
+    def __init__(self, table: ProfileTable, delta_map: float = 5.0,
+                 group_rules: Sequence = DEFAULT_GROUP_RULES,
+                 w_energy: float = 0.5, w_time: float = 0.5):
+        super().__init__(table, delta_map, group_rules)
+        self.w_energy, self.w_time = w_energy, w_time
+        self._e_max = max(e.energy_mwh for e in table.entries)
+        self._t_max = max(e.time_ms for e in table.entries)
+
+    def route(self, *, estimated_count=None, true_count=None) -> Pair:
+        group = group_of(int(estimated_count or 0), self.rules)
+        rows = self.table.for_group(group)
+        max_map = max(e.map_pct for e in rows)
+        feasible = [e for e in rows if e.map_pct >= max_map - self.delta]
+        score = lambda e: (self.w_energy * e.energy_mwh / self._e_max
+                           + self.w_time * e.time_ms / self._t_max)
+        return min(feasible, key=score).pair
+
+
+class ParetoRouter(Router):
+    """BEYOND-PAPER: restrict the feasible set to its (energy, time) Pareto
+    front before the greedy pick — never selects a pair dominated in both
+    objectives."""
+    name = "Par"
+    uses_estimate = True
+
+    def route(self, *, estimated_count=None, true_count=None) -> Pair:
+        group = group_of(int(estimated_count or 0), self.rules)
+        rows = self.table.for_group(group)
+        max_map = max(e.map_pct for e in rows)
+        feasible = [e for e in rows if e.map_pct >= max_map - self.delta]
+        front = [e for e in feasible
+                 if not any(o.energy_mwh <= e.energy_mwh
+                            and o.time_ms <= e.time_ms and o is not e
+                            and (o.energy_mwh < e.energy_mwh
+                                 or o.time_ms < e.time_ms)
+                            for o in feasible)]
+        return min(front, key=lambda e: e.energy_mwh).pair
+
+
+BASELINE_ROUTERS = (OracleRouter, RoundRobinRouter, RandomRouter,
+                    LowestEnergyRouter, LowestInferenceRouter,
+                    HighestMAPRouter, HighestMAPPerGroupRouter)

@@ -1,0 +1,177 @@
+"""The 8-model detector family (YOLO/SSD/EfficientDet capacity analogs).
+
+Single-scale grid detectors in pure JAX: conv backbone (stride-2 stages) to
+an 8x8 grid over the 64x64 scene, head predicting per cell
+[objectness, dx, dy, log w, log h, class logits].  Variants differ in width
+and depth exactly like the paper's nano/small/medium families, producing the
+Fig. 2 accuracy-vs-complexity crossover after real training.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.detection.scenes import IMG, NUM_CLASSES
+
+GRID = 8
+CELL = IMG // GRID
+
+
+@dataclasses.dataclass(frozen=True)
+class DetectorConfig:
+    name: str
+    channels: Tuple[int, ...]     # per stage (each stage: conv3x3 s1 + s2)
+    head_channels: int
+
+    @property
+    def flops(self) -> float:
+        """Analytic MACs*2 per image (for the device energy model)."""
+        total, res, cin = 0.0, IMG, 1
+        for c in self.channels:
+            total += 2 * res * res * 9 * cin * c          # 3x3 s1
+            total += 2 * (res // 2) ** 2 * 9 * c * c      # 3x3 s2
+            res //= 2
+            cin = c
+        total += 2 * GRID * GRID * 9 * cin * self.head_channels
+        total += 2 * GRID * GRID * self.head_channels * (5 + NUM_CLASSES)
+        return total
+
+
+# capacity ladder ~ paper's 8 models (SSDv1 ... YOLOv8m)
+DETECTOR_CONFIGS: Dict[str, DetectorConfig] = {
+    "ssd_v1":       DetectorConfig("ssd_v1", (4, 8, 8), 16),
+    "ssd_lite":     DetectorConfig("ssd_lite", (6, 12, 12), 24),
+    "effdet_lite0": DetectorConfig("effdet_lite0", (8, 16, 16), 32),
+    "effdet_lite1": DetectorConfig("effdet_lite1", (12, 24, 24), 48),
+    "effdet_lite2": DetectorConfig("effdet_lite2", (16, 32, 32), 64),
+    "yolov8_n":     DetectorConfig("yolov8_n", (16, 32, 64), 96),
+    "yolov8_s":     DetectorConfig("yolov8_s", (24, 48, 96), 128),
+    "yolov8_m":     DetectorConfig("yolov8_m", (32, 64, 128), 192),
+}
+
+OUT_PER_CELL = 5 + NUM_CLASSES
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    std = 1.0 / math.sqrt(kh * kw * cin)
+    return jax.random.truncated_normal(key, -2, 2, (kh, kw, cin, cout)) * std
+
+
+def init_detector(cfg: DetectorConfig, key) -> Dict:
+    params = {"convs": [], "head": {}}
+    cin = 1
+    for i, c in enumerate(cfg.channels):
+        k1, k2, key = jax.random.split(key, 3)
+        params["convs"].append({
+            "w1": _conv_init(k1, 3, 3, cin, c), "b1": jnp.zeros((c,)),
+            "w2": _conv_init(k2, 3, 3, c, c), "b2": jnp.zeros((c,)),
+        })
+        cin = c
+    k1, k2, key = jax.random.split(key, 3)
+    params["head"] = {
+        "w1": _conv_init(k1, 3, 3, cin, cfg.head_channels),
+        "b1": jnp.zeros((cfg.head_channels,)),
+        "w2": _conv_init(k2, 1, 1, cfg.head_channels, OUT_PER_CELL),
+        "b2": jnp.zeros((OUT_PER_CELL,)),
+    }
+    return params
+
+
+def _conv(x, w, b, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b[None, None, None]
+
+
+def detector_forward(params, x):
+    """x [B, IMG, IMG, 1] -> raw head [B, GRID, GRID, 5+C]."""
+    h = x
+    for st in params["convs"]:
+        h = jax.nn.relu(_conv(h, st["w1"], st["b1"], 1))
+        h = jax.nn.relu(_conv(h, st["w2"], st["b2"], 2))
+    h = jax.nn.relu(_conv(h, params["head"]["w1"], params["head"]["b1"], 1))
+    return _conv(h, params["head"]["w2"], params["head"]["b2"], 1)
+
+
+# ------------------------------------------------------------- target/loss
+
+
+def encode_targets(boxes: np.ndarray, classes: np.ndarray):
+    """GT -> grid targets: obj [G,G], box [G,G,4] (dx,dy,logw,logh), cls [G,G]."""
+    obj = np.zeros((GRID, GRID), np.float32)
+    box = np.zeros((GRID, GRID, 4), np.float32)
+    cls = np.zeros((GRID, GRID), np.int32)
+    for b, c in zip(boxes.reshape(-1, 4), classes.reshape(-1)):
+        cx, cy = (b[0] + b[2]) / 2, (b[1] + b[3]) / 2
+        gx, gy = min(int(cx // CELL), GRID - 1), min(int(cy // CELL), GRID - 1)
+        obj[gy, gx] = 1.0
+        box[gy, gx] = [cx / CELL - gx, cy / CELL - gy,
+                       math.log(max(b[2] - b[0], 1) / CELL),
+                       math.log(max(b[3] - b[1], 1) / CELL)]
+        cls[gy, gx] = c
+    return obj, box, cls
+
+
+def detection_loss(params, batch):
+    """batch: imgs [B,H,W,1], obj [B,G,G], box [B,G,G,4], cls [B,G,G]."""
+    raw = detector_forward(params, batch["image"])
+    obj_logit = raw[..., 0]
+    box_pred = raw[..., 1:5]
+    cls_logit = raw[..., 5:]
+    obj = batch["obj"]
+    # objectness BCE (balanced)
+    bce = jnp.maximum(obj_logit, 0) - obj_logit * obj + jnp.log1p(
+        jnp.exp(-jnp.abs(obj_logit)))
+    w = obj * 4.0 + (1 - obj)
+    loss_obj = jnp.sum(bce * w) / jnp.sum(w)
+    # box l2 + class CE on positive cells
+    pos = obj[..., None]
+    loss_box = jnp.sum(jnp.square(box_pred - batch["box"]) * pos) / (
+        jnp.sum(pos) * 4 + 1e-6)
+    logp = jax.nn.log_softmax(cls_logit, axis=-1)
+    gold = jnp.take_along_axis(logp, batch["cls"][..., None], axis=-1)[..., 0]
+    loss_cls = -jnp.sum(gold * obj) / (jnp.sum(obj) + 1e-6)
+    return loss_obj + 2.0 * loss_box + loss_cls
+
+
+# ------------------------------------------------------------------ decode
+
+
+def decode_detections(raw: np.ndarray, score_thr: float = 0.5,
+                      nms_iou: float = 0.45):
+    """raw [G,G,5+C] -> (boxes [N,4], scores [N], classes [N])."""
+    raw = np.asarray(raw)
+    obj = 1 / (1 + np.exp(-raw[..., 0]))
+    boxes, scores, classes = [], [], []
+    for gy in range(GRID):
+        for gx in range(GRID):
+            if obj[gy, gx] < score_thr:
+                continue
+            dx, dy, lw, lh = raw[gy, gx, 1:5]
+            cx, cy = (gx + float(dx)) * CELL, (gy + float(dy)) * CELL
+            w = math.exp(min(float(lw), 3.0)) * CELL
+            h = math.exp(min(float(lh), 3.0)) * CELL
+            boxes.append([cx - w / 2, cy - h / 2, cx + w / 2, cy + h / 2])
+            scores.append(float(obj[gy, gx]))
+            classes.append(int(np.argmax(raw[gy, gx, 5:])))
+    if not boxes:
+        return (np.zeros((0, 4), np.float32), np.zeros((0,), np.float32),
+                np.zeros((0,), np.int32))
+    boxes = np.asarray(boxes, np.float32)
+    scores = np.asarray(scores, np.float32)
+    classes = np.asarray(classes, np.int32)
+    # simple class-agnostic NMS
+    keep = []
+    order = np.argsort(-scores)
+    from repro.core.metrics import iou as _iou
+    for i in order:
+        if all(_iou(boxes[i], boxes[j]) < nms_iou for j in keep):
+            keep.append(i)
+    keep = np.asarray(keep, int)
+    return boxes[keep], scores[keep], classes[keep]

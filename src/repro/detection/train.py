@@ -1,0 +1,140 @@
+"""Train the detector family on the synthetic scene corpus + profile it.
+
+``train_all`` trains all 8 models (cached to .npz checkpoints); ``profile``
+measures per-group mAP for every (model, device) pair and assembles the
+ProfileTable the routers consume — this is the paper's offline profiling
+stage [1] (their arXiv:2409.16808 benchmarking study).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.groups import all_groups, group_of
+from repro.core.metrics import MAPAccumulator
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.detection import scenes as sc
+from repro.detection.detectors import (DETECTOR_CONFIGS, DetectorConfig,
+                                       decode_detections, detection_loss,
+                                       detector_forward, encode_targets,
+                                       init_detector)
+from repro.detection.devices import DEVICES, TESTBED_PAIRS
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def _batch_from_scenes(batch_scenes: Sequence[sc.Scene]):
+    imgs = np.stack([s.image for s in batch_scenes])[..., None]
+    objs, boxes, clss = [], [], []
+    for s in batch_scenes:
+        o, b, c = encode_targets(s.boxes, s.classes)
+        objs.append(o); boxes.append(b); clss.append(c)
+    return {
+        "image": jnp.asarray(imgs),
+        "obj": jnp.asarray(np.stack(objs)),
+        "box": jnp.asarray(np.stack(boxes)),
+        "cls": jnp.asarray(np.stack(clss)),
+    }
+
+
+def train_detector(cfg: DetectorConfig, *, steps: int = 700,
+                   batch_size: int = 16, seed: int = 0,
+                   lr: float = 5e-3, verbose: bool = False) -> Dict:
+    params = init_detector(cfg, jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(peak_lr=lr, warmup_steps=20, total_steps=steps,
+                          weight_decay=1e-4)
+    opt = init_opt_state(params)
+    rng = np.random.default_rng(seed + 17)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(detection_loss)(params, batch)
+        params, opt, _ = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, loss
+
+    for i in range(steps):
+        batch = _batch_from_scenes([sc.make_scene(rng) for _ in range(batch_size)])
+        params, opt, loss = step(params, opt, batch)
+        if verbose and i % 100 == 0:
+            print(f"  {cfg.name} step {i} loss {float(loss):.4f}")
+    return params
+
+
+def train_all(cache_dir: str = "artifacts/detectors", *, steps: int = 700,
+              verbose: bool = False) -> Dict[str, Dict]:
+    os.makedirs(cache_dir, exist_ok=True)
+    out = {}
+    for name, cfg in DETECTOR_CONFIGS.items():
+        path = os.path.join(cache_dir, f"{name}.npz")
+        if os.path.exists(path):
+            params = ckpt.load(path, init_detector(cfg, jax.random.PRNGKey(0)))
+        else:
+            if verbose:
+                print(f"training {name} ...")
+            params = train_detector(cfg, steps=steps, verbose=verbose)
+            ckpt.save(path, params)
+        out[name] = params
+    return out
+
+
+def run_detector(params, images: np.ndarray):
+    """images [B,H,W] -> list of (boxes, scores, classes)."""
+    raw = np.asarray(jax.jit(detector_forward)(params,
+                                               jnp.asarray(images)[..., None]))
+    return [decode_detections(r) for r in raw]
+
+
+def profile_pairs(detector_params: Dict[str, Dict],
+                  pairs: Sequence[Tuple[str, str]],
+                  val_scenes: Optional[List[sc.Scene]] = None,
+                  verbose: bool = False) -> ProfileTable:
+    """Measure per-group mAP for each pair; energy/time from device models."""
+    if val_scenes is None:
+        val_scenes = sc.full_dataset(250, seed=99)
+    by_group: Dict[int, List[sc.Scene]] = {g: [] for g in all_groups()}
+    for s in val_scenes:
+        by_group[group_of(s.count)].append(s)
+
+    # batch-evaluate each model once per group
+    entries = []
+    models = sorted({m for m, _ in pairs})
+    model_group_map: Dict[Tuple[str, int], float] = {}
+    for m in models:
+        for g, group_scenes in by_group.items():
+            acc = MAPAccumulator(sc.NUM_CLASSES)
+            if group_scenes:
+                imgs = np.stack([s.image for s in group_scenes])
+                dets = run_detector(detector_params[m], imgs)
+                for s, (b, s_, c) in zip(group_scenes, dets):
+                    acc.add_image(b, s_, c, s.boxes, s.classes)
+            model_group_map[(m, g)] = acc.map()
+            if verbose:
+                print(f"  {m} group {g}: mAP {acc.map():.1f}")
+    for m, d in pairs:
+        dev = DEVICES[d]
+        flops = DETECTOR_CONFIGS[m].flops
+        for g in all_groups():
+            entries.append(ProfileEntry(
+                model=m, device=d, group=g,
+                map_pct=model_group_map[(m, g)],
+                time_ms=dev.time_ms(flops),
+                energy_mwh=dev.energy_mwh(flops)))
+    return ProfileTable(entries)
+
+
+def default_testbed(cache_dir: str = "artifacts/detectors",
+                    profile_path: str = "artifacts/profile_table.json",
+                    verbose: bool = False):
+    """Train (or load) detectors + build (or load) the testbed profile."""
+    params = train_all(cache_dir, verbose=verbose)
+    if os.path.exists(profile_path):
+        table = ProfileTable.from_json(profile_path)
+    else:
+        table = profile_pairs(params, TESTBED_PAIRS, verbose=verbose)
+        os.makedirs(os.path.dirname(profile_path), exist_ok=True)
+        table.to_json(profile_path)
+    return params, table

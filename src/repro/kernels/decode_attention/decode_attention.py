@@ -1,0 +1,111 @@
+"""Pallas TPU flash-decode kernel: one query token vs. a long KV cache.
+
+Grid: (batch, q_heads, num_k_blocks); the k-block axis iterates sequentially
+with the flash (max, denom, acc) state in VMEM scratch.  The per-request
+valid length lives in SMEM; blocks past the length (or before the sliding
+window) are skipped entirely — this is the memory-bound kernel the
+decode_32k/long_500k roofline terms are about, so skipping dead blocks is
+the point.
+
+The §Perf flash-decode sharding splits the cache's sequence dim over the
+'model' mesh axis and merges per-shard (m, l, acc) with a tiny all-reduce;
+this kernel is the per-shard worker in that scheme.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, window: Optional[int],
+                   softcap: Optional[float], bk: int, nk: int):
+    ik = pl.program_id(2)
+    length = len_ref[0]
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    col0 = ik * bk
+    needed = col0 < length
+    if window is not None:
+        needed = jnp.logical_and(needed, col0 + bk > length - window)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)        # [1, D]
+        k = k_ref[0, 0].astype(jnp.float32)        # [BK, D]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap    # [1, BK]
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        ok = cols < length
+        if window is not None:
+            ok = jnp.logical_and(ok, cols >= length - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _fin():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "window", "softcap", "block_k", "interpret"))
+def decode_attention(q, k, v, lengths, *, scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None, block_k: int = 256,
+                     interpret: bool = False):
+    """q [B, H, D]; k, v [B, KV, T, D]; lengths [B] -> [B, H, D]."""
+    b, h, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    bk = min(block_k, t)
+    assert t % bk == 0
+    nk = t // bk
+    q4 = q[:, :, None, :]  # [B, H, 1, D]
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               softcap=softcap, bk=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, ik: (b_,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ik: (b_, h_ // g, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda b_, h_, ik: (b_, h_ // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda b_, h_, ik: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q4, k, v)
+    return out[:, :, 0, :]

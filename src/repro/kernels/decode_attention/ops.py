@@ -1,0 +1,21 @@
+"""Dispatch wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "softcap",
+                                             "impl"))
+def decode(q, k, v, lengths, *, scale=None, window=None, softcap=None,
+           impl: str = "xla"):
+    """q [B,H,D]; k,v [B,KV,T,D]; lengths [B].  impl: xla|pallas|interpret."""
+    if impl == "xla":
+        return ref.decode_reference(q, k, v, lengths, scale=scale,
+                                    window=window, softcap=softcap)
+    from .decode_attention import decode_attention
+    return decode_attention(q, k, v, lengths, scale=scale, window=window,
+                            softcap=softcap, interpret=(impl == "interpret"))

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for single-token GQA decode attention over a KV cache.
+
+q [B, H, D]; k, v [B, KV, T, D]; lengths [B] (attend to positions < len).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_reference(q, k, v, lengths, *, scale: Optional[float] = None,
+                     window: Optional[int] = None,
+                     softcap: Optional[float] = None):
+    b, h, d = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kv, g, d)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    cols = jnp.arange(t)[None, :]
+    ok = cols < lengths[:, None]
+    if window is not None:
+        ok &= cols >= (lengths[:, None] - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

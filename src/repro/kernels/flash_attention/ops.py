@@ -1,0 +1,22 @@
+"""Dispatch wrapper for flash attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "impl"))
+def attention(q, k, v, *, scale=None, causal=True, window=None, softcap=None,
+              impl: str = "xla"):
+    """q [B,H,S,D]; k,v [B,KV,T,D].  impl: xla | pallas | interpret."""
+    if impl == "xla":
+        return ref.mha_reference(q, k, v, scale=scale, causal=causal,
+                                 window=window, softcap=softcap)
+    from .flash_attention import flash_attention
+    return flash_attention(q, k, v, scale=scale, causal=causal,
+                           window=window, softcap=softcap,
+                           interpret=(impl == "interpret"))

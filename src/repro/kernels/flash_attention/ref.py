@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for causal (optionally sliding-window, softcapped) GQA
+flash attention.  Layout: q [B, H, S, D]; k, v [B, KV, T, D]."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, scale: Optional[float] = None,
+                  causal: bool = True, window: Optional[int] = None,
+                  softcap: Optional[float] = None):
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, kv, g, s, d)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    t = k.shape[2]
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= cols <= rows
+    if window is not None:
+        ok &= cols > rows - window
+    scores = jnp.where(ok, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,23 @@
+"""Jit-friendly dispatch wrapper for the RG-LRU linear recurrence."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+
+
+@partial(jax.jit, static_argnames=("impl", "return_final_state"))
+def rglru(x, w_a, b_a, w_x, b_x, log_lambda, *, h0=None, impl: str = "xla",
+          return_final_state: bool = False):
+    if impl == "xla":
+        return ref.rglru(x, w_a, b_a, w_x, b_x, log_lambda, h0,
+                         return_final_state=return_final_state)
+    from .rglru_scan import rglru_pallas  # lazy: pallas import
+    return rglru_pallas(x, w_a, b_a, w_x, b_x, log_lambda, h0=h0,
+                        return_final_state=return_final_state,
+                        interpret=(impl == "interpret"))
+
+
+rglru_decode_step = jax.jit(ref.rglru_decode_step)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (RecurrentGemma).
+
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The scan itself (given per-step a_t, b_t) is a first-order linear recurrence
+computed with an associative scan; the Pallas kernel implements the same
+recurrence with an in-VMEM sequential loop blocked over the width dim.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+RGLRU_C = 8.0
+
+
+def rglru_gates(x, w_a, b_a, w_x, b_x, log_lambda):
+    """Compute per-step (a, b) for the recurrence.  x [b, s, w]."""
+    f32 = jnp.float32
+    xf = x.astype(f32)
+    r = jax.nn.sigmoid(xf @ w_a.astype(f32) + b_a.astype(f32))
+    i = jax.nn.sigmoid(xf @ w_x.astype(f32) + b_x.astype(f32))
+    log_a = -RGLRU_C * jax.nn.softplus(log_lambda.astype(f32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log: 0.5*log1p(-exp(2 log_a))
+    sq = jnp.exp(0.5 * jnp.log1p(-jnp.exp(2.0 * log_a) + 1e-12))
+    b = sq * (i * xf)
+    return a, b
+
+
+def linear_scan(a, b, h0: Optional[jax.Array] = None):
+    """h_t = a_t h_{t-1} + b_t over axis 1.  a, b [bsz, s, w] fp32."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a_l, b_l = lhs
+        a_r, b_r = rhs
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru(x, w_a, b_a, w_x, b_x, log_lambda, h0=None, *,
+          return_final_state: bool = False):
+    """x [bsz, s, w] -> h [bsz, s, w] (x.dtype), optional final state fp32."""
+    a, b = rglru_gates(x, w_a, b_a, w_x, b_x, log_lambda)
+    h = linear_scan(a, b, h0)
+    if return_final_state:
+        return h.astype(x.dtype), h[:, -1]
+    return h.astype(x.dtype)
+
+
+def rglru_decode_step(x, w_a, b_a, w_x, b_x, log_lambda, h_prev):
+    """x [bsz, w]; h_prev [bsz, w] fp32 -> (y, new_state)."""
+    a, b = rglru_gates(x[:, None], w_a, b_a, w_x, b_x, log_lambda)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h.astype(x.dtype), h

@@ -1,0 +1,17 @@
+"""Dispatch wrapper for the Sobel gradient kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import ref
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def sobel_grad(img, *, impl: str = "xla"):
+    """impl: 'xla' (jnp oracle) | 'pallas' (TPU) | 'interpret' (CPU check)."""
+    if impl == "xla":
+        return ref.sobel_grad(img)
+    from .sobel import sobel_grad_pallas
+    return sobel_grad_pallas(img, interpret=(impl == "interpret"))

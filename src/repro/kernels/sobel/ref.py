@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the Sobel gradient stage of Canny edge detection."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sobel_grad(img):
+    """img [B, H, W] f32 -> (magnitude [B,H,W], direction [B,H,W] int32).
+
+    Direction is the gradient angle quantized to 4 bins (0=E/W, 1=NE/SW,
+    2=N/S, 3=NW/SE) for the non-maximum-suppression stage.
+    """
+    x = jnp.pad(img, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    # 3x3 sobel via shifted slices
+    tl = x[:, :-2, :-2]; tc = x[:, :-2, 1:-1]; tr = x[:, :-2, 2:]
+    ml = x[:, 1:-1, :-2];                       mr = x[:, 1:-1, 2:]
+    bl = x[:, 2:, :-2];  bc = x[:, 2:, 1:-1];  br = x[:, 2:, 2:]
+    gx = (tr + 2 * mr + br) - (tl + 2 * ml + bl)
+    gy = (bl + 2 * bc + br) - (tl + 2 * tc + tr)
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    ang = jnp.arctan2(gy, gx)  # [-pi, pi]
+    # quantize to 4 direction bins (period pi)
+    q = jnp.round(ang / (jnp.pi / 4)).astype(jnp.int32) % 4
+    return mag, q

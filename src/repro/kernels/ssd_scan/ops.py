@@ -1,0 +1,31 @@
+"""Jit-friendly dispatch wrapper for the SSD scan.
+
+``impl``:
+  'xla'       — pure-jnp chunked reference (CPU tests, dry-run lowering)
+  'pallas'    — TPU Pallas kernel (compiled for TPU)
+  'interpret' — Pallas kernel in interpret mode (CPU correctness checks)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from . import ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "impl", "return_final_state"))
+def ssd(x, dt, A, B, C, D, *, chunk: int = 256, impl: str = "xla",
+        init_state=None, return_final_state: bool = False):
+    if impl == "xla":
+        return ref.ssd_chunked(x, dt, A, B, C, D, chunk=chunk,
+                               init_state=init_state,
+                               return_final_state=return_final_state)
+    from .ssd_scan import ssd_pallas  # lazy: pallas import
+    return ssd_pallas(x, dt, A, B, C, D, chunk=chunk,
+                      init_state=init_state,
+                      return_final_state=return_final_state,
+                      interpret=(impl == "interpret"))
+
+
+ssd_decode_step = jax.jit(ref.ssd_decode_step)

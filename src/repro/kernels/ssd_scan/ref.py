@@ -1,0 +1,112 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked scan.
+
+Math (per head, state dim N, head dim P):
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * B_t x_t^T          (h in R^{P x N})
+    y_t = C_t^T-contraction of h_t  + D * x_t
+
+Chunked form [arXiv:2405.21060]: intra-chunk quadratic "attention" term with
+decay matrix L, plus inter-chunk recurrence over per-chunk final states.
+This file is the correctness oracle for the Pallas kernel and the XLA path
+used by the Mamba2 model on CPU/dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(a):
+    """a [..., Q] -> lower-triangular cumulative sums M[i,j] = sum_{j<k<=i} a_k."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    m = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, m, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                return_final_state: bool = False):
+    """SSD forward.
+
+    x:  [b, s, h, p]   inputs (already gated/conved)
+    dt: [b, s, h]      positive step sizes (softplus applied by caller)
+    A:  [h]            negative decay rates (A < 0)
+    B:  [b, s, n]      input projection (n_groups = 1, broadcast over heads)
+    C:  [b, s, n]      output projection
+    D:  [h]            skip connection
+    Returns y [b, s, h, p] (fp32 internally, cast to x.dtype).
+    """
+    b, s_orig, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, s_orig)
+    # pad seq to a chunk multiple; dt=0 on pads => decay 1, no input => state
+    # passes through unchanged and padded outputs are sliced off.
+    s = ((s_orig + q - 1) // q) * q
+    if s != s_orig:
+        pad = ((0, 0), (0, s - s_orig), (0, 0))
+        x = jnp.pad(x, pad + ((0, 0),))
+        dt = jnp.pad(dt, pad)
+        B = jnp.pad(B, pad)
+        C = jnp.pad(C, pad)
+    c = s // q
+    f32 = jnp.float32
+
+    xd = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, c, q, h, p)
+    a = (A.astype(f32) * dt.astype(f32)).reshape(b, c, q, h)  # log-decay per step
+    Bc = B.astype(f32).reshape(b, c, q, n)
+    Cc = C.astype(f32).reshape(b, c, q, n)
+
+    a_cum = jnp.cumsum(a, axis=2)  # [b,c,q,h]
+
+    # ---- intra-chunk (diagonal) term
+    L = jnp.exp(segsum(jnp.moveaxis(a, 3, 2)))        # [b,c,h,q,q]
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)    # [b,c,q,q]
+    y_diag = jnp.einsum("bchij,bcij,bcjhp->bcihp", L, scores, xd)
+
+    # ---- per-chunk final states
+    decay_out = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # [b,c,q,h]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_out, xd)
+
+    # ---- inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # [b,c,h]
+
+    def step(h_prev, inp):
+        dec, st = inp  # dec [b,h], st [b,h,p,n]
+        h_new = h_prev * dec[:, :, None, None] + st
+        return h_new, h_prev  # emit state *entering* the chunk
+
+    h0 = (init_state.astype(f32) if init_state is not None
+          else jnp.zeros((b, h, p, n), f32))
+    h_final, h_in = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # [b,c,h,p,n] state at chunk start
+
+    # ---- inter-chunk (off-diagonal) output term
+    decay_in = jnp.exp(a_cum)  # decay from chunk start to position q
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_in, h_in)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    y = y[:, :s_orig].astype(x.dtype)
+    if return_final_state:
+        return y, h_final.astype(f32)
+    return y
+
+
+def ssd_decode_step(x, dt, A, B, C, D, state):
+    """Single-token recurrence.
+
+    x [b,h,p]; dt [b,h]; B,C [b,n]; state [b,h,p,n] -> (y [b,h,p], new_state).
+    """
+    f32 = jnp.float32
+    xf, dtf = x.astype(f32), dt.astype(f32)
+    decay = jnp.exp(A.astype(f32)[None] * dtf)  # [b,h]
+    upd = jnp.einsum("bhp,bn->bhpn", xf * dtf[..., None], B.astype(f32))
+    new_state = state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C.astype(f32))
+    y = y + xf * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), new_state

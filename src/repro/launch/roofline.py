@@ -1,0 +1,183 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per-chip module FLOPs)
+  memory     = HLO_bytes / HBM_bw
+  collective = sum(op_factor x op_bytes) / link_bw
+
+``compiled.cost_analysis()`` reports the per-device (post-SPMD) module, so
+terms use per-chip constants directly.  Collective bytes are not in
+cost_analysis: we parse the optimized HLO text and sum the output-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, weighting all-reduce 2x (reduce-scatter + all-gather of
+a ring) — a standard first-order model of link traffic per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, Optional
+
+# TPU v5e, per chip
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+CHIP_POWER_IDLE = 60.0    # W (representative; see DESIGN.md §6)
+CHIP_POWER_PEAK = 170.0   # W
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "c64": 8, "s64": 8, "u64": 8, "f64": 8,
+    "token": 0, "opaque": 0,
+}
+
+# link-traffic weight per collective kind (ring algorithms, per chip)
+_COLLECTIVE_FACTORS = {
+    "all-gather": 1.0,
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\(|)[\w\[\],\s{}:#*\"]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Weighted per-chip collective bytes by kind, from optimized HLO."""
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVE_FACTORS}
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        if "-done(" in line:  # async pair: count only the start
+            continue
+        out[kind] += _shape_bytes(shapes) * _COLLECTIVE_FACTORS[kind]
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                # per-chip HLO flops
+    bytes_accessed: float       # per-chip HLO bytes
+    coll_bytes: float           # per-chip weighted collective bytes
+    coll_by_kind: Dict[str, float]
+    per_device_memory: float    # bytes (peak buffer allocation)
+    model_flops: float          # analytic 6ND / 2ND (global)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips x per-chip HLO flops)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def energy_j(self) -> float:
+        """First-order energy per step: busy time x chip power x chips."""
+        t = self.t_step
+        if t == 0:
+            return 0.0
+        util = self.t_compute / t
+        p = CHIP_POWER_IDLE + (CHIP_POWER_PEAK - CHIP_POWER_IDLE) * util
+        return t * p * self.chips
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops,
+            "bytes_per_chip": self.bytes_accessed,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "t_step_s": self.t_step,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "per_device_memory_gb": self.per_device_memory / 2**30,
+            "energy_j": self.energy_j,
+        }
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params)."""
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def count_params(cfg) -> Dict[str, int]:
+    """Total and active (MoE top-k weighted) param counts from shapes."""
+    import jax
+    from repro.models import init_params
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = "/".join(str(getattr(p, "key", getattr(p, "name", "")))
+                        for p in path)
+        n = math.prod(leaf.shape)
+        total += n
+        if "moe/w_" in keys and cfg.num_experts:
+            active += n * cfg.moe_top_k / cfg.num_experts
+        elif "embed/table" in keys:
+            active += 0  # embedding lookups are not matmul FLOPs
+        else:
+            active += n
+    return {"total": total, "active": int(active)}
+
+
+def memory_bytes(mem_analysis) -> float:
+    get = lambda a: float(getattr(mem_analysis, a, 0) or 0)
+    return (get("temp_size_in_bytes") + get("argument_size_in_bytes")
+            + get("output_size_in_bytes") + get("alias_size_in_bytes") * 0)

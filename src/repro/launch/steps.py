@@ -1,0 +1,139 @@
+"""Jittable step functions + ShapeDtypeStruct input specs for every
+(architecture x workload-shape) combination.
+
+``input_specs`` follows the dry-run pattern: weak-type-correct, shardable,
+zero device allocation.  Decode shapes lower ``serve_step`` (one token
+against a seq_len KV cache), train/prefill shapes lower full-sequence steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (ModelConfig, InputShape, decode_step, forward,
+                          init_cache, init_params, loss_fn, prefill)
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+# ------------------------------------------------------------------ steps
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 1,
+                    batch_axes: Tuple[str, ...] = ("data",)):
+    """Training step; ``num_microbatches > 1`` adds sequential gradient
+    accumulation (keeps per-device activation memory bounded at large
+    global_batch x seq, e.g. llava-34B train_4k)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, cfg, batch)
+
+    def train_step(params, opt_state: OptState, batch):
+        if num_microbatches == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                x = x.reshape((num_microbatches, -1) + x.shape[1:])
+                return jax.lax.with_sharding_constraint(
+                    x, jax.sharding.PartitionSpec(None, batch_axes))
+            micro = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                (l, m), g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, acc0, micro)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return prefill(params, cfg, batch["tokens"],
+                       batch.get("prefix_embeds"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def serve_step(params, token, cache):
+        return decode_step(params, cfg, token, cache)
+    return serve_step
+
+
+# ------------------------------------------------------------- input specs
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Text tokens after reserving prefix positions for stub modalities."""
+    if cfg.family == "vlm" and cfg.num_prefix_embeds:
+        return max(seq_len - cfg.num_prefix_embeds, 16)
+    return seq_len
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Train/prefill batch as ShapeDtypeStructs."""
+    b, s = shape.global_batch, shape.seq_len
+    st = text_len(cfg, s)
+    specs: Dict[str, Any] = {"tokens": _sds((b, st), jnp.int32)}
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, st), jnp.int32)
+    if cfg.family == "vlm" and cfg.num_prefix_embeds:
+        specs["prefix_embeds"] = _sds((b, cfg.num_prefix_embeds, cfg.vision_dim),
+                                      jnp.float32)
+    if cfg.family == "encdec":
+        specs["prefix_embeds"] = _sds((b, cfg.enc_seq, cfg.vision_dim),
+                                      jnp.float32)
+    return specs
+
+
+def param_structs(cfg: ModelConfig, *, serve: bool = False):
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    if serve:  # serving runs in bf16
+        shapes = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), shapes)
+    return shapes
+
+
+def opt_structs(param_shapes) -> OptState:
+    mu = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_shapes)
+    return OptState(step=_sds((), jnp.int32), mu=mu,
+                    nu=jax.tree.map(lambda s: s, mu))
+
+
+def cache_structs(cfg: ModelConfig, shape: InputShape):
+    """Decode cache ShapeDtypeStructs sized for shape.seq_len."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                           jnp.bfloat16))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape):
+    token = _sds((shape.global_batch, 1), jnp.int32)
+    return token, cache_structs(cfg, shape)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """The complete kwargs-free positional input spec for the lowered step."""
+    if shape.kind in ("train", "prefill"):
+        return (batch_specs(cfg, shape),)
+    return decode_input_specs(cfg, shape)

@@ -1,0 +1,89 @@
+"""End-to-end training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --steps 50 \
+      --d-model 128 --layers 2 --batch 8 --seq 128
+
+Runs a REDUCED variant of the chosen architecture on the local device(s) by
+default (this container is CPU-only); pass --full to train the exact
+assigned config (requires a real TPU pod with the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.tokens import DataConfig, TokenStream
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step
+from repro.models import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.sharding import ctx, specs as sp
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true",
+                    help="train the exact assigned config (TPU pod required)")
+    ap.add_argument("--save", default=None, help="checkpoint path (.npz)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        overrides = {}
+        if args.d_model:
+            overrides["d_model"] = args.d_model
+        cfg = cfg.reduced(**overrides)
+    print(f"arch={cfg.name} family={cfg.family} layers={cfg.num_layers} "
+          f"d_model={cfg.d_model} vocab={cfg.vocab_size}")
+
+    mesh = make_production_mesh() if args.full else make_host_mesh()
+    baxes = sp.batch_axes(mesh)
+    n_b = 1
+    for a in baxes:
+        n_b *= mesh.shape[a]
+
+    opt_cfg = AdamWConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps // 5 + 1),
+                          total_steps=args.steps)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = init_opt_state(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+
+    stream = TokenStream(cfg, DataConfig(seq_len=args.seq, batch_size=args.batch))
+    step_fn = make_train_step(cfg, opt_cfg, batch_axes=baxes)
+    with ctx.activation_sharding(baxes, n_b, mesh=mesh), mesh:
+        pspecs = sp.param_specs(params, mesh=mesh)
+        jstep = jax.jit(step_fn,
+                        in_shardings=(sp.shard(mesh, pspecs), None, None),
+                        donate_argnums=(0, 1))
+        t0 = time.time()
+        for i, batch in enumerate(stream.batches()):
+            if i >= args.steps:
+                break
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                m = jax.tree.map(float, metrics)
+                print(f"step {i:4d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                      f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f} "
+                      f"({time.time()-t0:.1f}s)")
+    if args.save:
+        ckpt.save(args.save, params)
+        print(f"saved {args.save}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,3 @@
+from .base import ModelConfig, InputShape, INPUT_SHAPES
+from .model import init_params, forward, loss_fn, prefill, decode_step
+from .kvcache import init_cache

@@ -1,0 +1,589 @@
+"""Attention: GQA (global + sliding-window) and MLA (DeepSeek-V2).
+
+XLA-native implementation used for training, dry-run lowering, and CPU tests.
+Queries are processed in chunks (flash-style outer loop via ``lax.scan``) so
+prefill at 32k/500k never materializes an S x S score matrix.  The Pallas
+flash/decode kernels in ``repro.kernels`` implement the same math for real
+TPU deployment and are validated against these semantics in tests.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import apply_rope, dense_init, softcap
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ params
+
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    r, dr, dn, dv = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (dn + dr)), dtype),
+        "w_dkv": dense_init(ks[1], (d, r), dtype),
+        "w_kr": dense_init(ks[2], (d, dr), dtype),
+        "w_uk": dense_init(ks[3], (r, h * dn), dtype),
+        "w_uv": dense_init(ks[4], (r, h * dv), dtype),
+        "wo": dense_init(ks[5], (h * dv, d), dtype),
+    }
+
+
+# ------------------------------------------------------------------ core math
+
+
+def _mask_bias(q_pos, k_pos, window: Optional[int]):
+    """[..., S_q, S_k] additive bias: causal, optionally sliding-window."""
+    ok = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        ok &= k_pos[..., None, :] > (q_pos[..., :, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _head_shard(x, dim: int):
+    """Pin the given head dim to 'model' when inside the sharding context
+    and divisible — GSPMD otherwise sometimes prefers sharding the head_dim
+    CONTRACTION, which all-reduces full score tensors (§Perf)."""
+    from repro.sharding import ctx
+    from jax.sharding import PartitionSpec as P
+    mesh = ctx.current_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return x
+    if x.shape[dim] % mesh.shape["model"] != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def gqa_scores_softmax(q, k, v, bias, *, scale, cap,
+                       force_head_shard: bool = False):
+    """q [B,Sq,H,D], k/v [B,Sk,KV,D], bias [B?,Sq,Sk] -> [B,Sq,H,D].
+
+    ``force_head_shard`` pins the KV-head dim to 'model' — used ONLY on the
+    padded-expansion path (llava: 56 heads on a 16-way axis), where GSPMD
+    otherwise shards the head_dim contraction and all-reduces full score
+    tensors (§Perf pair 3).  Everywhere else GSPMD's native choice measured
+    better, so no constraint is forced.
+    """
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    if force_head_shard:
+        qg = _head_shard(qg, 2)
+        k = _head_shard(k, 2)
+        v = _head_shard(v, 2)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+    scores = scores * scale
+    if force_head_shard:
+        scores = _head_shard(scores, 1)
+    scores = softcap(scores, cap)
+    scores = scores + bias[:, None, None] if bias.ndim == 3 else scores + bias
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def _maybe_tp_expand(q, k, v):
+    """Make the head dim tensor-parallel-friendly (§Perf).
+
+    When q-heads don't divide the 'model' axis (llava: 56 heads on 16-way
+    TP), GSPMD falls back to sharding the head_dim CONTRACTION and
+    all-reduces full attention-score tensors per layer.  Padding q-heads to
+    a multiple of the axis and expanding K/V to MHA layout keeps the whole
+    attention shard-local (padded heads attend to kv-head 0 and are sliced
+    off afterwards).  No-op outside the sharding context.
+    """
+    from repro.sharding import ctx
+    mesh = ctx.current_mesh()
+    h, kvh = q.shape[2], k.shape[2]
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return q, k, v, h
+    m = mesh.shape["model"]
+    if h % m == 0 or ctx.current_mode() == "train":
+        # q-heads shard natively, or we're training: expanding K/V
+        # multiplies its bytes by the GQA group, which measured worse than
+        # the baseline in training even for non-divisible heads (llava
+        # train 104->175 s).  Expansion is serve-only, for head counts
+        # that don't divide the axis (llava prefill: 56 on 16, 6.6x win).
+        return q, k, v, h
+    hp = -(-h // m) * m
+    g = h // kvh
+    mapping = jnp.array([min(i // g, kvh - 1) for i in range(hp)])
+    if hp != h:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, hp - h), (0, 0)))
+    k = jnp.take(k, mapping, axis=2)
+    v = jnp.take(v, mapping, axis=2)
+    return q, k, v, h
+
+
+def chunked_causal_attention(q, k, v, *, q_offset, window: Optional[int],
+                             scale: float, cap: Optional[float],
+                             chunk: int = 1024,
+                             force_head_shard: bool = False):
+    """Causal (optionally windowed) attention, scanning over query chunks.
+
+    q [B,S,H,D]; k, v [B,T,KV,D]; q position i attends to k positions
+    j <= q_offset + i (and j > i - window if windowed).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    chunk = min(chunk, s)
+    if s % chunk != 0:  # fall back to one chunk for odd smoke shapes
+        chunk = s
+    n_chunks = s // chunk
+    k_pos = jnp.arange(t)
+
+    def body(carry, qc_idx):
+        qc = jax.lax.dynamic_slice_in_dim(q, qc_idx * chunk, chunk, axis=1)
+        q_pos = q_offset + qc_idx * chunk + jnp.arange(chunk)
+        bias = _mask_bias(q_pos, k_pos, window)  # [chunk, t]
+        out = gqa_scores_softmax(qc, k, v, bias, scale=scale, cap=cap,
+                                 force_head_shard=force_head_shard)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(n_chunks))
+    # outs: [n_chunks, B, chunk, H, Dv] -> [B, S, H, Dv]
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, v.shape[-1])
+
+
+# ------------------------------------------------------------------ GQA layer
+
+
+class KVEntry(NamedTuple):
+    k: jax.Array
+    v: jax.Array
+
+
+def attention_forward(p, cfg: ModelConfig, x, positions, *, window=None,
+                      return_kv: bool = False):
+    """Full-sequence causal attention (train / prefill)."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    adt = x.dtype
+    q = x @ p["wq"].astype(adt)
+    k = x @ p["wk"].astype(adt)
+    v = x @ p["wv"].astype(adt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(adt)
+        k = k + p["bk"].astype(adt)
+        v = v + p["bv"].astype(adt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(hd)
+    qe, ke, ve, h_orig = _maybe_tp_expand(q, k, v)
+    out = chunked_causal_attention(qe, ke, ve, q_offset=0, window=window,
+                                   scale=scale, cap=cfg.attn_softcap,
+                                   force_head_shard=qe.shape[2] != h_orig or
+                                   ke.shape[2] != k.shape[2])
+    out = out[:, :, :h_orig]
+    out = out.reshape(b, s, h * hd) @ p["wo"].astype(adt)
+    if return_kv:
+        return out, KVEntry(k, v)
+    return out
+
+
+def attention_decode(p, cfg: ModelConfig, x, kv_cache: KVEntry, pos_buf, pos,
+                     *, window=None, rope_pos=None):
+    """One-token decode against a cache buffer.
+
+    x [B,1,d]; kv_cache.k/v [B,W,KV,D] (W = full seq for global layers, the
+    sliding window for local layers); pos_buf [W] absolute positions held in
+    each buffer slot (-1 = empty); pos: scalar position of the new token.
+    Returns (out [B,1,d], new_cache, new_pos_buf).
+    """
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    adt = x.dtype
+    q = x @ p["wq"].astype(adt)
+    k = x @ p["wk"].astype(adt)
+    v = x @ p["wv"].astype(adt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(adt)
+        k = k + p["bk"].astype(adt)
+        v = v + p["bv"].astype(adt)
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kvh, hd)
+    v = v.reshape(b, 1, kvh, hd)
+    posn = jnp.full((b, 1), pos if rope_pos is None else rope_pos)
+    q = apply_rope(q, posn, cfg.rope_theta)
+    k = apply_rope(k, posn, cfg.rope_theta)
+
+    w = kv_cache.k.shape[1]
+    slot = pos % w  # ring-buffer slot (== pos when W covers the full seq)
+    ck = jax.lax.dynamic_update_slice_in_dim(kv_cache.k, k, slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(kv_cache.v, v, slot, axis=1)
+    new_pos_buf = jax.lax.dynamic_update_slice_in_dim(
+        pos_buf, jnp.full((1,), pos, pos_buf.dtype), slot, axis=0)
+
+    ok = (new_pos_buf >= 0) & (new_pos_buf <= pos)
+    if window is not None:
+        ok &= new_pos_buf > pos - window
+    bias = jnp.where(ok, 0.0, NEG_INF)[None, :]  # [1(Sq), W]
+    scale = 1.0 / math.sqrt(hd)
+    out = gqa_scores_softmax(q, ck, cv, bias, scale=scale, cap=cfg.attn_softcap)
+    out = out.reshape(b, 1, h * hd) @ p["wo"].astype(adt)
+    return out, KVEntry(ck, cv), new_pos_buf
+
+
+# ------------------------------------------------------------------ MLA layer
+
+
+def attention_decode_v2(p, cfg: ModelConfig, x, ck, cv, pos_buf, pos, *,
+                        window=None, rope_pos=None, sharded: bool = False):
+    """Decode attention over the OLD cache + the new token, returning the
+    new K/V columns instead of rewritten cache buffers (§Perf iteration 2:
+    the caller column-DUSes a carried cache, so per-step HBM writes are one
+    token column per layer instead of the whole layer slice).
+
+    ck/cv [B, W, KV, hd] are the cache *before* this token; the ring slot
+    being overwritten is masked out naturally (its pos_buf entry is either
+    -1 or expired by the window).  Returns (out, k_col, v_col, slot).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import ctx
+
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    adt = x.dtype
+    q = x @ p["wq"].astype(adt)
+    k = x @ p["wk"].astype(adt)
+    v = x @ p["wv"].astype(adt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(adt)
+        k = k + p["bk"].astype(adt)
+        v = v + p["bv"].astype(adt)
+    q = q.reshape(b, 1, h, hd)
+    k_col = k.reshape(b, 1, kvh, hd)
+    v_col = v.reshape(b, 1, kvh, hd)
+    posn = jnp.full((b, 1), pos if rope_pos is None else rope_pos)
+    q = apply_rope(q, posn, cfg.rope_theta)
+    k_col = apply_rope(k_col, posn, cfg.rope_theta)
+    w = ck.shape[1]
+    slot = pos % w
+    scale = 1.0 / math.sqrt(hd)
+    g = h // kvh
+    cap = cfg.attn_softcap
+    qg = q.reshape(b, 1, kvh, g, hd)
+
+    def stats(ck_, cv_, pbuf_):
+        """Partial flash stats over (a shard of) the old cache."""
+        ok = jnp.logical_and(pbuf_ >= 0, pbuf_ <= pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, pbuf_ > pos - window)
+        bias = jnp.where(ok, 0.0, NEG_INF)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, ck_,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap) + bias
+        m = s.max(axis=-1)                                   # [b,kv,g,1]
+        pexp = jnp.exp(s - m[..., None])
+        l = pexp.sum(axis=-1)
+        acc = jnp.einsum("bkgst,btkd->bskgd", pexp.astype(cv_.dtype),
+                         cv_).astype(jnp.float32)            # [b,1,kv,g,hd]
+        return m, l, acc
+
+    if sharded:
+        mesh = ctx.current_mesh()
+
+        def local(ck_, cv_, pbuf_):
+            m, l, acc = stats(ck_, cv_, pbuf_)
+            m_g = jax.lax.pmax(m, "model")
+            corr = jnp.exp(m - m_g)
+            l_g = jax.lax.psum(l * corr, "model")
+            acc_g = jax.lax.psum(acc * jnp.moveaxis(corr, -1, 1)[..., None],
+                                 "model")
+            return m_g, l_g, acc_g
+
+        m, l, acc = jax.shard_map(
+            local, mesh=mesh,
+            in_specs=(P(None, "model"), P(None, "model"), P("model")),
+            out_specs=(P(), P(), P()),
+            axis_names={"model"}, check_vma=False)(ck, cv, pos_buf)
+    else:
+        m, l, acc = stats(ck, cv, pos_buf)
+
+    # merge the new token (always visible to itself)
+    s_new = jnp.einsum("bskgd,bskd->bkgs", qg, k_col.astype(qg.dtype),
+                       preferred_element_type=jnp.float32) * scale
+    s_new = softcap(s_new, cap)                              # [b,kv,g,1]
+    m2 = jnp.maximum(m, s_new)
+    corr = jnp.exp(m - m2)
+    p_new = jnp.exp(s_new - m2)
+    l2 = l * corr + p_new
+    acc2 = acc * jnp.moveaxis(corr, -1, 1)[..., None] + \
+        jnp.moveaxis(p_new, -1, 1)[..., None] * \
+        v_col[:, :, :, None, :].astype(jnp.float32)
+    out = acc2 / jnp.maximum(jnp.moveaxis(l2, -1, 1), 1e-30)[..., None]
+    out = out.reshape(b, 1, h * hd).astype(adt) @ p["wo"].astype(adt)
+    return out, k_col, v_col, slot
+
+
+def attention_decode_sharded(p, cfg: ModelConfig, x, kv_cache: KVEntry,
+                             pos_buf, pos, *, window=None, rope_pos=None):
+    """Flash-decode with the cache's SEQUENCE dim sharded over 'model'.
+
+    §Perf optimization (beyond the baseline): instead of letting GSPMD
+    all-gather the seq-sharded K/V per layer (the baseline's dominant
+    memory/collective term at decode_32k), each model shard computes partial
+    flash statistics (m, l, acc) over its local cache slice and the shards
+    merge with an [B, H, D]-sized psum — cache bytes stay local.
+
+    QKV/O projections remain outside (ordinary tensor-parallel matmuls).
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding import ctx
+
+    mesh = ctx.current_mesh()
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    adt = x.dtype
+    q = x @ p["wq"].astype(adt)
+    k = x @ p["wk"].astype(adt)
+    v = x @ p["wv"].astype(adt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(adt)
+        k = k + p["bk"].astype(adt)
+        v = v + p["bv"].astype(adt)
+    q = q.reshape(b, 1, h, hd)
+    k_new = k.reshape(b, 1, kvh, hd)
+    v_new = v.reshape(b, 1, kvh, hd)
+    posn = jnp.full((b, 1), pos if rope_pos is None else rope_pos)
+    q = apply_rope(q, posn, cfg.rope_theta)
+    k_new = apply_rope(k_new, posn, cfg.rope_theta)
+    w = kv_cache.k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    g = h // kvh
+    cap = cfg.attn_softcap
+
+    def local(qv, kn, vn, ck, cv, pbuf, pos_):
+        widx = jax.lax.axis_index("model")
+        wloc = ck.shape[1]
+        slot = pos_ % w - widx * wloc
+        in_range = jnp.logical_and(slot >= 0, slot < wloc)
+        ls = jnp.clip(slot, 0, wloc - 1)
+        old_k = jax.lax.dynamic_slice_in_dim(ck, ls, 1, axis=1)
+        old_v = jax.lax.dynamic_slice_in_dim(cv, ls, 1, axis=1)
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, jnp.where(in_range, kn, old_k), ls, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, jnp.where(in_range, vn, old_v), ls, axis=1)
+        old_p = jax.lax.dynamic_slice_in_dim(pbuf, ls, 1, axis=0)
+        pbuf = jax.lax.dynamic_update_slice_in_dim(
+            pbuf, jnp.where(in_range, jnp.full((1,), pos_, pbuf.dtype),
+                            old_p), ls, axis=0)
+        ok = jnp.logical_and(pbuf >= 0, pbuf <= pos_)
+        if window is not None:
+            ok = jnp.logical_and(ok, pbuf > pos_ - window)
+        bias = jnp.where(ok, 0.0, NEG_INF)  # [wloc]
+        qg = qv.reshape(b, 1, kvh, g, hd)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, ck,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap) + bias
+        m = s.max(axis=-1)                                  # [b,kv,g,1]
+        m_g = jax.lax.pmax(m, "model")
+        pexp = jnp.exp(s - m_g[..., None])
+        l_g = jax.lax.psum(pexp.sum(axis=-1), "model")
+        acc = jnp.einsum("bkgst,btkd->bskgd", pexp.astype(cv.dtype), cv)
+        acc_g = jax.lax.psum(acc.astype(jnp.float32), "model")
+        denom = jnp.maximum(jnp.moveaxis(l_g, -1, 1), 1e-30)  # [b,1,kv,g]
+        out = acc_g / denom[..., None]
+        return out.reshape(b, 1, h * hd).astype(adt), ck, cv, pbuf
+
+    out, ck, cv, pbuf = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(), P(None, "model"), P(None, "model"),
+                  P("model"), P()),
+        out_specs=(P(), P(None, "model"), P(None, "model"), P("model")),
+        axis_names={"model"}, check_vma=False,
+    )(q, k_new, v_new, kv_cache.k, kv_cache.v, pos_buf,
+      jnp.asarray(pos, jnp.int32))
+    out = out @ p["wo"].astype(adt)
+    return out, KVEntry(ck, cv), pbuf
+
+
+def use_sharded_decode(cfg: ModelConfig, w: int) -> bool:
+    """True when the decode cache's SEQ dim is model-sharded (shard_map
+    flash-decode path).  When kv_heads divide the model axis the cache is
+    kv-head-sharded instead and plain GSPMD attention is already local."""
+    from repro.sharding import ctx, specs as sp
+    mesh = ctx.current_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return False
+    return sp.decode_cache_layout(cfg.num_kv_heads, w, mesh) == "seq"
+
+
+def mla_forward(p, cfg: ModelConfig, x, positions, *, return_cache=False):
+    """MLA full-sequence (train / prefill): expanded keys/values."""
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    adt = x.dtype
+    q = (x @ p["wq"].astype(adt)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"].astype(adt)  # [b,s,r]
+    k_rope = apply_rope(x @ p["w_kr"].astype(adt), positions, cfg.rope_theta)  # [b,s,dr]
+    k_nope = (c_kv @ p["w_uk"].astype(adt)).reshape(b, s, h, dn)
+    v = (c_kv @ p["w_uv"].astype(adt)).reshape(b, s, h, dv)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))], axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    out = chunked_causal_attention(q_full, k_full, v, q_offset=0, window=None,
+                                   scale=scale, cap=cfg.attn_softcap)
+    out = out.reshape(b, s, h * dv) @ p["wo"].astype(adt)
+    if return_cache:
+        return out, (c_kv, k_rope)
+    return out
+
+
+def mla_decode(p, cfg: ModelConfig, x, c_cache, kr_cache, pos, *,
+               absorbed: bool = True):
+    """One-token MLA decode over the latent cache.
+
+    c_cache [B,T,r]; kr_cache [B,T,dr]; new token written at slot ``pos``.
+    ``absorbed=True`` uses the weight-absorption trick (attention in the
+    r-dim latent space — the serving-optimal form); ``absorbed=False``
+    re-expands keys/values (paper-faithful naive baseline, O(T·r·h·dn) work
+    per step).
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    adt = x.dtype
+    q = (x @ p["wq"].astype(adt)).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posn = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope, posn, cfg.rope_theta)
+
+    c_new = x @ p["w_dkv"].astype(adt)  # [b,1,r]
+    kr_new = apply_rope(x @ p["w_kr"].astype(adt), posn, cfg.rope_theta)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(c_cache, c_new, pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(kr_cache, kr_new, pos, axis=1)
+    t = c_cache.shape[1]
+    k_pos = jnp.arange(t)
+    bias = jnp.where(k_pos <= pos, 0.0, NEG_INF)  # [t]
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    w_uk = p["w_uk"].astype(adt).reshape(r, h, dn)
+    if absorbed:
+        # q_abs[b,h,r] = sum_dn q_nope * W_uk ; scores in latent space
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)[:, 0]  # [b,h,r]
+        scores = jnp.einsum("bhr,btr->bht", q_abs, c_cache,
+                            preferred_element_type=jnp.float32)
+        scores += jnp.einsum("bshd,btd->bht", q_rope, kr_cache,
+                             preferred_element_type=jnp.float32)
+        probs = jax.nn.softmax(scores * scale + bias, axis=-1).astype(adt)
+        ctx = jnp.einsum("bht,btr->bhr", probs, c_cache)  # latent context
+        w_uv = p["w_uv"].astype(adt).reshape(r, h, dv)
+        out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv).reshape(b, 1, h * dv)
+    else:
+        k_nope = jnp.einsum("btr,rhd->bthd", c_cache, w_uk)
+        w_uv = p["w_uv"].astype(adt).reshape(r, h, dv)
+        v = jnp.einsum("btr,rhd->bthd", c_cache, w_uv)
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_cache[:, :, None, :], k_nope.shape[:3] + (dr,))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = gqa_scores_softmax(q_full, k_full, v, bias[None], scale=scale,
+                                 cap=cfg.attn_softcap)
+        out = out.reshape(b, 1, h * dv)
+    out = out @ p["wo"].astype(adt)
+    return out, c_cache, kr_cache
+
+
+def mla_decode_v2(p, cfg: ModelConfig, x, c_old, kr_old, pos):
+    """MLA absorbed decode over the OLD latent cache + new-token merge.
+
+    Returns (out, c_col [b,1,r], kr_col [b,1,dr]) so the caller column-DUSes
+    the carried cache (same §Perf pattern as attention_decode_v2).
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    adt = x.dtype
+    q = (x @ p["wq"].astype(adt)).reshape(b, 1, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posn = jnp.full((b, 1), pos)
+    q_rope = apply_rope(q_rope, posn, cfg.rope_theta)
+    c_col = x @ p["w_dkv"].astype(adt)
+    kr_col = apply_rope(x @ p["w_kr"].astype(adt), posn, cfg.rope_theta)
+
+    t = c_old.shape[1]
+    k_pos = jnp.arange(t)
+    bias = jnp.where(k_pos < pos, 0.0, NEG_INF)
+    scale = 1.0 / math.sqrt(dn + dr)
+    w_uk = p["w_uk"].astype(adt).reshape(r, h, dn)
+    q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)[:, 0]   # [b,h,r]
+    s_old = jnp.einsum("bhr,btr->bht", q_abs, c_old,
+                       preferred_element_type=jnp.float32)
+    s_old += jnp.einsum("bshd,btd->bht", q_rope, kr_old,
+                        preferred_element_type=jnp.float32)
+    s_old = s_old * scale + bias
+    s_new = (jnp.einsum("bhr,bsr->bhs", q_abs, c_col,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bshd,bsd->bhs", q_rope, kr_col,
+                          preferred_element_type=jnp.float32)) * scale
+    m = jnp.maximum(s_old.max(axis=-1, keepdims=True), s_new)  # [b,h,1]
+    p_old = jnp.exp(s_old - m)
+    p_new = jnp.exp(s_new - m)
+    denom = p_old.sum(axis=-1, keepdims=True) + p_new
+    ctx_lat = (jnp.einsum("bht,btr->bhr", p_old.astype(adt), c_old)
+               + p_new.astype(adt) * c_col) / denom.astype(adt)
+    w_uv = p["w_uv"].astype(adt).reshape(r, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", ctx_lat, w_uv).reshape(b, 1, h * dv)
+    out = out @ p["wo"].astype(adt)
+    return out, c_col, kr_col
+
+
+def cross_attention_forward(p, cfg: ModelConfig, x, enc_kv, *, positions=None):
+    """Decoder cross-attention: q from x, k/v precomputed from encoder."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    adt = x.dtype
+    q = (x @ p["wq"].astype(adt)).reshape(b, s, h, hd)
+    k, v = enc_kv
+    t = k.shape[1]
+    bias = jnp.zeros((s, t))  # no mask: full cross attention
+    scale = 1.0 / math.sqrt(hd)
+    out = gqa_scores_softmax(q, k, v, bias[None], scale=scale, cap=None)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(adt)
+
+
+def encode_cross_kv(p, cfg: ModelConfig, enc_out):
+    b, t, _ = enc_out.shape
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    adt = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(adt)).reshape(b, t, kv, hd)
+    v = (enc_out @ p["wv"].astype(adt)).reshape(b, t, kv, hd)
+    return k, v

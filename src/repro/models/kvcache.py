@@ -1,0 +1,96 @@
+"""Decode-time caches for every sub-layer kind.
+
+Each *slot* of the scanned block layout owns a cache stacked over blocks
+(leading dim = n_blocks).  Kinds:
+
+  attn   — full-length ring buffer (W == max_seq)
+  local  — sliding-window ring buffer (W == min(window, max_seq))
+  mla    — latent cache (c_kv [r] + k_rope [dr]), no pos_buf (slot == pos)
+  rec    — RG-LRU state + conv history
+  ssm    — Mamba2 SSD state + conv history
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .rglru import RecState
+from .ssm import SSMState, conv_channels
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array        # [n, B, W, KV, hd]
+    v: jax.Array        # [n, B, W, KV, hd]
+    pos_buf: jax.Array  # [n, W] absolute position per ring slot, -1 empty
+
+
+class MLACache(NamedTuple):
+    c: jax.Array   # [n, B, S, r]
+    kr: jax.Array  # [n, B, S, dr]
+
+
+def _stack(n, fn):
+    leaves = fn()
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n,) + x.shape), leaves)
+
+
+def slot_cache(kind: str, cfg: ModelConfig, n_blocks: int, bsz: int,
+               max_seq: int, dtype) -> Any:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind == "attn":
+        w = max_seq
+    elif kind == "local":
+        w = min(cfg.sliding_window or max_seq, max_seq)
+    if kind in ("attn", "local"):
+        return AttnCache(
+            k=jnp.zeros((n_blocks, bsz, w, kv, hd), dtype),
+            v=jnp.zeros((n_blocks, bsz, w, kv, hd), dtype),
+            pos_buf=jnp.full((n_blocks, w), -1, jnp.int32),
+        )
+    if kind == "mla":
+        return MLACache(
+            c=jnp.zeros((n_blocks, bsz, max_seq, cfg.kv_lora_rank), dtype),
+            kr=jnp.zeros((n_blocks, bsz, max_seq, cfg.qk_rope_dim), dtype),
+        )
+    if kind == "rec":
+        return _stack(n_blocks, lambda: RecState(
+            h=jnp.zeros((bsz, cfg.lru_width), jnp.float32),
+            conv=jnp.zeros((bsz, cfg.conv_width - 1, cfg.lru_width), dtype)))
+    if kind == "ssm":
+        return _stack(n_blocks, lambda: SSMState(
+            ssm=jnp.zeros((bsz, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state),
+                          jnp.float32),
+            conv=jnp.zeros((bsz, cfg.ssm_conv_width - 1, conv_channels(cfg)), dtype)))
+    raise ValueError(kind)
+
+
+def resolve_kind(cfg: ModelConfig, kind: str) -> str:
+    """Map layout kind to cache kind (attention layers of MLA archs use MLA)."""
+    if kind == "attn" and cfg.use_mla:
+        return "mla"
+    return kind
+
+
+def init_cache(cfg: ModelConfig, bsz: int, max_seq: int, dtype) -> Dict[str, Any]:
+    """Zeroed cache pytree for ``decode_step``; ``pos`` counts tokens so far."""
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    n_blocks = cfg.dec_layers if cfg.family == "encdec" else cfg.n_blocks
+    slots = {}
+    for i, kind in enumerate(cfg.block_layout):
+        slots[f"s{i}"] = slot_cache(resolve_kind(cfg, kind), cfg, n_blocks,
+                                    bsz, max_seq, dtype)
+    cache["blocks"] = slots
+    if cfg.trailing_layout:
+        cache["trailing"] = {
+            f"s{i}": slot_cache(resolve_kind(cfg, kind), cfg, 1, bsz, max_seq, dtype)
+            for i, kind in enumerate(cfg.trailing_layout)}
+    if cfg.family == "encdec":
+        # cross-attention K/V per decoder layer (from the encoder, fixed)
+        cache["cross_k"] = jnp.zeros(
+            (cfg.dec_layers, bsz, cfg.enc_seq, cfg.num_kv_heads, cfg.head_dim), dtype)
+        cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache

@@ -1,0 +1,133 @@
+"""Shared layer primitives: norms, MLPs, embeddings, RoPE.
+
+Pure-function style: ``init_*`` builds a param sub-tree, ``apply`` takes
+(params, x).  All matmuls run in the activation dtype with fp32 accumulation
+where it matters (attention logits, softmax, norms).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LLM inits)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6, *, plus_one: bool = False):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    if plus_one:  # gemma convention: weight stored as (w - 1)
+        w = w + 1.0
+    return (x * w).astype(dtype)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def init_mlp(key, d_model: int, d_ff: int, variant: str, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if variant in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(params, x, variant: str):
+    adt = x.dtype
+    if variant in ("swiglu", "geglu"):
+        gate = x @ params["w_gate"].astype(adt)
+        up = x @ params["w_up"].astype(adt)
+        act = jax.nn.silu(gate) if variant == "swiglu" else jax.nn.gelu(gate, approximate=True)
+        return (act * up) @ params["w_down"].astype(adt)
+    h = jax.nn.gelu(x @ params["w_up"].astype(adt), approximate=True)
+    return h @ params["w_down"].astype(adt)
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    # std 1/sqrt(d): keeps tied-unembedding logits O(1) at init (and, for the
+    # gemma family, the sqrt(d)-scaled input embeddings O(1) per element).
+    return {"table": dense_init(key, (vocab, d_model), dtype,
+                                scale=d_model ** -0.5)}
+
+
+def embed(params, tokens, *, scale_by_sqrt_dim: bool = False, adtype=jnp.bfloat16):
+    table = params["table"]
+    out = jnp.take(table, tokens, axis=0).astype(adtype)
+    if scale_by_sqrt_dim:
+        out = out * jnp.asarray(math.sqrt(table.shape[1]), adtype)
+    return out
+
+
+def unembed(params, x, *, cap: Optional[float] = None):
+    logits = (x @ params["table"].astype(x.dtype).T).astype(jnp.float32)
+    return softcap(logits, cap)
+
+
+def sinusoidal_positions(num_pos: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(num_pos)[:, None].astype(jnp.float32)
+    i = jnp.arange(dim // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10_000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, D] (or [..., S, D]); positions: [..., S]."""
+    freqs = rope_freqs(x.shape[-1], theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    if x.ndim == angles.ndim + 1:  # head axis present
+        sin, cos = sin[..., None, :], cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy(logits, labels, *, ignore_id: int = -1):
+    """Mean next-token CE over non-ignored labels. logits [..., V] fp32."""
+    mask = (labels != ignore_id)
+    labels = jnp.where(mask, labels, 0)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,640 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+Layer stacks are scanned (`lax.scan` over params stacked on a leading
+n_blocks dim) so HLO size is independent of depth — required to compile
+42-layer models for 512 simulated devices on CPU in the dry-run.
+
+Families:
+  dense / vlm    — [pre-norm attn][pre-norm MLP] blocks (+ optional sandwich
+                   norms, sliding-window or alternating local/global layouts)
+  moe            — MLP replaced by top-k routed experts (+ shared experts);
+                   attention may be GQA or MLA (deepseek-v2)
+  ssm            — Mamba2 SSD blocks (no separate MLP)
+  hybrid         — RecurrentGemma (rec, rec, attn) pattern
+  encdec         — Whisper: bidirectional encoder + cross-attending decoder
+
+VLM / audio frontends are stubbed per the assignment carve-out:
+``prefix_embeds`` (patch / mel-frame embeddings) arrive precomputed and pass
+through a learned projector.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain_batch
+
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import rglru as rec_mod
+from . import ssm as ssm_mod
+from .attention import KVEntry
+from .base import ModelConfig
+from .kvcache import AttnCache, MLACache, init_cache, resolve_kind
+from .layers import (apply_mlp, cross_entropy, dense_init, embed,
+                     init_embedding, init_mlp, rms_norm,
+                     sinusoidal_positions, softcap, unembed)
+
+# ===================================================================== init
+
+
+def _init_sublayer(key, cfg: ModelConfig, kind: str, dtype, *, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), dtype)}
+    if kind in ("attn", "local"):
+        if cfg.use_mla and kind == "attn":
+            p["mla"] = attn_mod.init_mla(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn_mod.init_attention(ks[0], cfg, dtype)
+    elif kind == "rec":
+        p["rec"] = rec_mod.init_rec(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+        return p  # mamba block has no separate MLP
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_x"] = jnp.zeros((cfg.d_model,), dtype)
+        p["xattn"] = attn_mod.init_attention(ks[2], cfg, dtype)
+    if cfg.post_norm:
+        p["norm1b"] = jnp.zeros((cfg.d_model,), dtype)
+    p["norm2"] = jnp.zeros((cfg.d_model,), dtype)
+    if cfg.num_experts and kind != "rec":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_variant, dtype)
+    if cfg.post_norm:
+        p["norm2b"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def _stack_init(key, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dtype = cfg.pdtype
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if cfg.family == "encdec":
+        params["enc_blocks"] = _stack_init(
+            ks[1], cfg.enc_layers,
+            lambda k: _init_sublayer(k, cfg, "attn", dtype))
+        params["dec_blocks"] = _stack_init(
+            ks[2], cfg.dec_layers,
+            lambda k: _init_sublayer(k, cfg, "attn", dtype, cross=True))
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["frame_proj"] = dense_init(ks[3], (cfg.vision_dim, cfg.d_model), dtype)
+        return params
+    if cfg.family == "vlm" or cfg.num_prefix_embeds:
+        params["vision_proj"] = dense_init(ks[3], (cfg.vision_dim, cfg.d_model), dtype)
+    blocks = {}
+    for i, kind in enumerate(cfg.block_layout):
+        blocks[f"s{i}"] = _stack_init(
+            jax.random.fold_in(ks[4], i), cfg.n_blocks,
+            lambda k, kind=kind: _init_sublayer(k, cfg, kind, dtype))
+    params["blocks"] = blocks
+    if cfg.trailing_layout:
+        params["trailing"] = {
+            f"s{i}": _stack_init(
+                jax.random.fold_in(ks[5], i), 1,
+                lambda k, kind=kind: _init_sublayer(k, cfg, kind, dtype))
+            for i, kind in enumerate(cfg.trailing_layout)}
+    return params
+
+
+# ============================================================== full forward
+
+
+def _apply_sublayer(p, cfg: ModelConfig, kind: str, x, positions, aux):
+    """One residual sub-layer (full sequence)."""
+    h = rms_norm(x, p["norm1"], cfg.norm_eps, plus_one=True)
+    if kind in ("attn", "local"):
+        window = cfg.sliding_window if kind == "local" else None
+        if cfg.use_mla and kind == "attn":
+            h = attn_mod.mla_forward(p["mla"], cfg, h, positions)
+        else:
+            h = attn_mod.attention_forward(p["attn"], cfg, h, positions,
+                                           window=window)
+    elif kind == "rec":
+        h = rec_mod.rec_forward(p["rec"], cfg, h)
+    elif kind == "ssm":
+        h = ssm_mod.ssm_forward(p["ssm"], cfg, h)
+        return x + h, aux  # mamba block: single residual, no MLP
+    if cfg.post_norm:
+        h = rms_norm(h, p["norm1b"], cfg.norm_eps, plus_one=True)
+    x = x + h
+    h = rms_norm(x, p["norm2"], cfg.norm_eps, plus_one=True)
+    if "moe" in p and kind != "rec":
+        h, a = moe_mod.apply_moe(p["moe"], cfg, h, return_aux=True)
+        aux = aux + a
+    else:
+        h = apply_mlp(p["mlp"], h, cfg.mlp_variant)
+    if cfg.post_norm:
+        h = rms_norm(h, p["norm2b"], cfg.norm_eps, plus_one=True)
+    return x + h, aux
+
+
+def _scan_blocks(params_slot_dict, cfg: ModelConfig, layout, x, positions,
+                 aux0):
+    """Scan a (possibly multi-slot) block layout over its stacked params."""
+
+    def block(carry, slot_params):
+        h, aux = carry
+        for i, kind in enumerate(layout):
+            h, aux = _apply_sublayer(slot_params[f"s{i}"], cfg, kind, h,
+                                     positions, aux)
+        return (constrain_batch(h), aux), None
+
+    if cfg.remat:
+        block = jax.checkpoint(block)
+    (x, aux), _ = jax.lax.scan(block, (x, aux0), params_slot_dict)
+    return x, aux
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, prefix_embeds):
+    x = embed(params["embed"], tokens, scale_by_sqrt_dim=cfg.embed_scale,
+              adtype=cfg.adtype)
+    if prefix_embeds is not None and cfg.family != "encdec":
+        pre = (prefix_embeds.astype(cfg.adtype)
+               @ params["vision_proj"].astype(cfg.adtype))
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def forward(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            *, return_aux: bool = False):
+    """Full-sequence logits.  tokens [B, S_text]; prefix_embeds [B, P, vdim]."""
+    if cfg.family == "encdec":
+        return _encdec_forward(params, cfg, tokens, prefix_embeds,
+                               return_aux=return_aux)
+    x = constrain_batch(_embed_inputs(params, cfg, tokens, prefix_embeds))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+        positions = jnp.zeros_like(positions)
+    aux = jnp.zeros((), jnp.float32)
+    x, aux = _scan_blocks(params["blocks"], cfg, cfg.block_layout, x,
+                          positions, aux)
+    if cfg.trailing_layout:
+        x, aux = _scan_blocks(params["trailing"], cfg, cfg.trailing_layout, x,
+                              positions, aux)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    if return_aux:
+        return logits, aux
+    return logits
+
+
+def _encdec_forward(params, cfg: ModelConfig, tokens, frame_embeds,
+                    *, return_aux: bool = False):
+    adt = cfg.adtype
+    enc = frame_embeds.astype(adt) @ params["frame_proj"].astype(adt)
+    enc = enc + sinusoidal_positions(enc.shape[1], cfg.d_model, adt)[None]
+    zero_pos = jnp.zeros(enc.shape[:2], jnp.int32)
+
+    def enc_block(h, p):
+        a = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+        # bidirectional: no mask
+        b_, s_, _ = a.shape
+        q = (a @ p["attn"]["wq"].astype(adt)).reshape(b_, s_, cfg.num_heads, cfg.head_dim)
+        k = (a @ p["attn"]["wk"].astype(adt)).reshape(b_, s_, cfg.num_kv_heads, cfg.head_dim)
+        v = (a @ p["attn"]["wv"].astype(adt)).reshape(b_, s_, cfg.num_kv_heads, cfg.head_dim)
+        bias = jnp.zeros((s_, s_))
+        o = attn_mod.gqa_scores_softmax(q, k, v, bias[None],
+                                        scale=cfg.head_dim ** -0.5, cap=None)
+        h = h + o.reshape(b_, s_, -1) @ p["attn"]["wo"].astype(adt)
+        m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+        return constrain_batch(h + apply_mlp(p["mlp"], m, cfg.mlp_variant)), None
+
+    enc, _ = jax.lax.scan(enc_block, enc, params["enc_blocks"])
+    enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps, plus_one=True)
+
+    x = embed(params["embed"], tokens, adtype=adt)
+    s = x.shape[1]
+    x = x + sinusoidal_positions(s, cfg.d_model, adt)[None]
+    positions = jnp.broadcast_to(jnp.zeros((), jnp.int32), x.shape[:2])
+
+    def dec_block(h, p):
+        a = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+        h = h + attn_mod.attention_forward(p["attn"], cfg, a, positions)
+        a = rms_norm(h, p["norm_x"], cfg.norm_eps, plus_one=True)
+        enc_kv = attn_mod.encode_cross_kv(p["xattn"], cfg, enc)
+        h = h + attn_mod.cross_attention_forward(p["xattn"], cfg, a, enc_kv)
+        m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+        return constrain_batch(h + apply_mlp(p["mlp"], m, cfg.mlp_variant)), None
+
+    x, _ = jax.lax.scan(dec_block, x, params["dec_blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    if return_aux:
+        return logits, jnp.zeros((), jnp.float32)
+    return logits
+
+
+# ===================================================================== loss
+
+AUX_WEIGHT = 0.01
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+    """batch: {'tokens', 'labels', optional 'prefix_embeds'}."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("prefix_embeds"), return_aux=True)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm prefix: no labels on patches
+        pad = jnp.full(
+            (labels.shape[0], logits.shape[1] - labels.shape[1]), -1,
+            labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = cross_entropy(logits, labels)
+    loss = ce + AUX_WEIGHT * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# =================================================================== prefill
+
+
+def _prefill_fill_attn(cfg, kv: KVEntry, w: int, s: int):
+    """Pack last-w tokens of prefill K/V into a ring buffer + pos_buf."""
+    k, v = kv
+    b = k.shape[0]
+    if s >= w:
+        pos = jnp.arange(s - w, s)
+        slots = pos % w
+        kk = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[:, slots].set(k[:, -w:])
+        vv = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, slots].set(v[:, -w:])
+        pos_buf = jnp.full((w,), -1, jnp.int32).at[slots].set(pos)
+    else:
+        kk = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[:, :s].set(k)
+        vv = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, :s].set(v)
+        pos_buf = jnp.full((w,), -1, jnp.int32).at[:s].set(jnp.arange(s))
+    return kk, vv, pos_buf
+
+
+def prefill(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+            *, max_seq: Optional[int] = None):
+    """Run the prompt, returning (last-token logits, populated cache)."""
+    if cfg.family == "encdec":
+        return _encdec_prefill(params, cfg, tokens, prefix_embeds, max_seq)
+    x = constrain_batch(_embed_inputs(params, cfg, tokens, prefix_embeds))
+    b, s, _ = x.shape
+    max_seq = max_seq or s
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if not cfg.use_rope:
+        x = x + sinusoidal_positions(s, cfg.d_model, x.dtype)[None]
+        positions = jnp.zeros_like(positions)
+    cache = init_cache(cfg, b, max_seq, cfg.adtype)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+
+    def run_layout(x, slot_params_dict, layout):
+        new_slots = {}
+
+        def block(h, slot_params):
+            outs = {}
+            for i, kind in enumerate(layout):
+                p = slot_params[f"s{i}"]
+                ck = resolve_kind(cfg, kind)
+                hin = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+                if ck == "mla":
+                    o, (c_kv, k_rope) = attn_mod.mla_forward(
+                        p["mla"], cfg, hin, positions, return_cache=True)
+                    c = jnp.zeros((b, max_seq, cfg.kv_lora_rank), cfg.adtype
+                                  ).at[:, :s].set(c_kv)
+                    kr = jnp.zeros((b, max_seq, cfg.qk_rope_dim), cfg.adtype
+                                   ).at[:, :s].set(k_rope)
+                    outs[f"s{i}"] = MLACache(c=c, kr=kr)
+                elif ck in ("attn", "local"):
+                    window = cfg.sliding_window if kind == "local" else None
+                    o, kv = attn_mod.attention_forward(
+                        p["attn"], cfg, hin, positions, window=window,
+                        return_kv=True)
+                    w = max_seq if ck == "attn" else min(cfg.sliding_window, max_seq)
+                    kk, vv, pos_buf = _prefill_fill_attn(cfg, kv, w, s)
+                    outs[f"s{i}"] = AttnCache(k=kk, v=vv, pos_buf=pos_buf)
+                elif ck == "rec":
+                    o, st = rec_mod.rec_forward(p["rec"], cfg, hin,
+                                                return_state=True)
+                    outs[f"s{i}"] = st
+                elif ck == "ssm":
+                    o, st = ssm_mod.ssm_forward(p["ssm"], cfg, hin,
+                                                return_state=True)
+                    outs[f"s{i}"] = st
+                    h = h + o
+                    continue
+                if cfg.post_norm:
+                    o = rms_norm(o, p["norm1b"], cfg.norm_eps, plus_one=True)
+                h = h + o
+                m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+                if "moe" in p:
+                    m = moe_mod.apply_moe(p["moe"], cfg, m)
+                else:
+                    m = apply_mlp(p["mlp"], m, cfg.mlp_variant)
+                if cfg.post_norm:
+                    m = rms_norm(m, p["norm2b"], cfg.norm_eps, plus_one=True)
+                h = h + m
+            return constrain_batch(h), outs
+
+        x, slot_caches = jax.lax.scan(block, x, slot_params_dict)
+        return x, slot_caches
+
+    x, cache["blocks"] = run_layout(x, params["blocks"], cfg.block_layout)
+    if cfg.trailing_layout:
+        x, cache["trailing"] = run_layout(x, params["trailing"],
+                                          cfg.trailing_layout)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    logits = unembed(params["embed"], x[:, -1:], cap=cfg.final_softcap)
+    return logits, cache
+
+
+def _encdec_prefill(params, cfg, tokens, frame_embeds, max_seq):
+    """Encode frames once; prefill decoder self-attn cache with `tokens`."""
+    adt = cfg.adtype
+    b = tokens.shape[0]
+    s = tokens.shape[1]
+    max_seq = max_seq or s
+    # reuse full forward for encoder by calling _encdec_forward pieces
+    enc = frame_embeds.astype(adt) @ params["frame_proj"].astype(adt)
+    enc = enc + sinusoidal_positions(enc.shape[1], cfg.d_model, adt)[None]
+
+    def enc_block(h, p):
+        a = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+        b_, s_, _ = a.shape
+        q = (a @ p["attn"]["wq"].astype(adt)).reshape(b_, s_, cfg.num_heads, cfg.head_dim)
+        k = (a @ p["attn"]["wk"].astype(adt)).reshape(b_, s_, cfg.num_kv_heads, cfg.head_dim)
+        v = (a @ p["attn"]["wv"].astype(adt)).reshape(b_, s_, cfg.num_kv_heads, cfg.head_dim)
+        bias = jnp.zeros((s_, s_))
+        o = attn_mod.gqa_scores_softmax(q, k, v, bias[None],
+                                        scale=cfg.head_dim ** -0.5, cap=None)
+        h = h + o.reshape(b_, s_, -1) @ p["attn"]["wo"].astype(adt)
+        m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+        return constrain_batch(h + apply_mlp(p["mlp"], m, cfg.mlp_variant)), None
+
+    enc, _ = jax.lax.scan(enc_block, enc, params["enc_blocks"])
+    enc = rms_norm(enc, params["enc_norm"], cfg.norm_eps, plus_one=True)
+
+    cache = init_cache(cfg, b, max_seq, adt)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+    x = embed(params["embed"], tokens, adtype=adt)
+    x = x + sinusoidal_positions(s, cfg.d_model, adt)[None]
+    positions = jnp.zeros((b, s), jnp.int32)
+
+    def dec_block(h, p):
+        a = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+        o, kv = attn_mod.attention_forward(p["attn"], cfg, a, positions,
+                                           return_kv=True)
+        kk, vv, pos_buf = _prefill_fill_attn(cfg, kv, max_seq, s)
+        h = h + o
+        a = rms_norm(h, p["norm_x"], cfg.norm_eps, plus_one=True)
+        ck, cv = attn_mod.encode_cross_kv(p["xattn"], cfg, enc)
+        h = h + attn_mod.cross_attention_forward(p["xattn"], cfg, a, (ck, cv))
+        m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+        h = h + apply_mlp(p["mlp"], m, cfg.mlp_variant)
+        return constrain_batch(h), (AttnCache(k=kk, v=vv, pos_buf=pos_buf), ck, cv)
+
+    x, (self_cache, cross_k, cross_v) = jax.lax.scan(dec_block, x,
+                                                     params["dec_blocks"])
+    cache["blocks"] = {"s0": self_cache}
+    cache["cross_k"], cache["cross_v"] = cross_k, cross_v
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    logits = unembed(params["embed"], x[:, -1:], cap=cfg.final_softcap)
+    return logits, cache
+
+
+# ==================================================================== decode
+
+
+def _prefer_carry_decode(cfg: ModelConfig, cache) -> bool:
+    """Carry-based decode (column writes) wins only when every attention
+    cache is kv-head sharded ('kv' layout); otherwise the xs/ys path
+    measured better (EXPERIMENTS.md §Perf pair 1 iterations 2-3)."""
+    from repro.sharding import ctx, specs as sp
+    mesh = ctx.current_mesh()
+    if mesh is None:
+        return True  # single device: equivalent; carry is the tested path
+    slots = list(cache.get("blocks", {}).values()) + \
+        list(cache.get("trailing", {}).values())
+    attn_slots = [s for s in slots if isinstance(s, AttnCache)]
+    if not attn_slots or any(isinstance(s, MLACache) for s in slots):
+        return False
+    return all(
+        sp.decode_cache_layout(s.k.shape[3], s.k.shape[2], mesh) == "kv"
+        for s in attn_slots)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """One decode step.  token [B, 1] int32 -> (logits [B,1,V], new cache)."""
+    pos = cache["pos"]
+    b = token.shape[0]
+    x = constrain_batch(embed(params["embed"], token,
+                              scale_by_sqrt_dim=cfg.embed_scale,
+                              adtype=cfg.adtype))
+    if not cfg.use_rope:
+        pe = sinusoidal_positions(1, cfg.d_model, x.dtype)  # position folded below
+        # use true position via direct computation
+        angle_pos = pos.astype(jnp.float32)
+        i = jnp.arange(cfg.d_model // 2).astype(jnp.float32)
+        ang = angle_pos / jnp.power(10_000.0, 2 * i / cfg.d_model)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None].astype(x.dtype)
+        x = x + pe
+        rope_pos = jnp.zeros((), jnp.int32)
+    else:
+        rope_pos = pos
+
+    if cfg.family == "encdec":
+        return _encdec_decode(params, cfg, x, cache, rope_pos)
+
+    def run_layout_ys(x, slot_params_dict, slot_cache_dict, layout):
+        """Scan with caches as xs/ys (each step reads and re-emits its
+        layer's cache slice).  Measured best for seq-sharded / replicated
+        cache layouts and pure-state stacks, where the carry variant's
+        column-DUS crosses a sharded dim (GSPMD full-buffer select) or the
+        f32 carry round-trip dominates (see EXPERIMENTS.md §Perf pair 1)."""
+
+        def block(h, inp):
+            slot_params, slot_cache = inp
+            new_cache = {}
+            for i, kind in enumerate(layout):
+                p = slot_params[f"s{i}"]
+                c = slot_cache[f"s{i}"]
+                ck = resolve_kind(cfg, kind)
+                hin = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+                if ck == "mla":
+                    o, cc, kr = attn_mod.mla_decode(p["mla"], cfg, hin, c.c,
+                                                    c.kr, pos)
+                    new_cache[f"s{i}"] = MLACache(c=cc, kr=kr)
+                elif ck in ("attn", "local"):
+                    window = cfg.sliding_window if kind == "local" else None
+                    if attn_mod.use_sharded_decode(cfg, c.k.shape[1]):
+                        o, kv, pb = attn_mod.attention_decode_sharded(
+                            p["attn"], cfg, hin, KVEntry(c.k, c.v),
+                            c.pos_buf, pos, window=window)
+                    else:
+                        o, kv, pb = attn_mod.attention_decode(
+                            p["attn"], cfg, hin, KVEntry(c.k, c.v),
+                            c.pos_buf, pos, window=window)
+                    new_cache[f"s{i}"] = AttnCache(k=kv.k, v=kv.v, pos_buf=pb)
+                elif ck == "rec":
+                    o, st = rec_mod.rec_decode_step(p["rec"], cfg, hin, c)
+                    new_cache[f"s{i}"] = st
+                elif ck == "ssm":
+                    o, st = ssm_mod.ssm_decode_step(p["ssm"], cfg, hin, c)
+                    new_cache[f"s{i}"] = st
+                    h = h + o
+                    continue
+                if cfg.post_norm:
+                    o = rms_norm(o, p["norm1b"], cfg.norm_eps, plus_one=True)
+                h = h + o
+                m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+                if "moe" in p:
+                    m = moe_mod.apply_moe(p["moe"], cfg, m)
+                else:
+                    m = apply_mlp(p["mlp"], m, cfg.mlp_variant)
+                if cfg.post_norm:
+                    m = rms_norm(m, p["norm2b"], cfg.norm_eps, plus_one=True)
+                h = h + m
+            return constrain_batch(h), new_cache
+
+        x, new_caches = jax.lax.scan(block, x, (slot_params_dict,
+                                                slot_cache_dict))
+        return x, new_caches
+
+    def run_layout_carry(x, slot_params_dict, slot_cache_dict, layout):
+        """Scan over blocks with the caches as scan CARRY.
+
+        §Perf iteration 2: carrying the stacked caches (instead of scanning
+        them as xs/ys) lets each step write only the new token's K/V COLUMN
+        via dynamic-update-slice — per-step cache writes drop from the full
+        per-layer slice to one column, leaving reads (the true decode
+        roofline floor) as the only large term.
+        """
+        n_blocks = jax.tree_util.tree_leaves(slot_params_dict)[0].shape[0]
+
+        def idx_slice(tree, idx):
+            return jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0,
+                                                       keepdims=False), tree)
+
+        def block(carry, inp):
+            h, caches = carry
+            slot_params, idx = inp
+            for i, kind in enumerate(layout):
+                p = slot_params[f"s{i}"]
+                cfull = caches[f"s{i}"]
+                ck = resolve_kind(cfg, kind)
+                hin = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+                if ck == "mla":
+                    c_old = jax.lax.dynamic_index_in_dim(cfull.c, idx, 0, False)
+                    kr_old = jax.lax.dynamic_index_in_dim(cfull.kr, idx, 0, False)
+                    o, c_col, kr_col = attn_mod.mla_decode_v2(
+                        p["mla"], cfg, hin, c_old, kr_old, pos)
+                    caches[f"s{i}"] = MLACache(
+                        c=jax.lax.dynamic_update_slice(
+                            cfull.c, c_col[None].astype(cfull.c.dtype),
+                            (idx, 0, pos, 0)),
+                        kr=jax.lax.dynamic_update_slice(
+                            cfull.kr, kr_col[None].astype(cfull.kr.dtype),
+                            (idx, 0, pos, 0)))
+                elif ck in ("attn", "local"):
+                    window = cfg.sliding_window if kind == "local" else None
+                    ck_old = jax.lax.dynamic_index_in_dim(cfull.k, idx, 0, False)
+                    cv_old = jax.lax.dynamic_index_in_dim(cfull.v, idx, 0, False)
+                    pb_old = jax.lax.dynamic_index_in_dim(cfull.pos_buf, idx,
+                                                          0, False)
+                    sharded = attn_mod.use_sharded_decode(cfg, ck_old.shape[1])
+                    o, k_col, v_col, slot = attn_mod.attention_decode_v2(
+                        p["attn"], cfg, hin, ck_old, cv_old, pb_old, pos,
+                        window=window, sharded=sharded,
+                        rope_pos=(jnp.zeros((), jnp.int32)
+                                  if not cfg.use_rope else None))
+                    caches[f"s{i}"] = AttnCache(
+                        k=jax.lax.dynamic_update_slice(
+                            cfull.k, k_col[None].astype(cfull.k.dtype),
+                            (idx, 0, slot, 0, 0)),
+                        v=jax.lax.dynamic_update_slice(
+                            cfull.v, v_col[None].astype(cfull.v.dtype),
+                            (idx, 0, slot, 0, 0)),
+                        pos_buf=jax.lax.dynamic_update_slice(
+                            cfull.pos_buf,
+                            jnp.full((1, 1), pos, cfull.pos_buf.dtype),
+                            (idx, slot)))
+                elif ck == "rec":
+                    st_old = idx_slice(cfull, idx)
+                    o, st = rec_mod.rec_decode_step(p["rec"], cfg, hin, st_old)
+                    caches[f"s{i}"] = jax.tree.map(
+                        lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                            full, new[None].astype(full.dtype), idx, axis=0),
+                        cfull, st)
+                elif ck == "ssm":
+                    st_old = idx_slice(cfull, idx)
+                    o, st = ssm_mod.ssm_decode_step(p["ssm"], cfg, hin, st_old)
+                    caches[f"s{i}"] = jax.tree.map(
+                        lambda full, new: jax.lax.dynamic_update_slice_in_dim(
+                            full, new[None].astype(full.dtype), idx, axis=0),
+                        cfull, st)
+                    h = h + o
+                    continue
+                if cfg.post_norm:
+                    o = rms_norm(o, p["norm1b"], cfg.norm_eps, plus_one=True)
+                h = h + o
+                m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+                if "moe" in p:
+                    m = moe_mod.apply_moe(p["moe"], cfg, m)
+                else:
+                    m = apply_mlp(p["mlp"], m, cfg.mlp_variant)
+                if cfg.post_norm:
+                    m = rms_norm(m, p["norm2b"], cfg.norm_eps, plus_one=True)
+                h = h + m
+            return (constrain_batch(h), caches), None
+
+        (x, new_caches), _ = jax.lax.scan(
+            block, (x, slot_cache_dict),
+            (slot_params_dict, jnp.arange(n_blocks)))
+        return x, new_caches
+
+    run_layout = (run_layout_carry if _prefer_carry_decode(cfg, cache)
+                  else run_layout_ys)
+    new_cache = {"pos": pos + 1}
+    x, new_cache["blocks"] = run_layout(x, params["blocks"], cache["blocks"],
+                                        cfg.block_layout)
+    if cfg.trailing_layout:
+        x, new_cache["trailing"] = run_layout(x, params["trailing"],
+                                              cache["trailing"],
+                                              cfg.trailing_layout)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    return logits, new_cache
+
+
+def _encdec_decode(params, cfg, x, cache, pos):
+    positions = jnp.zeros((x.shape[0], 1), jnp.int32)
+
+    def block(h, inp):
+        p, c, ck, cv = inp
+        a = rms_norm(h, p["norm1"], cfg.norm_eps, plus_one=True)
+        o, kv, pb = attn_mod.attention_decode(
+            p["attn"], cfg, a, KVEntry(c.k, c.v), c.pos_buf, cache["pos"],
+            rope_pos=jnp.zeros((), jnp.int32))
+        h = h + o
+        a = rms_norm(h, p["norm_x"], cfg.norm_eps, plus_one=True)
+        h = h + attn_mod.cross_attention_forward(p["xattn"], cfg, a, (ck, cv))
+        m = rms_norm(h, p["norm2"], cfg.norm_eps, plus_one=True)
+        h = h + apply_mlp(p["mlp"], m, cfg.mlp_variant)
+        return constrain_batch(h), AttnCache(k=kv.k, v=kv.v, pos_buf=pb)
+
+    x, new_self = jax.lax.scan(
+        block, x, (params["dec_blocks"], cache["blocks"]["s0"],
+                   cache["cross_k"], cache["cross_v"]))
+    new_cache = dict(cache)
+    new_cache["pos"] = cache["pos"] + 1
+    new_cache["blocks"] = {"s0": new_self}
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps, plus_one=True)
+    logits = unembed(params["embed"], x, cap=cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer: top-k routing with two dispatch backends.
+
+* ``moe_ragged`` — dropless sort + ``jax.lax.ragged_dot`` (exact; CPU tests
+  and single-device runs.  XLA:CPU decomposes ragged_dot into dense
+  per-group dots, so it cannot be used at production scale in the dry-run).
+* ``moe_capacity_local`` — capacity-bounded expert scan over locally-sorted
+  tokens, run under ``shard_map`` (manual over the batch axes — tokens stay
+  device-local, no global sort / all-to-all; auto over 'model' — expert ff
+  dims stay tensor-parallel).  FLOPs = capacity_factor x active FLOPs.
+
+Expert weights live in one stacked array [E, d, ff] with the ff dim sharded
+over the 'model' mesh axis (tensor-parallel experts — legitimate here
+because the assigned MoE archs have small experts: d_ff 512 and 1408).
+Shared experts (DeepSeek-V2 style) are a plain always-on MLP of width
+``num_shared_experts * moe_d_ff``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .base import ModelConfig
+from .layers import dense_init, init_mlp, apply_mlp
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),  # router kept fp32
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], d, cfg.num_shared_experts * ff, "swiglu", dtype)
+    return p
+
+
+def route_topk(router_w, x_flat, top_k: int):
+    """Returns (weights [T,k], expert_ids [T,k], router_probs [T,E])."""
+    logits = (x_flat.astype(jnp.float32) @ router_w)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)  # renormalize
+    return weights, ids, probs
+
+
+def _dispatch(cfg: ModelConfig, router_w, x_flat):
+    """Route + stable sort by expert id."""
+    t = x_flat.shape[0]
+    k, e = cfg.moe_top_k, cfg.num_experts
+    weights, ids, probs = route_topk(router_w, x_flat, k)
+    flat_ids = ids.reshape(t * k)
+    flat_w = weights.reshape(t * k)
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[order]
+    group_sizes = jnp.bincount(sorted_ids, length=e).astype(jnp.int32)
+    return token_idx[order], flat_w[order], ids, group_sizes, probs
+
+
+def _aux_loss(cfg: ModelConfig, ids, probs, t):
+    """Switch-style load-balance loss: E * sum_e f_e * P_e / k."""
+    counts = jnp.zeros((t, cfg.num_experts)).at[
+        jnp.arange(t)[:, None], ids].set(1.0)
+    f = counts.mean(axis=0)
+    pbar = probs.mean(axis=0)
+    return cfg.num_experts * jnp.sum(f * pbar) / cfg.moe_top_k
+
+
+def moe_ragged(p, cfg: ModelConfig, x_flat):
+    t, d = x_flat.shape
+    adt = x_flat.dtype
+    sorted_tok, sorted_w, ids, group_sizes, probs = _dispatch(
+        cfg, p["router"], x_flat)
+    x_sorted = jnp.take(x_flat, sorted_tok, axis=0)
+    gate = jax.lax.ragged_dot(x_sorted, p["w_gate"].astype(adt), group_sizes)
+    up = jax.lax.ragged_dot(x_sorted, p["w_up"].astype(adt), group_sizes)
+    h = jax.nn.silu(gate) * up
+    y_sorted = jax.lax.ragged_dot(h, p["w_down"].astype(adt), group_sizes)
+    out = jnp.zeros((t, d), adt).at[sorted_tok].add(
+        y_sorted * sorted_w.astype(adt)[:, None])
+    return out, _aux_loss(cfg, ids, probs, t)
+
+
+def moe_capacity_local(p, cfg: ModelConfig, x_flat):
+    """Capacity-bounded expert scan over locally-sorted tokens.
+
+    Each expert processes a static ``capacity`` window starting at its group
+    offset; ascending expert order makes window overlaps self-correcting (a
+    later expert's write overrides the masked tail of the previous window).
+    Tokens beyond capacity are dropped (standard capacity-factor semantics).
+    """
+    t, d = x_flat.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    adt = x_flat.dtype
+    sorted_tok, sorted_w, ids, group_sizes, probs = _dispatch(
+        cfg, p["router"], x_flat)
+    cap = int(-(-t * k * cfg.moe_capacity_factor // e))  # ceil
+    cap = max(((cap + 7) // 8) * 8, 8)
+    offs = jnp.cumsum(group_sizes) - group_sizes
+    xs = jnp.take(x_flat, sorted_tok, axis=0)
+    xs = jnp.pad(xs, ((0, cap), (0, 0)))  # no tail clamping
+    y0 = jnp.zeros_like(xs)
+
+    def expert(y, inp):
+        wg, wu, wd, off, size = inp
+        rows = jax.lax.dynamic_slice_in_dim(xs, off, cap, axis=0)
+        h = jax.nn.silu(rows @ wg) * (rows @ wu)
+        o = h @ wd
+        mask = (jnp.arange(cap) < size)[:, None].astype(adt)
+        return jax.lax.dynamic_update_slice_in_dim(y, o * mask, off, axis=0), None
+
+    y, _ = jax.lax.scan(
+        expert, y0,
+        (p["w_gate"].astype(adt), p["w_up"].astype(adt),
+         p["w_down"].astype(adt), offs, group_sizes))
+    y = y[:t * k]
+    out = jnp.zeros((t, d), adt).at[sorted_tok].add(
+        y * sorted_w.astype(adt)[:, None])
+    return out, _aux_loss(cfg, ids, probs, t)
+
+
+def apply_moe(p, cfg: ModelConfig, x, *, return_aux: bool = False):
+    """x [B,S,d] -> [B,S,d] (+ aux load-balance loss)."""
+    from repro.sharding import ctx  # local import to avoid cycles
+
+    b, s, d = x.shape
+    x_flat = x.reshape(b * s, d)
+    baxes, mesh = ctx.batch_axes(), ctx.current_mesh()
+    routed = {k_: p[k_] for k_ in ("router", "w_gate", "w_up", "w_down")}
+    n_dev = mesh.devices.size if mesh is not None else 1
+    if baxes and mesh is not None and x_flat.shape[0] % n_dev == 0:
+        # Manual over batch axes AND 'model': expert ff dims stay
+        # tensor-parallel, every expert's down-projection emits PARTIAL
+        # sums, and a SINGLE psum per layer reduces them (§Perf: vs. one
+        # all-reduce per expert when the reduction is left to GSPMD —
+        # num_experts x less collective volume).
+        tp = ("model",) if "model" in mesh.axis_names \
+            and cfg.moe_d_ff % mesh.shape["model"] == 0 else ()
+        manual = set(baxes) | set(tp)
+        ffspec = tp[0] if tp else None
+        in_specs = (
+            {"router": P(None, None),
+             "w_gate": P(None, None, ffspec),
+             "w_up": P(None, None, ffspec),
+             "w_down": P(None, ffspec, None)},
+            P(baxes, None),
+        )
+
+        def local_fn(pp, xf):
+            out, aux = moe_capacity_local(pp, cfg, xf)
+            if tp:
+                out = jax.lax.psum(out, tp[0])
+                aux = jax.lax.pmean(aux, tp[0])
+            return out, jax.lax.pmean(aux, baxes)
+
+        out, aux = jax.shard_map(
+            local_fn, mesh=mesh, in_specs=in_specs,
+            out_specs=(P(baxes, None), P()),
+            axis_names=manual, check_vma=False)(routed, x_flat)
+    else:
+        out, aux = moe_ragged(p, cfg, x_flat)
+    if cfg.num_shared_experts:
+        out = out + apply_mlp(p["shared"], x_flat, "swiglu")
+    out = out.reshape(b, s, d)
+    if return_aux:
+        return out, aux
+    return out

@@ -1,0 +1,98 @@
+"""RecurrentGemma recurrent block: conv1d + RG-LRU gated linear recurrence.
+
+Block (Griffin [arXiv:2402.19427]):
+  branch1: W_gate(x) -> GeLU
+  branch2: W_x(x) -> causal depthwise conv1d (width 4) -> RG-LRU
+  out    : W_out(branch1 * branch2)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import dense_init
+from repro.kernels.rglru_scan import ref as lru_ref
+
+
+class RecState(NamedTuple):
+    h: jax.Array     # [bsz, w] fp32 recurrence state
+    conv: jax.Array  # [bsz, conv_width-1, w]
+
+
+def init_rec(key, cfg: ModelConfig, dtype):
+    d, w = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 6)
+    lam = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9, 0.999)
+    # init Lambda so that a = lam^c at r=1 (griffin init)
+    log_lambda = jnp.log(jnp.expm1(-jnp.log(lam) / lru_ref.RGLRU_C))
+    return {
+        "w_gate": dense_init(ks[0], (d, w), dtype),
+        "w_x": dense_init(ks[1], (d, w), dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, w), dtype, scale=0.5),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lru_wa": dense_init(ks[3], (w, w), dtype),
+        "lru_ba": jnp.zeros((w,), jnp.float32),
+        "lru_wx": dense_init(ks[4], (w, w), dtype),
+        "lru_bx": jnp.zeros((w,), jnp.float32),
+        "log_lambda": log_lambda,
+        "w_out": dense_init(jax.random.fold_in(key, 7), (w, d), dtype),
+    }
+
+
+def _conv(x, w, b, history=None):
+    """Causal depthwise conv width K; optional [bsz, K-1, w] history."""
+    k = w.shape[0]
+    s = x.shape[1]
+    pad = (jnp.concatenate([history, x], axis=1) if history is not None
+           else jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0))))
+    pad = pad[:, -(s + k - 1):]
+    return sum(pad[:, i:i + s] * w[i][None, None] for i in range(k)) + b[None, None]
+
+
+def rec_forward(p, cfg: ModelConfig, x, *, return_state: bool = False,
+                init_state: RecState | None = None):
+    """x [bsz, s, d] -> [bsz, s, d]."""
+    adt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(adt), approximate=True)
+    u = x @ p["w_x"].astype(adt)
+    u_c = _conv(u, p["conv_w"].astype(adt), p["conv_b"].astype(adt),
+                init_state.conv.astype(adt) if init_state is not None else None)
+    h = lru_ref.rglru(u_c, p["lru_wa"], p["lru_ba"], p["lru_wx"], p["lru_bx"],
+                      p["log_lambda"],
+                      init_state.h if init_state is not None else None,
+                      return_final_state=return_state)
+    if return_state:
+        h, h_final = h
+    out = (gate * h) @ p["w_out"].astype(adt)
+    if return_state:
+        kw = p["conv_w"].shape[0]
+        full = (jnp.concatenate([init_state.conv.astype(adt), u], axis=1)
+                if init_state is not None else
+                jnp.pad(u, ((0, 0), (kw - 1, 0), (0, 0))))
+        return out, RecState(h=h_final, conv=full[:, -(kw - 1):])
+    return out
+
+
+def rec_init_state(cfg: ModelConfig, bsz: int, dtype) -> RecState:
+    return RecState(
+        h=jnp.zeros((bsz, cfg.lru_width), jnp.float32),
+        conv=jnp.zeros((bsz, cfg.conv_width - 1, cfg.lru_width), dtype),
+    )
+
+
+def rec_decode_step(p, cfg: ModelConfig, x, state: RecState):
+    """x [bsz, 1, d] -> (out [bsz, 1, d], new state)."""
+    adt = x.dtype
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(adt), approximate=True)
+    u = x @ p["w_x"].astype(adt)  # [bsz,1,w]
+    conv_in = jnp.concatenate([state.conv.astype(adt), u], axis=1)  # [b,K,w]
+    w = p["conv_w"].astype(adt)
+    u_c = (jnp.einsum("bkc,kc->bc", conv_in, w) + p["conv_b"].astype(adt))[:, None]
+    y, h_new = lru_ref.rglru_decode_step(
+        u_c[:, 0], p["lru_wa"], p["lru_ba"], p["lru_wx"], p["lru_bx"],
+        p["log_lambda"], state.h)
+    out = (gate * y[:, None]) @ p["w_out"].astype(adt)
+    return out, RecState(h=h_new, conv=conv_in[:, 1:])

@@ -1,0 +1,132 @@
+"""Mamba-2 block (SSD / state-space duality), attention-free.
+
+Layer structure (n_groups = 1):
+  in_proj: d -> [z (d_in), x (d_in), B (N), C (N), dt (H)]
+  causal depthwise conv width-4 over (x, B, C)
+  SSD scan over heads (P = headdim, N = ssm_state)
+  gated RMSNorm(y * silu(z)), out_proj: d_in -> d
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import dense_init, rms_norm
+from repro.kernels.ssd_scan import ref as ssd_ref
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array   # [b, h, p, n] fp32
+    conv: jax.Array  # [b, conv_width-1, conv_channels]
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d, d_in, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * n + h
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_channels(cfg)), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_channels(cfg),), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """xbc [bsz, s, ch], depthwise causal conv, width K.  w [K, ch]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None] for i in range(k))
+    return jax.nn.silu(out + b[None, None])
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt = zxbcdt[..., d_in + d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def ssm_forward(p, cfg: ModelConfig, u, *, return_state: bool = False,
+                init_state: SSMState | None = None):
+    """u [bsz, s, d] -> [bsz, s, d]."""
+    bsz, s, _ = u.shape
+    d_in, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    adt = u.dtype
+    zxbcdt = u @ p["in_proj"].astype(adt)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    if init_state is not None:
+        pad = jnp.concatenate([init_state.conv.astype(adt), xbc], axis=1)
+        k = p["conv_w"].shape[0]
+        conv_in = pad[:, -(s + k - 1):]
+        # re-implement causal conv with provided history
+        out = sum(conv_in[:, i:i + s] * p["conv_w"].astype(adt)[i][None, None]
+                  for i in range(k))
+        xbc_c = jax.nn.silu(out + p["conv_b"].astype(adt)[None, None])
+    else:
+        xbc_c = _causal_conv(xbc, p["conv_w"].astype(adt), p["conv_b"].astype(adt))
+    x = xbc_c[..., :d_in].reshape(bsz, s, h, pd)
+    B = xbc_c[..., d_in:d_in + n]
+    C = xbc_c[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])
+    y = ssd_ref.ssd_chunked(
+        x, dt, A, B, C, p["D"], chunk=cfg.ssm_chunk,
+        init_state=init_state.ssm if init_state is not None else None,
+        return_final_state=return_state)
+    if return_state:
+        y, final = y
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(adt), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(adt)
+    if return_state:
+        kw = p["conv_w"].shape[0]
+        full = (jnp.concatenate([init_state.conv.astype(adt), xbc], axis=1)
+                if init_state is not None else
+                jnp.pad(xbc, ((0, 0), (kw - 1, 0), (0, 0))))
+        conv_state = full[:, -(kw - 1):]
+        return out, SSMState(ssm=final, conv=conv_state)
+    return out
+
+
+def ssm_init_state(cfg: ModelConfig, bsz: int, dtype) -> SSMState:
+    return SSMState(
+        ssm=jnp.zeros((bsz, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((bsz, cfg.ssm_conv_width - 1, conv_channels(cfg)), dtype),
+    )
+
+
+def ssm_decode_step(p, cfg: ModelConfig, u, state: SSMState):
+    """u [bsz, 1, d] -> (out [bsz, 1, d], new state)."""
+    bsz = u.shape[0]
+    d_in, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    adt = u.dtype
+    zxbcdt = u @ p["in_proj"].astype(adt)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    # rolling conv state: [b, K-1, ch] + new token
+    conv_in = jnp.concatenate([state.conv.astype(adt), xbc], axis=1)  # [b,K,ch]
+    w = p["conv_w"].astype(adt)
+    out = jnp.einsum("bkc,kc->bc", conv_in, w)
+    xbc_c = jax.nn.silu(out + p["conv_b"].astype(adt))[:, None]  # [b,1,ch]
+    x = xbc_c[..., :d_in].reshape(bsz, h, pd)
+    B = xbc_c[:, 0, d_in:d_in + n]
+    C = xbc_c[:, 0, d_in + n:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_ref.ssd_decode_step(x, dtv, A, B, C, p["D"], state.ssm)
+    y = y.reshape(bsz, 1, d_in)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(adt), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(adt)
+    return out, SSMState(ssm=new_ssm, conv=conv_in[:, 1:])

@@ -1,0 +1,87 @@
+"""Batched serving engine: prefill + decode over any model backend.
+
+A ``Backend`` wraps (config, params, jitted prefill/decode) and serves
+batches of requests; the pool layer (pool.py) profiles backends and lets the
+ECORE gateway route requests among them.  On this CPU container backends run
+reduced configs on the host mesh; on a TPU pod the same code runs the full
+configs under the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, decode_step, init_params, prefill
+from repro.data.tokens import modality_inputs
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] int32
+    max_new_tokens: int = 8
+    # complexity metadata (the serving analog of the paper's object count):
+    group: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray
+    prefill_s: float
+    decode_s: float
+    backend: str
+
+
+class Backend:
+    """One (model x placement) pair exposing an inference API."""
+
+    def __init__(self, name: str, cfg: ModelConfig, params=None, *,
+                 max_batch: int = 8, max_seq: int = 256, seed: int = 0):
+        self.name = name
+        self.cfg = cfg
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(seed))
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self._prefill = jax.jit(
+            lambda p, t, pe: prefill(p, cfg, t, pe, max_seq=max_seq))
+        self._decode = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+        self._rng = np.random.default_rng(seed)
+
+    def serve_batch(self, requests: List[Request]) -> List[Result]:
+        """Greedy-decode a batch of requests (piggybacked, like the paper's
+        Locust loop: one batch at a time)."""
+        assert requests
+        b = len(requests)
+        max_prompt = max(len(r.prompt) for r in requests)
+        tokens = np.zeros((b, max_prompt), np.int32)
+        for i, r in enumerate(requests):  # left-pad-free simple right align
+            tokens[i, :len(r.prompt)] = r.prompt % self.cfg.vocab_size
+        extra = modality_inputs(self.cfg, b, self._rng)
+        pe = extra.get("prefix_embeds")
+
+        t0 = time.perf_counter()
+        logits, cache = self._prefill(self.params, jnp.asarray(tokens), pe)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        jax.block_until_ready(next_tok)
+        t1 = time.perf_counter()
+
+        max_new = max(r.max_new_tokens for r in requests)
+        out = [next_tok]
+        for _ in range(max_new - 1):
+            logits, cache = self._decode(self.params, next_tok, cache)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(next_tok)
+        jax.block_until_ready(next_tok)
+        t2 = time.perf_counter()
+
+        gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+        return [Result(uid=r.uid, tokens=gen[i], prefill_s=t1 - t0,
+                       decode_s=t2 - t1, backend=self.name)
+                for i, r in enumerate(requests)]

@@ -1,0 +1,58 @@
+"""Trace-time activation-sharding hints.
+
+GSPMD occasionally prefers propagating a *weight* sharding into activations
+(e.g. the FSDP-sharded embedding table's d_model axis), silently replicating
+the batch dim across the mesh.  Model code calls ``constrain_batch`` at block
+boundaries; the launcher activates the hints for the duration of tracing via
+``activation_sharding(batch_axes)``.  Outside that context (CPU tests,
+single-device runs) the calls are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_batch_axes: contextvars.ContextVar[Optional[Tuple[str, ...]]] = \
+    contextvars.ContextVar("repro_batch_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: Tuple[str, ...], n_shards: int,
+                        mesh=None, mode: str = "train"):
+    token = _batch_axes.set((tuple(batch_axes), n_shards, mesh, mode))
+    try:
+        yield
+    finally:
+        _batch_axes.reset(token)
+
+
+def batch_axes() -> Optional[Tuple[str, ...]]:
+    v = _batch_axes.get()
+    return v[0] if v else None
+
+
+def current_mesh():
+    v = _batch_axes.get()
+    return v[2] if v else None
+
+
+def current_mode() -> str:
+    v = _batch_axes.get()
+    return v[3] if v and len(v) > 3 else "train"
+
+
+def constrain_batch(x):
+    """Pin dim0 of ``x`` to the batch mesh axes (no-op outside the context
+    or when the dim does not divide)."""
+    v = _batch_axes.get()
+    if not v or x.ndim == 0:
+        return x
+    axes, n = v[0], v[1]
+    if x.shape[0] % n != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, P(axes, *([None] * (x.ndim - 1))))

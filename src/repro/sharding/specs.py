@@ -1,0 +1,183 @@
+"""PartitionSpec rules for params, optimizer state, inputs, and caches.
+
+Baseline scheme (MaxText-style 2-D):
+  * 'data'  axis = batch parallelism AND FSDP shard axis for training params
+  * 'model' axis = tensor parallelism (heads / ff / vocab / experts-ff)
+  * 'pod'   axis = pure data parallelism across pods (params replicated)
+
+For serving (``mode='serve'``) the FSDP axis is dropped: params are
+replicated over 'data' and sharded over 'model' only, so decode steps incur
+no per-step parameter all-gathers.  The §Perf hillclimb iterates on these
+choices; this module is the paper-faithful baseline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (regex on param path, spec for the *unstacked* param)
+_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    # embeddings / unembedding
+    (r"embed/table$", ("model", "data")),
+    (r"(vision_proj|frame_proj)$", (None, "data")),
+    # attention
+    (r"attn/w[qkv]$", ("data", "model")),
+    (r"attn/wo$", ("model", "data")),
+    (r"attn/b[qkv]$", ("model",)),
+    (r"xattn/w[qkv]$", ("data", "model")),
+    (r"xattn/wo$", ("model", "data")),
+    # MLA
+    (r"mla/wq$", ("data", "model")),
+    (r"mla/w_dkv$", ("data", None)),
+    (r"mla/w_kr$", ("data", None)),
+    (r"mla/w_uk$", (None, "model")),
+    (r"mla/w_uv$", (None, "model")),
+    (r"mla/wo$", ("model", "data")),
+    # MLP
+    (r"mlp/w_(gate|up)$", ("data", "model")),
+    (r"mlp/w_down$", ("model", "data")),
+    (r"shared/w_(gate|up)$", ("data", "model")),
+    (r"shared/w_down$", ("model", "data")),
+    # MoE (experts stacked on dim 0; ff dim tensor-parallel)
+    (r"moe/router$", ("data", None)),
+    (r"moe/w_(gate|up)$", (None, "data", "model")),
+    (r"moe/w_down$", (None, "model", "data")),
+    # RG-LRU recurrent block
+    (r"rec/w_(gate|x)$", ("data", "model")),
+    (r"rec/w_out$", ("model", "data")),
+    (r"rec/lru_w[ax]$", ("data", "model")),
+    (r"rec/(lru_b[ax]|log_lambda|conv_b)$", ("model",)),
+    (r"rec/conv_w$", (None, "model")),
+    # Mamba2 SSD (baseline: data/fsdp sharding only; see §Perf for TP variant)
+    (r"ssm/in_proj$", ("data", None)),
+    (r"ssm/out_proj$", (None, "data")),
+    (r"ssm/conv_w$", (None, None)),
+)
+
+_STACKED = re.compile(r"(^|/)(blocks|trailing|enc_blocks|dec_blocks)(/|$)")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def spec_for_param(path_str: str, shape: Tuple[int, ...], *, mode: str,
+                   mesh: Optional[Mesh] = None) -> P:
+    ndim = len(shape)
+    stacked = bool(_STACKED.search(path_str))
+    base_ndim = ndim - 1 if stacked else ndim
+    spec: Optional[Tuple] = None
+    for pat, s in _RULES:
+        if re.search(pat, path_str):
+            spec = s
+            break
+    if spec is None or len(spec) != base_ndim:
+        spec = (None,) * base_ndim  # norms, scalars, odd shapes: replicate
+    if mode == "serve":  # drop FSDP axis
+        spec = tuple(None if s == "data" else s for s in spec)
+    if stacked:
+        spec = (None,) + spec
+    if mesh is not None:  # drop axes that do not divide the dim evenly
+        spec = tuple(
+            a if (a is None or (a in mesh.shape
+                                and shape[i] % mesh.shape[a] == 0)) else None
+            for i, a in enumerate(spec))
+    return P(*spec)
+
+
+def param_specs(params: Any, *, mode: str = "train",
+                mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree matching ``params``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [spec_for_param(_path_str(p), getattr(l, "shape", ()), mode=mode,
+                            mesh=mesh)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_axes(mesh: Mesh):
+    """The composite batch-sharding axis tuple for this mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh, global_batch: int, ndim: int) -> P:
+    """Shard dim 0 over (pod, data) when divisible, else replicate."""
+    axes = batch_axes(mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if global_batch % n == 0:
+        return P(axes, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def decode_cache_layout(num_kv_heads: int, seq: int, mesh: Mesh) -> str:
+    """How attention K/V caches use the 'model' axis at decode time.
+
+    'kv'   — kv_heads % model == 0: shard the KV-HEAD dim.  Attention and
+             the per-token column write are fully shard-local (best).
+    'seq'  — otherwise shard the SEQUENCE dim; attention runs as a
+             shard_map flash-decode with an [B,H,D]-sized partial-softmax
+             merge (§Perf); the column write crosses a sharded dim, which
+             GSPMD lowers to a masked full-slice select (the residual cost
+             visible in the roofline table).
+    'none' — neither divides: replicate over 'model'.
+    """
+    if "model" not in mesh.axis_names:
+        return "none"
+    m = mesh.shape["model"]
+    if num_kv_heads % m == 0:
+        return "kv"
+    if seq % m == 0:
+        return "seq"
+    return "none"
+
+
+def cache_specs(cache: Any, mesh: Mesh, global_batch: int) -> Any:
+    """Decode caches: batch over (pod, data); attention K/V use the 'model'
+    axis per ``decode_cache_layout``; states/pos bookkeeping replicated."""
+    mdl = "model" if "model" in mesh.axis_names else None
+
+    def spec(path, leaf):
+        nd = leaf.ndim
+        ps = _path_str(path)
+        if nd == 0 or ps.endswith("pos") or "pos_buf" in ps:
+            return P(*([None] * nd))
+        bspec = tuple(batch_spec(mesh, global_batch, nd - 1))
+        if ps.startswith("cross_"):  # [L, B, T(1500: not 16-divisible), KV, hd]
+            return P(None, *bspec)
+        if (ps.endswith("/k") or ps.endswith("/v")) and nd == 5:
+            # AttnCache k/v [n, B, W, KV, hd]
+            layout = decode_cache_layout(leaf.shape[3], leaf.shape[2], mesh)
+            if layout == "kv":
+                return P(None, bspec[0], None, mdl, None)
+            if layout == "seq":
+                return P(None, bspec[0], mdl, None, None)
+        if (ps.endswith("/c") or ps.endswith("/kr")) and nd == 4:
+            # MLACache [n, B, S, r]: latent is head-less; keep seq sharding
+            if mdl and leaf.shape[2] % mesh.shape["model"] == 0:
+                return P(None, bspec[0], mdl, None)
+        if nd >= 2:  # stacked states [n_blocks, B, ...]
+            return P(None, *bspec)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def shard(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,58 @@
+"""Beyond-paper features: multi-objective routers + dynamic profiling
+(the paper's own §6 future-work list)."""
+import pytest
+
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.core.router import (ParetoRouter, WeightedRouter, greedy_route)
+
+
+@pytest.fixture
+def table():
+    rows = []
+    for g in range(5):
+        # cheap-slow, fast-hungry, dominated, accurate
+        rows += [
+            ProfileEntry("cheap", "d1", g, 80.0, 20.0, 0.01),
+            ProfileEntry("fast", "d2", g, 80.0, 2.0, 0.05),
+            ProfileEntry("bad", "d3", g, 80.0, 25.0, 0.06),  # dominated
+            ProfileEntry("acc", "d4", g, 95.0, 30.0, 0.09),
+        ]
+    return ProfileTable(rows)
+
+
+def test_weighted_router_interpolates(table):
+    # energy-only == Algorithm 1
+    w_e = WeightedRouter(table, delta_map=100.0, w_energy=1.0, w_time=0.0)
+    assert w_e.route(estimated_count=0) == \
+        greedy_route(0, table, 100.0).pair == ("cheap", "d1")
+    # time-only -> fastest
+    w_t = WeightedRouter(table, delta_map=100.0, w_energy=0.0, w_time=1.0)
+    assert w_t.route(estimated_count=0) == ("fast", "d2")
+    # accuracy constraint still binds
+    w0 = WeightedRouter(table, delta_map=5.0, w_energy=1.0, w_time=0.0)
+    assert w0.route(estimated_count=0) == ("acc", "d4")
+
+
+def test_pareto_router_excludes_dominated(table):
+    r = ParetoRouter(table, delta_map=100.0)
+    # 'bad' is dominated by 'cheap' (energy) and 'fast' (time):
+    # the pick must come off the front
+    assert r.route(estimated_count=2) in [("cheap", "d1"), ("fast", "d2")]
+
+
+def test_dynamic_profile_ewma(table):
+    pair = ("cheap", "d1")
+    before = table.entry(pair, 0).time_ms
+    for _ in range(50):
+        table.observe(pair, 0, time_ms=100.0, alpha=0.2)
+    after = table.entry(pair, 0).time_ms
+    assert before < after <= 100.0
+    assert after > 95.0  # converges to the observed value
+    # routing adapts: cheap became slow; time-weighted router now avoids it
+    w = WeightedRouter(table, delta_map=100.0, w_energy=0.0, w_time=1.0)
+    assert w.route(estimated_count=0) == ("fast", "d2")
+
+
+def test_observe_unknown_pair_raises(table):
+    with pytest.raises(KeyError):
+        table.observe(("nope", "d9"), 0, time_ms=1.0)

@@ -1,0 +1,53 @@
+"""Dry-run machinery on a small simulated mesh (subprocess: jax device
+count is locked at first init, so the 8-device test must run isolated)."""
+import json
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax
+from repro.configs import get_config
+from repro.launch.dryrun import lower_combo
+from repro.launch import hlo_cost
+from repro.models.base import InputShape
+from repro.sharding import specs as sp
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+cfg = get_config("qwen2.5-3b").reduced(d_model=256, num_heads=8,
+                                       num_kv_heads=4, head_dim=32,
+                                       vocab_size=512, d_ff=512)
+out = {}
+for shape in (InputShape("t", 64, 8, "train"), InputShape("p", 64, 8, "prefill"),
+              InputShape("d", 64, 8, "decode")):
+    lowered = lower_combo(cfg, shape, mesh)
+    compiled = lowered.compile()
+    cost = hlo_cost.analyze(compiled.as_text())
+    mem = compiled.memory_analysis()
+    out[shape.kind] = {"flops": cost.flops, "bytes": cost.bytes,
+                       "coll": cost.coll_bytes,
+                       "temp": float(getattr(mem, "temp_size_in_bytes", 0))}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lowers_on_small_mesh():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=420,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stderr[-2000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    for kind in ("train", "prefill", "decode"):
+        assert out[kind]["flops"] > 0
+        assert out[kind]["bytes"] > 0
+    # training does ~3x the flops of prefill (fwd+bwd) on same token count
+    assert out["train"]["flops"] > 1.5 * out["prefill"]["flops"]
+    # training on a sharded mesh must communicate (FSDP gathers / grad AR)
+    assert out["train"]["coll"] > 0

@@ -1,0 +1,68 @@
+"""Estimator (ED/SF/OB) and scene-generator tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.core.estimators import (EdgeDetectionEstimator, OracleEstimator,
+                                   OutputBasedEstimator)
+from repro.detection import scenes as sc
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 8), st.integers(0, 10_000))
+def test_scene_invariants(count, seed):
+    s = sc.make_scene(np.random.default_rng(seed), count=count)
+    assert s.count == count == len(s.boxes) == len(s.classes)
+    assert s.image.shape == (sc.IMG, sc.IMG)
+    assert s.image.min() >= 0 and s.image.max() <= 1
+    for b in s.boxes:
+        assert 0 <= b[0] < b[2] <= sc.IMG
+        assert 0 <= b[1] < b[3] <= sc.IMG
+
+
+def test_balanced_sorted_structure():
+    ds = sc.balanced_sorted_dataset(per_group=5, seed=0)
+    assert len(ds) == 25
+    groups = [min(s.count, 4) for s in ds]
+    assert groups == sorted(groups)
+    assert groups[:5] == [0] * 5
+
+
+def test_video_temporal_continuity():
+    ds = sc.video_dataset(n_frames=60, seed=0)
+    counts = [s.count for s in ds]
+    jumps = [abs(a - b) for a, b in zip(counts, counts[1:])]
+    assert max(jumps) <= 1  # counts random-walk by one
+
+
+def test_ed_estimator_correlates():
+    scenes = sc.full_dataset(30, seed=3)
+    est = EdgeDetectionEstimator()
+    preds = []
+    for s in scenes:
+        c, flops = est.estimate(s.image)
+        assert flops > 0
+        preds.append(c)
+    true = np.array([s.count for s in scenes])
+    preds = np.array(preds)
+    # coarse but informative: correlation and bounded error
+    assert np.corrcoef(true, preds)[0, 1] > 0.5
+    assert np.abs(true - preds).mean() < 2.5
+
+
+def test_ob_estimator_reuses_feedback():
+    ob = OutputBasedEstimator(default=0)
+    img = np.zeros((8, 8), np.float32)
+    c, flops = ob.estimate(img)
+    assert c == 0 and flops == 0
+    ob.observe(3)
+    assert ob.estimate(img)[0] == 3
+    ob.reset()
+    assert ob.estimate(img)[0] == 0
+
+
+def test_oracle_estimator_passthrough():
+    o = OracleEstimator()
+    o.true_count = 5
+    assert o.estimate(np.zeros((4, 4)))[0] == 5

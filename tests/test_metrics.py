@@ -1,0 +1,58 @@
+"""mAP metric unit + property tests."""
+import numpy as np
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.metrics import MAPAccumulator, average_precision, iou
+
+
+def test_iou_basic():
+    a = np.array([0, 0, 10, 10.0])
+    assert iou(a, a) == 1.0
+    assert iou(a, np.array([20, 20, 30, 30.0])) == 0.0
+    assert abs(iou(a, np.array([5, 0, 15, 10.0])) - 1 / 3) < 1e-9
+
+
+def test_perfect_predictions_give_100():
+    acc = MAPAccumulator(2)
+    boxes = np.array([[0, 0, 10, 10], [20, 20, 40, 40.0]])
+    classes = np.array([0, 1])
+    acc.add_image(boxes, np.array([0.9, 0.8]), classes, boxes, classes)
+    assert acc.map() == 100.0
+
+
+def test_misses_reduce_map():
+    acc = MAPAccumulator(1)
+    gt = np.array([[0, 0, 10, 10], [30, 30, 40, 40.0]])
+    acc.add_image(gt[:1], np.array([0.9]), np.array([0]), gt, np.array([0, 0]))
+    assert 0 < acc.map() < 100
+
+
+def test_empty_scene_convention():
+    acc = MAPAccumulator(1)
+    none = np.zeros((0, 4))
+    acc.add_image(none, np.zeros(0), np.zeros(0), none, np.zeros(0))
+    assert acc.map() == 100.0
+    acc.add_image(np.array([[0, 0, 5, 5.0]]), np.array([0.9]), np.array([0]),
+                  none, np.zeros(0))
+    assert acc.map() == 50.0  # one clean empty image of two
+
+
+def test_false_positives_reduce_ap():
+    acc = MAPAccumulator(1)
+    gt = np.array([[0, 0, 10, 10.0]])
+    preds = np.array([[0, 0, 10, 10], [30, 30, 40, 40.0]])
+    acc.add_image(preds, np.array([0.5, 0.9]), np.array([0, 0]), gt,
+                  np.array([0]))
+    # high-scoring FP ranked first: AP < 1
+    assert acc.map() < 100.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(0.01, 1.0), min_size=1, max_size=20))
+def test_ap_bounds(scores):
+    tp = [True] * len(scores)
+    ap = average_precision(scores, tp, n_gt=len(scores))
+    assert abs(ap - 1.0) < 1e-9  # all TP, all gt found -> AP 1
+    ap2 = average_precision(scores, [False] * len(scores), n_gt=5)
+    assert ap2 == 0.0

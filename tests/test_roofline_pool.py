@@ -1,0 +1,77 @@
+"""Roofline dataclass + serving-pool profile construction tests."""
+import json
+
+import pytest
+
+from repro.launch.roofline import (CHIP_POWER_IDLE, CHIP_POWER_PEAK,
+                                   Roofline, count_params, model_flops)
+from repro.models.base import INPUT_SHAPES
+from repro.configs import get_config
+from repro.serving.pool import pool_table_from_dryrun
+
+
+def mk(flops=1e12, bytes_=1e11, coll=1e9, chips=256):
+    return Roofline(arch="a", shape="s", mesh="16x16", chips=chips,
+                    flops=flops, bytes_accessed=bytes_, coll_bytes=coll,
+                    coll_by_kind={}, per_device_memory=8e9,
+                    model_flops=flops * chips * 0.5)
+
+
+def test_terms_and_bottleneck():
+    r = mk(flops=197e12, bytes_=819e9, coll=50e9)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(1.0)
+    assert r.t_collective == pytest.approx(1.0)
+    r2 = mk(bytes_=819e9 * 10)
+    assert r2.bottleneck == "memory" and r2.t_step == pytest.approx(10.0)
+
+
+def test_useful_flops_ratio():
+    r = mk()
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_energy_monotone_in_utilization():
+    lo = mk(flops=1e10, bytes_=819e9)   # memory-bound, low util
+    hi = mk(flops=197e12 * 0.9, bytes_=819e9)  # near compute-bound
+    # same step time; higher utilization draws more power
+    p_lo = lo.energy_j / (lo.t_step * lo.chips)
+    p_hi = hi.energy_j / (hi.t_step * hi.chips)
+    assert CHIP_POWER_IDLE <= p_lo < p_hi <= CHIP_POWER_PEAK
+
+
+def test_model_flops_active_params():
+    cfg = get_config("granite-moe-1b-a400m")
+    c = count_params(cfg)
+    assert c["active"] < c["total"] * 0.5  # top-8 of 32 experts
+    t = model_flops(cfg, INPUT_SHAPES["train_4k"], c["total"], c["active"])
+    p = model_flops(cfg, INPUT_SHAPES["prefill_32k"], c["total"], c["active"])
+    assert t / p == pytest.approx(3.0)  # 6ND vs 2ND, same token count
+
+
+def test_pool_table_from_dryrun(tmp_path):
+    rows = [
+        {"status": "ok", "mesh": "16x16", "shape": "prefill_32k",
+         "arch": "llama3-8b", "t_step_s": 0.5, "energy_j": 100.0,
+         "params_active": 7_000_000_000},
+        {"status": "ok", "mesh": "16x16", "shape": "prefill_32k",
+         "arch": "mamba2-370m", "t_step_s": 0.05, "energy_j": 8.0,
+         "params_active": 320_000_000},
+        {"status": "skip", "mesh": "16x16", "shape": "prefill_32k",
+         "arch": "x"},
+        {"status": "ok", "mesh": "2x16x16", "shape": "prefill_32k",
+         "arch": "ignored", "t_step_s": 1, "energy_j": 1,
+         "params_active": 1},
+    ]
+    p = tmp_path / "d.jsonl"
+    p.write_text("\n".join(json.dumps(r) for r in rows))
+    table = pool_table_from_dryrun(str(p))
+    pairs = table.pairs()
+    assert ("llama3-8b", "pod-16x16") in pairs
+    assert ("mamba2-370m", "pod-16x16") in pairs
+    assert len(pairs) == 2  # skip + wrong-mesh rows excluded
+    # 5 buckets per backend
+    assert len(table.entries) == 10
+    # bigger model scores higher in the long bucket
+    assert table.entry(("llama3-8b", "pod-16x16"), 4).map_pct > \
+        table.entry(("mamba2-370m", "pod-16x16"), 4).map_pct

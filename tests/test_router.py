@@ -1,0 +1,108 @@
+"""Algorithm 1 unit tests + the Theorem 3.1 optimality property."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.groups import DEFAULT_GROUP_RULES, group_of
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.core.router import (GreedyEstimateRouter, HighestMAPPerGroupRouter,
+                               HighestMAPRouter, LowestEnergyRouter,
+                               LowestInferenceRouter, OracleRouter,
+                               RandomRouter, RoundRobinRouter, greedy_route)
+
+
+def table_from(rows):
+    return ProfileTable([ProfileEntry(*r) for r in rows])
+
+
+@pytest.fixture
+def toy_table():
+    # (model, device, group, mAP, time_ms, energy_mwh)
+    rows = []
+    for g in range(5):
+        rows += [
+            ("tiny", "devA", g, 50.0 - 4 * g, 5.0, 0.010),
+            ("mid", "devB", g, 55.0 - 2 * g, 9.0, 0.025),
+            ("big", "devC", g, 60.0, 20.0, 0.060),
+        ]
+    return table_from(rows)
+
+
+def test_greedy_group0_prefers_cheap_within_delta(toy_table):
+    # group 0: tiny=50, mid=55, big=60; delta=5 -> feasible {mid, big} ->
+    # mid is cheaper
+    e = greedy_route(0, toy_table, delta_map=5.0)
+    assert e.pair == ("mid", "devB")
+
+
+def test_greedy_delta0_is_accuracy_centric(toy_table):
+    e = greedy_route(0, toy_table, delta_map=0.0)
+    assert e.pair == ("big", "devC")
+
+
+def test_greedy_large_delta_is_energy_centric(toy_table):
+    e = greedy_route(0, toy_table, delta_map=100.0)
+    assert e.pair == ("tiny", "devA")
+
+
+def test_greedy_group_dependence(toy_table):
+    # group 4: tiny=34, mid=47, big=60; delta=5 -> only big
+    e = greedy_route(7, toy_table, delta_map=5.0)  # count 7 -> group 4
+    assert e.pair == ("big", "devC")
+
+
+def test_group_rules():
+    assert group_of(0) == 0
+    assert group_of(3) == 3
+    assert group_of(4) == 4
+    assert group_of(250) == 4
+
+
+# ---------------------------------------------------------- Theorem 3.1
+
+entry_strategy = st.tuples(
+    st.sampled_from(["m1", "m2", "m3", "m4"]),
+    st.sampled_from(["d1", "d2"]),
+    st.floats(0, 100, allow_nan=False),
+    st.floats(0.1, 100, allow_nan=False),
+    st.floats(1e-4, 1.0, allow_nan=False),
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    entries=st.lists(entry_strategy, min_size=1, max_size=20, unique_by=lambda e: (e[0], e[1])),
+    count=st.integers(0, 12),
+    delta=st.floats(0, 50, allow_nan=False),
+)
+def test_greedy_optimality(entries, count, delta):
+    """Theorem 3.1: the greedy pick is the global optimum of
+    min energy s.t. group match and mAP >= mAP_max - delta."""
+    rows = []
+    for m, d, mp, t, e in entries:
+        for g in range(5):
+            rows.append(ProfileEntry(m, d, g, mp, t, e))
+    table = ProfileTable(rows)
+    pick = greedy_route(count, table, delta)
+    g = group_of(count)
+    feasible = [r for r in table.for_group(g)
+                if r.map_pct >= max(x.map_pct for x in table.for_group(g)) - delta]
+    # exhaustive check: no feasible row has lower energy
+    assert pick in feasible
+    assert all(pick.energy_mwh <= r.energy_mwh for r in feasible)
+
+
+def test_baseline_routers(toy_table):
+    assert LowestEnergyRouter(toy_table).route() == ("tiny", "devA")
+    assert LowestInferenceRouter(toy_table).route() == ("tiny", "devA")
+    assert HighestMAPRouter(toy_table).route() == ("big", "devC")
+    assert HighestMAPPerGroupRouter(toy_table).route(true_count=0) == ("big", "devC")
+    rr = RoundRobinRouter(toy_table)
+    seq = [rr.route() for _ in range(6)]
+    assert seq[0] != seq[1] and seq[0] == seq[3]
+    rnd = RandomRouter(toy_table, seed=1)
+    assert all(rnd.route() in toy_table.pairs() for _ in range(10))
+    orc = OracleRouter(toy_table, delta_map=5.0)
+    assert orc.route(true_count=0) == ("mid", "devB")
+    gr = GreedyEstimateRouter(toy_table, delta_map=5.0)
+    assert gr.route(estimated_count=0) == ("mid", "devB")

@@ -1,0 +1,62 @@
+"""Sharding spec rules: divisibility, mode differences, batch specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import specs as sp
+from repro.sharding import ctx
+
+
+def test_spec_rules_basic():
+    s = sp.spec_for_param("blocks/s0/attn/wq", (2, 64, 128), mode="train")
+    assert s == P(None, "data", "model")
+    s = sp.spec_for_param("blocks/s0/attn/wq", (2, 64, 128), mode="serve")
+    assert s == P(None, None, "model")
+    s = sp.spec_for_param("embed/table", (1000, 64), mode="train")
+    assert s == P("model", "data")
+    s = sp.spec_for_param("final_norm", (64,), mode="train")
+    assert s == P(None)
+    s = sp.spec_for_param("blocks/s0/moe/w_gate", (4, 8, 64, 128), mode="train")
+    assert s == P(None, None, "data", "model")
+
+
+def test_divisibility_drops_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # fake a 16x16 mesh via explicit shape map
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    s = sp.spec_for_param("embed/table", (50280, 1024), mode="train",
+                          mesh=FakeMesh())
+    assert s == P(None, "data")  # 50280 % 16 != 0 -> vocab axis dropped
+    s = sp.spec_for_param("embed/table", (256000, 2560), mode="train",
+                          mesh=FakeMesh())
+    assert s == P("model", "data")
+
+
+def test_batch_spec():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    assert sp.batch_spec(mesh, 8, 2) == P(("data",), None)
+    class FakeMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+    assert sp.batch_spec(FakeMesh(), 64, 3) == P(("pod", "data"), None, None)
+    assert sp.batch_spec(FakeMesh(), 1, 2) == P(None, None)  # non-divisible
+
+
+def test_ctx_noop_outside_context():
+    x = jnp.ones((4, 8))
+    assert ctx.constrain_batch(x) is x
+    assert ctx.batch_axes() is None
+
+
+def test_ctx_skips_non_divisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with ctx.activation_sharding(("data",), 16, mesh=mesh):
+        x = jnp.ones((3, 8))  # 3 % 16 != 0
+        assert ctx.constrain_batch(x) is x
+        assert ctx.batch_axes() == ("data",)
+        assert ctx.current_mesh() is mesh

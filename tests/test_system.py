@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests: the full ECORE system over a real (small)
+testbed — trained detectors, profiling, estimators, routers, gateway.
+
+Uses a session-scoped quick testbed (2 detectors, fewer training steps) so
+the suite stays CPU-friendly; the full 8-model testbed is exercised by the
+benchmarks.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (EdgeDetectionEstimator, Gateway, GreedyEstimateRouter,
+                        HighestMAPPerGroupRouter, LowestEnergyRouter,
+                        OracleEstimator, OracleRouter, OutputBasedEstimator,
+                        ProfileTable)
+from repro.core.estimators import SSDFrontEndEstimator
+from repro.detection import scenes as sc
+from repro.detection.train import profile_pairs, train_detector
+from repro.detection.detectors import DETECTOR_CONFIGS
+
+
+@pytest.fixture(scope="session")
+def testbed():
+    params = {
+        "ssd_v1": train_detector(DETECTOR_CONFIGS["ssd_v1"], steps=250,
+                                 seed=0),
+        "yolov8_n": train_detector(DETECTOR_CONFIGS["yolov8_n"], steps=250,
+                                   seed=1),
+    }
+    table = profile_pairs(params,
+                          [("ssd_v1", "pi5_tpu"), ("ssd_v1", "orin_nano"),
+                           ("yolov8_n", "pi5_aihat")],
+                          val_scenes=sc.full_dataset(80, seed=42))
+    return params, table
+
+
+def _run(testbed, router_cls, estimator, scenes, delta=5.0):
+    params, table = testbed
+    router = router_cls(table, delta)
+    gw = Gateway(router, table, params, estimator)
+    return gw.process_stream(scenes)
+
+
+def test_profile_table_structure(testbed):
+    _, table = testbed
+    assert len(table.pairs()) == 3
+    assert {e.group for e in table.entries} == {0, 1, 2, 3, 4}
+    assert all(e.energy_mwh > 0 and e.time_ms > 0 for e in table.entries)
+
+
+def test_hmg_upper_bounds_accuracy(testbed):
+    scenes = sc.full_dataset(40, seed=11)
+    hmg = _run(testbed, HighestMAPPerGroupRouter, None, scenes)
+    le = _run(testbed, LowestEnergyRouter, None, scenes)
+    assert hmg.map_pct >= le.map_pct - 2.0  # HMG at/above LE (eval noise tol)
+    assert le.backend_energy_mwh <= hmg.backend_energy_mwh + 1e-9
+
+
+def test_oracle_between_le_and_hmg(testbed):
+    scenes = sc.full_dataset(40, seed=12)
+    hmg = _run(testbed, HighestMAPPerGroupRouter, None, scenes)
+    orc = _run(testbed, OracleRouter, OracleEstimator(), scenes)
+    le = _run(testbed, LowestEnergyRouter, None, scenes)
+    assert le.backend_energy_mwh <= orc.backend_energy_mwh <= \
+        hmg.backend_energy_mwh + 1e-9
+
+
+def test_ed_router_close_to_oracle(testbed):
+    scenes = sc.full_dataset(40, seed=13)
+    orc = _run(testbed, OracleRouter, OracleEstimator(), scenes)
+    ed = _run(testbed, GreedyEstimateRouter, EdgeDetectionEstimator(), scenes)
+    assert ed.map_pct >= orc.map_pct - 10.0
+    assert ed.gateway_energy_mwh > orc.gateway_energy_mwh  # estimation costs
+
+
+def test_ob_cheap_on_video(testbed):
+    video = sc.video_dataset(n_frames=50, seed=3)
+    ob = _run(testbed, GreedyEstimateRouter, OutputBasedEstimator(), video)
+    ed = _run(testbed, GreedyEstimateRouter, EdgeDetectionEstimator(), video)
+    assert ob.gateway_energy_mwh < ed.gateway_energy_mwh
+    assert ob.map_pct > 0
+
+
+def test_sf_estimator_runs(testbed):
+    params, table = testbed
+    scenes = sc.full_dataset(15, seed=14)
+    sf = SSDFrontEndEstimator(params["ssd_v1"], "ssd_v1")
+    stats = _run(testbed, GreedyEstimateRouter, sf, scenes)
+    assert stats.map_pct > 0
+    assert stats.gateway_energy_mwh > 0
+
+
+def test_delta_zero_matches_hmg_choices(testbed):
+    """delta=0 greedy == HMG accuracy-wise (Theorem 3.1 corner)."""
+    scenes = sc.full_dataset(30, seed=15)
+    hmg = _run(testbed, HighestMAPPerGroupRouter, None, scenes)
+    orc0 = _run(testbed, OracleRouter, OracleEstimator(), scenes, delta=0.0)
+    assert abs(orc0.map_pct - hmg.map_pct) < 5.0
+
+
+def test_delta_sweep_monotone_energy(testbed):
+    scenes = sc.full_dataset(30, seed=16)
+    energies = []
+    for delta in (0.0, 10.0, 100.0):
+        s = _run(testbed, OracleRouter, OracleEstimator(), scenes,
+                 delta=delta)
+        energies.append(s.backend_energy_mwh)
+    assert energies[0] >= energies[1] >= energies[2]
