@@ -15,6 +15,8 @@ to artifacts/bench/.  Figure map (see DESIGN.md §7):
   kernels       — kernel timings (CPU oracle path; Pallas checked in tests)
   pool_routing  — framework-level: ECORE over the TPU dry-run pool
   roofline      — per (arch x shape x mesh) roofline terms from the dry-run
+  adaptive      — BEYOND-PAPER: static-profile vs closed-loop routing under
+                  device drift (thermal throttle), regret vs a drift oracle
 """
 from __future__ import annotations
 
@@ -240,6 +242,90 @@ def bench_pool_routing(quick=False):
     _save("pool_routing", chosen)
 
 
+# ------------------------------------------------- adaptive closed loop
+
+def bench_adaptive(quick=False):
+    """Static profile vs closed-loop (EWMA-adapted) routing while a device
+    drifts.  Pure routing dynamics — nominal per-model mAPs stand in for
+    trained detectors so the bench isolates WHERE requests go, not how well
+    the detector draws boxes.  Regret = actual energy paid minus what an
+    oracle that always sees the true drifted costs would pay."""
+    from repro.core.profiles import ProfileEntry, ProfileTable
+    from repro.core.router import feasible_for_count, greedy_route
+    from repro.detection.detectors import DETECTOR_CONFIGS
+    from repro.detection.devices import (DEVICES, TESTBED_PAIRS,
+                                         drift_scenario)
+
+    NOMINAL_MAP = {"ssd_v1": 52.0, "ssd_lite": 55.0, "yolov8_n": 57.0,
+                   "yolov8_s": 60.0}
+
+    def base_table():
+        entries = []
+        for m, d in TESTBED_PAIRS:
+            flops = DETECTOR_CONFIGS[m].flops
+            for g in range(5):
+                entries.append(ProfileEntry(
+                    m, d, g, NOMINAL_MAP[m] - 1.5 * g,
+                    DEVICES[d].time_ms(flops), DEVICES[d].energy_mwh(flops)))
+        return ProfileTable(entries)
+
+    steps = 150 if quick else 400
+    delta, alpha = 5.0, 0.15
+    rng = np.random.default_rng(7)
+    counts = rng.choice(len(sc.COUNT_PROBS), p=sc.COUNT_PROBS, size=steps)
+
+    # throttle whatever device the profile initially favors for the modal
+    # group — the worst case for a frozen profile
+    modal_count = int(np.argmax(np.bincount(counts)))
+    favorite = greedy_route(modal_count, base_table(), delta).device
+    fleet = drift_scenario("thermal", device=favorite, start=steps // 4)
+    print(f"\n== adaptive (closed loop vs static; thermal drift on "
+          f"{favorite} from step {steps // 4}) ==")
+
+    def episode(adapt: bool):
+        table = base_table()
+        energy = time_ms = 0.0
+        for t, count in enumerate(counts):
+            e = greedy_route(int(count), table, delta)
+            flops = DETECTOR_CONFIGS[e.model].flops
+            t_ms, e_mwh = fleet.cost(e.device, flops, t)
+            energy += e_mwh
+            time_ms += t_ms
+            if adapt:
+                table.observe_pair(e.pair, time_ms=t_ms, energy_mwh=e_mwh,
+                                   alpha=alpha)
+        return energy, time_ms
+
+    def oracle_episode():
+        table = base_table()  # mAP feasibility unaffected by drift
+        energy = time_ms = 0.0
+        for t, count in enumerate(counts):
+            feas = feasible_for_count(int(count), table, delta)
+            e = min(feas, key=lambda e: fleet.cost(
+                e.device, DETECTOR_CONFIGS[e.model].flops, t)[1])
+            t_ms, e_mwh = fleet.cost(
+                e.device, DETECTOR_CONFIGS[e.model].flops, t)
+            energy += e_mwh
+            time_ms += t_ms
+        return energy, time_ms
+
+    e_static, t_static = episode(adapt=False)
+    e_adapt, t_adapt = episode(adapt=True)
+    e_oracle, t_oracle = oracle_episode()
+    print("policy,total_energy_mwh,total_time_ms,energy_regret_mwh")
+    rows = {}
+    for name, (e, t) in (("static", (e_static, t_static)),
+                         ("closed_loop", (e_adapt, t_adapt)),
+                         ("oracle", (e_oracle, t_oracle))):
+        rows[name] = {"energy_mwh": e, "time_ms": t,
+                      "energy_regret_mwh": e - e_oracle}
+        print(f"{name},{e:.4f},{t:.1f},{e - e_oracle:.4f}")
+    saved = 1 - (e_adapt - e_oracle) / max(e_static - e_oracle, 1e-12)
+    print(f"closed_loop_regret_reduction: {100 * saved:.1f}%")
+    _save("adaptive", rows)
+    return rows
+
+
 # ------------------------------------------------------------ roofline dump
 
 def bench_roofline(quick=False):
@@ -273,6 +359,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "pool_routing": bench_pool_routing,
     "roofline": bench_roofline,
+    "adaptive": bench_adaptive,
 }
 
 

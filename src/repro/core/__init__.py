@@ -4,7 +4,8 @@ from .profiles import ProfileEntry, ProfileTable
 from .router import (BASELINE_ROUTERS, GreedyEstimateRouter,
                      HighestMAPPerGroupRouter, HighestMAPRouter,
                      LowestEnergyRouter, LowestInferenceRouter, OracleRouter,
-                     RandomRouter, RoundRobinRouter, greedy_route)
+                     RandomRouter, RoundRobinRouter, feasible_for_count,
+                     feasible_set, greedy_route, pareto_front)
 from .estimators import (EdgeDetectionEstimator, OracleEstimator,
                          OutputBasedEstimator, SSDFrontEndEstimator)
 from .gateway import EpisodeStats, Gateway

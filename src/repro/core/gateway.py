@@ -46,17 +46,42 @@ class EpisodeStats:
 
 
 class Gateway:
-    """Routes a stream of scenes through detector backends."""
+    """Routes a stream of scenes through detector backends.
+
+    Closed loop (BEYOND-PAPER, §6 future work): with ``adapt=True`` every
+    request's MEASURED backend latency/energy is EWMA-folded back into the
+    profile table (``ProfileTable.observe_pair``), so the router tracks
+    runtime drift.  Pass a ``fleet`` (``detection.devices.DriftingFleet``) to
+    make the measured costs diverge from the offline profile — without one,
+    measurements equal the profile and adaptation is a fixed point.
+
+    Pure exploitation cannot recover from TRANSIENT drift: once a pair's
+    observed cost spikes, routing abandons it and its rows are never
+    re-measured, so it stays poisoned after the device recovers.
+    ``explore_every=N`` serves every Nth request on a round-robin pair
+    instead of the router's pick (a small accuracy/energy tax), keeping
+    every pair's profile fresh."""
 
     def __init__(self, router: Router, table: ProfileTable,
                  detector_params: Dict[str, Dict],
-                 estimator: Optional[Estimator] = None):
+                 estimator: Optional[Estimator] = None, *,
+                 fleet=None, adapt: bool = False, alpha: float = 0.1,
+                 explore_every: int = 0):
         from repro.detection.train import run_detector  # lazy: heavy import
         self._run = run_detector
         self.router = router
         self.table = table
         self.params = detector_params
         self.estimator = estimator
+        self.fleet = fleet
+        self.adapt = adapt
+        self.alpha = alpha
+        self.explore_every = explore_every
+        if adapt and getattr(router, "table", None) is not table:
+            raise ValueError(
+                "adapt=True requires router.table to BE the gateway's table "
+                "(same object): observe_pair updates would otherwise never "
+                "reach the router's decisions")
 
     def process_stream(self, stream: Sequence[Scene]) -> EpisodeStats:
         acc = MAPAccumulator(NUM_CLASSES)
@@ -65,7 +90,7 @@ class Gateway:
         if self.estimator is not None:
             self.estimator.reset()
         self.router.reset()
-        for scene in stream:
+        for step, scene in enumerate(stream):
             est_count = None
             if self.estimator is not None:
                 if isinstance(self.estimator, OracleEstimator):
@@ -80,15 +105,26 @@ class Gateway:
                 gw_time += gc["time_ms"]
             pair = self.router.route(estimated_count=est_count,
                                      true_count=scene.count)
+            if (self.adapt and self.explore_every
+                    and step % self.explore_every == self.explore_every - 1):
+                pairs = self.table.pairs()
+                pair = pairs[(step // self.explore_every) % len(pairs)]
             model, device = pair
             hist[f"{model}@{device}"] = hist.get(f"{model}@{device}", 0) + 1
             boxes, scores, classes = self._run(self.params[model],
                                                scene.image[None])[0]
             acc.add_image(boxes, scores, classes, scene.boxes, scene.classes)
-            dev = DEVICES[device]
             flops = DETECTOR_CONFIGS[model].flops
-            be_energy += dev.energy_mwh(flops)
-            be_time += dev.time_ms(flops)
+            if self.fleet is not None:
+                t_ms, e_mwh = self.fleet.cost(device, flops, step)
+            else:
+                dev = DEVICES[device]
+                t_ms, e_mwh = dev.time_ms(flops), dev.energy_mwh(flops)
+            be_energy += e_mwh
+            be_time += t_ms
+            if self.adapt:
+                self.table.observe_pair(pair, time_ms=t_ms, energy_mwh=e_mwh,
+                                        alpha=self.alpha)
             if self.estimator is not None:
                 # OB feedback: the count the BACKEND detected
                 self.estimator.observe(int((scores >= 0.5).sum()))

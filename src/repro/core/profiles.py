@@ -80,6 +80,30 @@ class ProfileTable:
                 return
         raise KeyError((pair, group))
 
+    def observe_pair(self, pair: Tuple[str, str], *,
+                     time_ms: Optional[float] = None,
+                     energy_mwh: Optional[float] = None,
+                     alpha: float = 0.1) -> None:
+        """EWMA-update latency/energy for EVERY group row of ``pair``.
+
+        Latency and energy are group-independent in the profiling model (the
+        table replicates them per group), so a runtime measurement taken
+        while serving one group is evidence for all of them — updating only
+        the observed group's row would leave the others stale and let the
+        router keep picking a drifted backend for other groups."""
+        groups = [e.group for e in self.entries if e.pair == pair]
+        if not groups:
+            raise KeyError(pair)
+        for g in groups:
+            self.observe(pair, g, time_ms=time_ms, energy_mwh=energy_mwh,
+                         alpha=alpha)
+
+    def copy(self) -> "ProfileTable":
+        """Independent table with the same (immutable) entries — lets a
+        static-profile baseline and a closed-loop run share one offline
+        profile without the EWMA updates leaking between them."""
+        return ProfileTable(self.entries)
+
     # ------------------------------------------------------------------ io
     def to_json(self, path: str) -> None:
         with open(path, "w") as f:

@@ -14,7 +14,7 @@ tests/test_router.py.
 from __future__ import annotations
 
 import random
-from typing import Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from .groups import DEFAULT_GROUP_RULES, group_of
 from .profiles import ProfileEntry, ProfileTable
@@ -22,15 +22,48 @@ from .profiles import ProfileEntry, ProfileTable
 Pair = Tuple[str, str]
 
 
+def feasible_set(group: int, profiling_data: ProfileTable,
+                 delta_map: float) -> List[ProfileEntry]:
+    """Algorithm 1 lines 8-13: the SINGLE implementation of the feasible-set
+    computation (group filter -> mAP threshold) that every routing face
+    shares — ``greedy_route``, ``WeightedRouter``, ``ParetoRouter``, and the
+    serving pool all call this instead of re-inlining the filter."""
+    group_data = profiling_data.for_group(group)            # lines 8-9
+    if not group_data:
+        known = sorted({e.group for e in profiling_data.entries})
+        raise ValueError(
+            f"no profile rows for group {group} (table covers groups "
+            f"{known}); profile every group the router can be asked for")
+    max_map = max(e.map_pct for e in group_data)            # line 10
+    map_min = max_map - delta_map                           # line 11
+    return [e for e in group_data if e.map_pct >= map_min]  # lines 12-13
+
+
+def feasible_for_count(count: int, profiling_data: ProfileTable,
+                       delta_map: float,
+                       group_rules: Sequence = DEFAULT_GROUP_RULES
+                       ) -> List[ProfileEntry]:
+    """Algorithm 1 lines 1-13: group lookup + feasible set."""
+    group = group_of(count, group_rules)                    # lines 1-7
+    return feasible_set(group, profiling_data, delta_map)
+
+
+def pareto_front(entries: Sequence[ProfileEntry]) -> List[ProfileEntry]:
+    """Entries not dominated in BOTH (energy, time) by another entry."""
+    return [e for e in entries
+            if not any(o.energy_mwh <= e.energy_mwh and o.time_ms <= e.time_ms
+                       and o is not e
+                       and (o.energy_mwh < e.energy_mwh
+                            or o.time_ms < e.time_ms)
+                       for o in entries)]
+
+
 def greedy_route(number_of_objects: int, profiling_data: ProfileTable,
                  delta_map: float,
                  group_rules: Sequence = DEFAULT_GROUP_RULES) -> ProfileEntry:
     """Algorithm 1, line for line."""
-    group = group_of(number_of_objects, group_rules)        # lines 1-7
-    group_data = profiling_data.for_group(group)            # lines 8-9
-    max_map = max(e.map_pct for e in group_data)            # line 10
-    map_min = max_map - delta_map                           # line 11
-    refined = [e for e in group_data if e.map_pct >= map_min]  # lines 12-13
+    refined = feasible_for_count(number_of_objects, profiling_data,
+                                 delta_map, group_rules)    # lines 1-13
     return min(refined, key=lambda e: e.energy_mwh)         # lines 14-15
 
 
@@ -155,16 +188,16 @@ class WeightedRouter(Router):
                  w_energy: float = 0.5, w_time: float = 0.5):
         super().__init__(table, delta_map, group_rules)
         self.w_energy, self.w_time = w_energy, w_time
-        self._e_max = max(e.energy_mwh for e in table.entries)
-        self._t_max = max(e.time_ms for e in table.entries)
 
     def route(self, *, estimated_count=None, true_count=None) -> Pair:
-        group = group_of(int(estimated_count or 0), self.rules)
-        rows = self.table.for_group(group)
-        max_map = max(e.map_pct for e in rows)
-        feasible = [e for e in rows if e.map_pct >= max_map - self.delta]
-        score = lambda e: (self.w_energy * e.energy_mwh / self._e_max
-                           + self.w_time * e.time_ms / self._t_max)
+        feasible = feasible_for_count(int(estimated_count or 0), self.table,
+                                      self.delta, self.rules)
+        # normalizers recomputed per call: closed-loop observe() mutates the
+        # table, and stale maxes would silently rebalance the weights
+        e_max = max(e.energy_mwh for e in self.table.entries)
+        t_max = max(e.time_ms for e in self.table.entries)
+        score = lambda e: (self.w_energy * e.energy_mwh / e_max
+                           + self.w_time * e.time_ms / t_max)
         return min(feasible, key=score).pair
 
 
@@ -176,16 +209,9 @@ class ParetoRouter(Router):
     uses_estimate = True
 
     def route(self, *, estimated_count=None, true_count=None) -> Pair:
-        group = group_of(int(estimated_count or 0), self.rules)
-        rows = self.table.for_group(group)
-        max_map = max(e.map_pct for e in rows)
-        feasible = [e for e in rows if e.map_pct >= max_map - self.delta]
-        front = [e for e in feasible
-                 if not any(o.energy_mwh <= e.energy_mwh
-                            and o.time_ms <= e.time_ms and o is not e
-                            and (o.energy_mwh < e.energy_mwh
-                                 or o.time_ms < e.time_ms)
-                            for o in feasible)]
+        feasible = feasible_for_count(int(estimated_count or 0), self.table,
+                                      self.delta, self.rules)
+        front = pareto_front(feasible)
         return min(front, key=lambda e: e.energy_mwh).pair
 
 

@@ -12,7 +12,7 @@ EXPERIMENTS.md is a ratio, which is insensitive to the absolute scale
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,3 +52,87 @@ TESTBED_PAIRS: Tuple[Tuple[str, str], ...] = (
     ("yolov8_s", "pi5_aihat"),   # mAP groups 4/5       (rows 6-7)
     ("yolov8_n", "pi5_tpu"),     # extra pareto point
 )
+
+
+# --------------------------------------------------------------- drift model
+# BEYOND-PAPER (paper §6 / AyE-Edge 2408.05363): the offline profile goes
+# stale at runtime — devices throttle, share CPU with other tenants, or drop
+# off the network.  A DriftingFleet is a time-varying view of DEVICES that
+# the gateway can charge ACTUAL costs against while the routers still consult
+# the (possibly EWMA-adapted) profile table.
+
+@dataclasses.dataclass(frozen=True)
+class DriftEvent:
+    """One runtime condition change on one device.
+
+    kind:
+      * ``thermal``    — sustained throttling: the latency multiplier ramps
+                         linearly from 1 to ``severity`` over ``ramp`` steps
+                         after ``start`` and stays there
+      * ``background`` — co-tenant load: square wave alternating between
+                         ``severity`` and 1 with ``period`` steps per cycle
+      * ``dropout``    — device unreachable in [start, end): requests pay a
+                         flat ``severity``x retry/timeout penalty
+    Energy scales with the same multiplier (active power x longer busy time).
+    """
+    device: str
+    kind: str
+    start: int = 0
+    end: Optional[int] = None   # exclusive; None = never ends
+    severity: float = 2.0
+    ramp: int = 40              # thermal ramp-up length, steps
+    period: int = 60            # background-load cycle length, steps
+
+    def multiplier(self, step: int) -> float:
+        if step < self.start or (self.end is not None and step >= self.end):
+            return 1.0
+        if self.kind == "thermal":
+            frac = min((step - self.start) / max(self.ramp, 1), 1.0)
+            return 1.0 + (self.severity - 1.0) * frac
+        if self.kind == "background":
+            phase = ((step - self.start) % self.period) / self.period
+            return self.severity if phase < 0.5 else 1.0
+        if self.kind == "dropout":
+            return self.severity
+        raise ValueError(f"unknown drift kind {self.kind!r}")
+
+
+class DriftingFleet:
+    """Time-varying device fleet: actual per-request cost at step t is the
+    profiled cost times the product of every active drift event's multiplier."""
+
+    def __init__(self, events: Sequence[DriftEvent] = (),
+                 devices: Dict[str, EdgeDevice] = DEVICES):
+        self.events = tuple(events)
+        self.devices = devices
+
+    def multiplier(self, device: str, step: int) -> float:
+        m = 1.0
+        for ev in self.events:
+            if ev.device == device:
+                m *= ev.multiplier(step)
+        return m
+
+    def cost(self, device: str, flops: float, step: int
+             ) -> Tuple[float, float]:
+        """(time_ms, energy_mwh) actually paid at ``step``; energy is linear
+        in busy time, so both scale by the same multiplier."""
+        dev = self.devices[device]
+        m = self.multiplier(device, step)
+        return dev.time_ms(flops) * m, dev.energy_mwh(flops) * m
+
+
+def drift_scenario(name: str, device: str = "orin_nano",
+                   start: int = 0) -> DriftingFleet:
+    """Named single-event scenarios used by tests and the adaptive bench."""
+    if name == "thermal":
+        events = (DriftEvent(device, "thermal", start=start, severity=4.0),)
+    elif name == "background":
+        events = (DriftEvent(device, "background", start=start, severity=3.0,
+                             period=80),)
+    elif name == "dropout":
+        events = (DriftEvent(device, "dropout", start=start, end=start + 120,
+                             severity=30.0),)
+    else:
+        raise ValueError(f"unknown drift scenario {name!r}")
+    return DriftingFleet(events)

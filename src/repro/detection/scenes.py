@@ -93,6 +93,22 @@ def balanced_sorted_dataset(per_group: int = 40, seed: int = 1) -> List[Scene]:
     return out
 
 
+def drifting_dataset(n: int = 200, seed: int = 4,
+                     shift_at: Optional[int] = None) -> List[Scene]:
+    """Workload drift: the count distribution flips mid-stream from the
+    sparse COCO-like mix to its crowded mirror image (rush hour at the
+    pedestrian crossing), so the dominant object-count group changes and
+    adaptive routing has something to chase."""
+    rng = np.random.default_rng(seed)
+    shift_at = n // 2 if shift_at is None else shift_at
+    crowded = COUNT_PROBS[::-1]
+    out = []
+    for i in range(n):
+        probs = COUNT_PROBS if i < shift_at else crowded
+        out.append(make_scene(rng, count=int(rng.choice(len(probs), p=probs))))
+    return out
+
+
 def video_dataset(n_frames: int = 200, seed: int = 2) -> List[Scene]:
     """Pedestrian-crossing analog: counts random-walk; objects drift."""
     rng = np.random.default_rng(seed)

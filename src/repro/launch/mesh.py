@@ -6,19 +6,28 @@ multi-pod = 2 pods = 512 chips (2 x 16 x 16, axes pod x data x model).
 """
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """``jax.make_mesh`` across JAX versions: ``jax.sharding.AxisType`` only
+    exists from 0.5.x on; older releases (0.4.37 in this container) default to
+    auto axis types, so the kwarg is passed only when available."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(tuple(shape), tuple(axes),
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Degenerate 1x1 mesh on the real local device (CPU tests/examples)."""
-    return jax.make_mesh(
-        (1, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))

@@ -6,6 +6,15 @@ On this CPU container backends are REDUCED variants of the assigned archs
 (real prefill+decode runs, batched); the routing profile comes from the
 production dry-run roofline (artifacts/dryrun.jsonl) when available, so the
 router makes the same decisions it would on the pod.
+
+Dispatch is BATCHED: each backend owns a request queue that flushes up to
+``--max-batch`` requests per ``serve_batch`` call, so N requests take far
+fewer than N engine calls.  ``--adapt`` closes the loop: each backend's
+measured per-request latency, relative to its OWN first measurement (local
+CPU ms and pod-profile ms are different scales, so only the relative
+slowdown transfers), rescales its profiled time AND energy via
+``ServingPool.observe`` — so the greedy argmin-energy routing reacts when a
+backend runs slower than its profile claims.
 """
 from __future__ import annotations
 
@@ -16,7 +25,7 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.serving.engine import Backend, Request
+from repro.serving.engine import Backend, DispatchQueue, Request
 from repro.serving.pool import (ServingPool, bucket_of,
                                 pool_table_from_dryrun)
 from repro.core.profiles import ProfileEntry, ProfileTable
@@ -24,6 +33,10 @@ from repro.serving.pool import capability_score, LENGTH_BUCKETS
 
 DEFAULT_POOL = ("qwen2.5-3b", "llama3-8b", "mamba2-370m",
                 "granite-moe-1b-a400m", "recurrentgemma-2b")
+
+# reduced CPU backends cap the materialized prompt (routing still sees the
+# full requested length)
+PROMPT_CAP = 48
 
 
 def synthetic_pool_table(archs) -> ProfileTable:
@@ -48,7 +61,11 @@ def main(argv=None):
     ap.add_argument("--archs", nargs="*", default=list(DEFAULT_POOL))
     ap.add_argument("--dryrun-artifact", default="artifacts/dryrun.jsonl")
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--adapt", action="store_true",
+                    help="EWMA-update the routing profile from measured "
+                         "per-request latency (closed loop)")
     args = ap.parse_args(argv)
 
     if os.path.exists(args.dryrun_artifact):
@@ -62,32 +79,67 @@ def main(argv=None):
     pool = ServingPool(table, delta=args.delta)
     print(f"pool profile from {src}: {len(table.pairs())} backends")
 
-    backends = {}
+    queues = {}
+    decisions = {}
+    # (arch, batch_size, prompt_len) -> fastest local_ms: keyed per jit
+    # shape, so a recompile for a new batch shape (or the compile-heavy
+    # first batch) never masquerades as backend drift
+    baselines = {}
+    # observations rescale the PRISTINE profile (time/energy are
+    # bucket-independent per arch), never the already-adapted one — basing
+    # them on live decisions would compound drift and stop the profile from
+    # recovering once a backend returns to its healthy speed
+    pristine = {}
+    for e in table.entries:
+        pristine.setdefault(e.model, (e.time_ms, e.energy_mwh))
     rng = np.random.default_rng(args.seed)
     routed_energy = routed_time = 0.0
     t_start = time.time()
+
+    def handle(results):
+        observed = set()  # one observation per serve_batch call, not result
+        for res in results:
+            d, plen = decisions[res.uid]
+            local_ms = (res.prefill_s + res.decode_s) * 1e3 / res.batch_size
+            print(f"req {res.uid:3d} len={plen:6d} bucket={d.bucket} -> "
+                  f"{d.arch:22s} score={d.score:5.1f} "
+                  f"prof[t={d.time_ms:8.2f}ms e={d.energy_mwh:7.4f}mWh] "
+                  f"local[{local_ms:6.1f}ms/req batch={res.batch_size}] "
+                  f"tokens={res.tokens[:4]}")
+            key = (d.arch, res.batch_size, min(plen, PROMPT_CAP))
+            if args.adapt and key + (res.prefill_s,) not in observed:
+                observed.add(key + (res.prefill_s,))
+                base_ms = min(baselines.get(key, local_ms), local_ms)
+                baselines[key] = base_ms
+                slowdown = local_ms / max(base_ms, 1e-9)
+                prof_t, prof_e = pristine[d.arch]
+                pool.observe(d.arch, time_ms=prof_t * slowdown,
+                             energy_mwh=prof_e * slowdown)
+
     for uid in range(args.requests):
         plen = int(rng.choice([32, 128, 1024, 4096, 40_000],
                               p=[.3, .3, .2, .1, .1]))
         decision = pool.route(plen)
+        decisions[uid] = (decision, plen)
         routed_energy += decision.energy_mwh
         routed_time += decision.time_ms
-        if decision.arch not in backends:
+        if decision.arch not in queues:
             cfg = get_config(decision.arch).reduced()
-            backends[decision.arch] = Backend(decision.arch, cfg,
-                                              max_seq=96, seed=uid)
-        be = backends[decision.arch]
-        prompt = rng.integers(0, 1000, size=min(plen, 48))
-        res = be.serve_batch([Request(uid=uid, prompt=prompt,
-                                      max_new_tokens=args.max_new)])[0]
-        print(f"req {uid:3d} len={plen:6d} bucket={decision.bucket} -> "
-              f"{decision.arch:22s} score={decision.score:5.1f} "
-              f"prof[t={decision.time_ms:8.2f}ms e={decision.energy_mwh:7.4f}mWh] "
-              f"local[prefill={res.prefill_s*1e3:6.1f}ms "
-              f"decode={res.decode_s*1e3:6.1f}ms] tokens={res.tokens[:4]}")
-    print(f"\n{args.requests} requests in {time.time()-t_start:.1f}s; "
+            queues[decision.arch] = DispatchQueue(
+                Backend(decision.arch, cfg, max_batch=args.max_batch,
+                        max_seq=96, seed=uid))
+        prompt = rng.integers(0, 1000, size=min(plen, PROMPT_CAP))
+        handle(queues[decision.arch].submit(
+            Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new)))
+    for q in queues.values():
+        handle(q.flush())
+
+    calls = sum(q.calls for q in queues.values())
+    print(f"\n{args.requests} requests in {time.time()-t_start:.1f}s via "
+          f"{calls} serve_batch calls over {len(queues)} backends "
+          f"(max_batch={args.max_batch}); "
           f"profiled totals: {routed_time:.1f}ms, {routed_energy:.3f}mWh "
-          f"(delta={args.delta})")
+          f"(delta={args.delta}, adapt={args.adapt})")
     return 0
 
 

@@ -33,9 +33,10 @@ class Request:
 class Result:
     uid: int
     tokens: np.ndarray
-    prefill_s: float
-    decode_s: float
+    prefill_s: float            # wall time of the WHOLE batch's prefill
+    decode_s: float             # wall time of the WHOLE batch's decode
     backend: str
+    batch_size: int = 1         # divide the times by this for per-request cost
 
 
 class Backend:
@@ -56,7 +57,13 @@ class Backend:
 
     def serve_batch(self, requests: List[Request]) -> List[Result]:
         """Greedy-decode a batch of requests (piggybacked, like the paper's
-        Locust loop: one batch at a time)."""
+        Locust loop: one batch at a time).
+
+        Prompts should share ONE length: shorter prompts are right-padded
+        and the first generated token comes from the batch-wide last
+        position (prefill only returns last-position logits), so mixed
+        lengths corrupt the shorter requests' outputs — ``DispatchQueue``
+        groups by length automatically."""
         assert requests
         b = len(requests)
         max_prompt = max(len(r.prompt) for r in requests)
@@ -83,5 +90,45 @@ class Backend:
 
         gen = np.concatenate([np.asarray(t) for t in out], axis=1)
         return [Result(uid=r.uid, tokens=gen[i], prefill_s=t1 - t0,
-                       decode_s=t2 - t1, backend=self.name)
+                       decode_s=t2 - t1, backend=self.name, batch_size=b)
                 for i, r in enumerate(requests)]
+
+
+class DispatchQueue:
+    """Per-backend request queue with batched flush.
+
+    Requests accumulate until ``backend.max_batch`` is reached, then go out
+    batched — the driver-side half of the engine's batching support (the
+    engine always could batch; the serving loop never fed it more than one
+    request at a time).  Each flush makes one ``serve_batch`` call per
+    distinct prompt LENGTH: ``serve_batch`` right-pads to the longest prompt
+    and reads the first generated token from the batch-wide last position,
+    so a mixed-length batch would corrupt the shorter requests' outputs —
+    homogeneous sub-batches keep batched results identical to solo serving."""
+
+    def __init__(self, backend: Backend):
+        self.backend = backend
+        self.pending: List[Request] = []
+        self.calls = 0
+        self.served = 0
+
+    def submit(self, req: Request) -> List[Result]:
+        """Enqueue; returns flushed results when the batch fills, else []."""
+        self.pending.append(req)
+        if len(self.pending) >= self.backend.max_batch:
+            return self.flush()
+        return []
+
+    def flush(self) -> List[Result]:
+        if not self.pending:
+            return []
+        batch, self.pending = self.pending, []
+        by_len: Dict[int, List[Request]] = {}
+        for r in batch:
+            by_len.setdefault(len(r.prompt), []).append(r)
+        results: List[Result] = []
+        for _, group in sorted(by_len.items()):
+            self.calls += 1
+            self.served += len(group)
+            results += self.backend.serve_batch(group)
+        return results

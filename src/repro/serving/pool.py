@@ -24,8 +24,8 @@ import math
 import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.groups import group_of
 from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.core.router import feasible_set
 
 # prompt-length buckets = the serving "object count groups"
 LENGTH_BUCKETS = ((0, 512, 0), (513, 2048, 1), (2049, 8192, 2),
@@ -100,11 +100,26 @@ class ServingPool:
         self.delta = delta
 
     def route(self, prompt_len: int) -> PoolDecision:
-        from repro.core.router import greedy_route
         bucket = bucket_of(prompt_len)
-        # greedy_route groups by object count; reuse with bucket as count
-        e = greedy_route(bucket if bucket < 4 else 4, self.table, self.delta,
-                         group_rules=tuple((b, b, b) for b in range(4))
-                         + ((4, None, 4),))
+        # buckets ARE the profile groups here — the shared Algorithm-1
+        # feasible set applies directly, then the greedy argmin-energy pick
+        feasible = feasible_set(bucket, self.table, self.delta)
+        e = min(feasible, key=lambda e: e.energy_mwh)
         return PoolDecision(arch=e.model, bucket=bucket, time_ms=e.time_ms,
                             energy_mwh=e.energy_mwh, score=e.map_pct)
+
+    def observe(self, arch: str, *, time_ms: Optional[float] = None,
+                energy_mwh: Optional[float] = None,
+                alpha: float = 0.1) -> None:
+        """Closed loop: EWMA-fold a measured serving latency/energy back into
+        the profile — every device/mesh row of ``arch``, all buckets
+        (latency/energy are bucket-independent in the dry-run profile, like
+        the paper's per-group replication)."""
+        matched = False
+        for pair in self.table.pairs():
+            if pair[0] == arch:
+                self.table.observe_pair(pair, time_ms=time_ms,
+                                        energy_mwh=energy_mwh, alpha=alpha)
+                matched = True
+        if not matched:
+            raise KeyError(arch)

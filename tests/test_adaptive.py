@@ -1,0 +1,388 @@
+"""Closed-loop routing core: shared feasible set, drift scenarios, EWMA
+adaptation through the gateway and serving pool, batched dispatch."""
+import numpy as np
+import pytest
+
+from repro.core.groups import group_of
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.core.router import (ParetoRouter, WeightedRouter,
+                               feasible_for_count, feasible_set, greedy_route)
+from repro.detection import scenes as sc
+from repro.detection.devices import (DEVICES, DriftEvent, DriftingFleet,
+                                     drift_scenario)
+from repro.serving.engine import DispatchQueue, Request, Result
+from repro.serving.pool import LENGTH_BUCKETS, ServingPool
+
+
+def make_table(rows):
+    return ProfileTable([ProfileEntry(*r) for r in rows])
+
+
+@pytest.fixture
+def table():
+    rows = []
+    for g in range(5):
+        rows += [
+            ("cheap", "d1", g, 80.0 - g, 20.0, 0.01),
+            ("fast", "d2", g, 80.0 - g, 2.0, 0.05),
+            ("acc", "d3", g, 95.0 - g, 30.0, 0.09),
+        ]
+    return make_table(rows)
+
+
+# ----------------------------------------------------- shared feasible set
+
+def test_feasible_set_parity_with_inline_filter(table):
+    """The extracted helper must match the filter the routers used to
+    inline: group rows -> mAP >= mAP_max - delta."""
+    for count in range(8):
+        for delta in (0.0, 5.0, 14.0, 100.0):
+            rows = table.for_group(group_of(count))
+            max_map = max(e.map_pct for e in rows)
+            inline = [e for e in rows if e.map_pct >= max_map - delta]
+            assert feasible_for_count(count, table, delta) == inline
+
+
+def test_all_router_faces_share_the_feasible_set(table):
+    """Weighted/Pareto picks always come from the shared feasible set."""
+    for count in (0, 2, 7):
+        feas = {e.pair for e in feasible_for_count(count, table, 14.0)}
+        assert greedy_route(count, table, 14.0).pair in feas
+        assert WeightedRouter(table, 14.0).route(estimated_count=count) in feas
+        assert ParetoRouter(table, 14.0).route(estimated_count=count) in feas
+
+
+def test_pool_route_uses_shared_feasible_set():
+    entries = [ProfileEntry(a, "pod", b, score, 1.0, energy)
+               for a, score, energy in (("small", 80.0, 1.0),
+                                        ("big", 84.0, 5.0))
+               for _, _, b in LENGTH_BUCKETS]
+    pool = ServingPool(ProfileTable(entries), delta=5.0)
+    d = pool.route(100)
+    feas = feasible_set(0, pool.table, 5.0)
+    assert d.arch == min(feas, key=lambda e: e.energy_mwh).model == "small"
+
+
+def test_pool_route_unprofiled_bucket_is_a_clear_error():
+    entries = [ProfileEntry("only", "pod", 0, 80.0, 1.0, 1.0)]
+    pool = ServingPool(ProfileTable(entries), delta=5.0)
+    with pytest.raises(ValueError, match="no profile rows for group 4"):
+        pool.route(40_000)
+
+
+# ------------------------------------------------------------ drift model
+
+def test_thermal_ramp_monotone_and_saturates():
+    ev = DriftEvent("orin_nano", "thermal", start=10, severity=4.0, ramp=20)
+    ms = [ev.multiplier(t) for t in range(0, 60)]
+    assert ms[:10] == [1.0] * 10
+    assert all(b >= a for a, b in zip(ms[10:], ms[11:]))
+    assert ms[30] == ms[59] == 4.0
+
+
+def test_background_load_oscillates():
+    ev = DriftEvent("pi5", "background", severity=3.0, period=10)
+    assert ev.multiplier(0) == 3.0 and ev.multiplier(5) == 1.0
+    assert ev.multiplier(10) == 3.0  # periodic
+
+
+def test_dropout_window():
+    ev = DriftEvent("pi4", "dropout", start=5, end=8, severity=30.0)
+    assert [ev.multiplier(t) for t in (4, 5, 7, 8)] == [1.0, 30.0, 30.0, 1.0]
+
+
+def test_fleet_composes_events_and_scales_energy():
+    fleet = DriftingFleet([
+        DriftEvent("pi5", "dropout", start=0, severity=2.0),
+        DriftEvent("pi5", "background", severity=3.0, period=10),
+    ])
+    assert fleet.multiplier("pi5", 0) == 6.0
+    assert fleet.multiplier("orin_nano", 0) == 1.0
+    t0, e0 = fleet.cost("pi5", 1e9, 5)   # background off-phase: 2x only
+    t1, e1 = fleet.cost("pi5", 1e9, 0)   # both active: 6x
+    assert t1 / t0 == pytest.approx(3.0)
+    assert e1 / e0 == pytest.approx(3.0)  # energy tracks busy time
+
+
+def test_drifting_dataset_shifts_count_distribution():
+    ds = sc.drifting_dataset(n=160, seed=9)
+    first = np.mean([s.count for s in ds[:80]])
+    second = np.mean([s.count for s in ds[80:]])
+    assert second - first > 1.0
+
+
+# --------------------------------------------------------- EWMA adaptation
+
+def test_observe_pair_updates_every_group(table):
+    table.observe_pair(("cheap", "d1"), time_ms=100.0, alpha=0.5)
+    for g in range(5):
+        assert table.entry(("cheap", "d1"), g).time_ms == 60.0
+        assert table.entry(("fast", "d2"), g).time_ms == 2.0  # untouched
+    with pytest.raises(KeyError):
+        table.observe_pair(("nope", "d9"), time_ms=1.0)
+
+
+def test_copy_isolates_ewma_updates(table):
+    frozen = table.copy()
+    table.observe_pair(("cheap", "d1"), energy_mwh=9.0, alpha=0.5)
+    assert frozen.entry(("cheap", "d1"), 0).energy_mwh == 0.01
+    assert table.entry(("cheap", "d1"), 0).energy_mwh > 0.01
+
+
+def test_observe_converges_to_drifted_cost(table):
+    """Feeding fleet-measured costs through observe_pair tracks the drifted
+    value within a few time constants."""
+    fleet = drift_scenario("thermal", device="orin_nano", start=0)
+    flops = 1e9
+    target_t, target_e = fleet.cost("orin_nano", flops, 1000)  # saturated
+    for t in range(120):
+        t_ms, e_mwh = fleet.cost("orin_nano", flops, t)
+        table.observe_pair(("cheap", "d1"), time_ms=t_ms, energy_mwh=e_mwh,
+                           alpha=0.2)
+    got = table.entry(("cheap", "d1"), 2)
+    assert got.time_ms == pytest.approx(target_t, rel=0.02)
+    assert got.energy_mwh == pytest.approx(target_e, rel=0.02)
+
+
+# ------------------------------------------------- gateway closed loop
+
+def _fake_run_detector(params, images):
+    none = np.zeros((0, 4), np.float32)
+    return [(none, np.zeros(0, np.float32), np.zeros(0, np.int32))
+            for _ in range(len(images))]
+
+
+def _gateway_episode(monkeypatch, *, adapt):
+    from repro.core.gateway import Gateway
+    from repro.core.router import OracleRouter
+    from repro.detection import train
+    from repro.detection.detectors import DETECTOR_CONFIGS
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    rows = []
+    for g in range(5):  # same mAP -> both pairs always feasible
+        for m, d in (("ssd_v1", "orin_nano"), ("yolov8_n", "pi5")):
+            flops = DETECTOR_CONFIGS[m].flops  # what the gateway charges
+            rows.append(ProfileEntry(m, d, g, 60.0,
+                                     DEVICES[d].time_ms(flops),
+                                     DEVICES[d].energy_mwh(flops)))
+    table = ProfileTable(rows)
+    base_pick = greedy_route(1, table, 5.0)
+    fleet = DriftingFleet([DriftEvent(base_pick.device, "thermal",
+                                      severity=40.0, ramp=5)])
+    gw = Gateway(OracleRouter(table, 5.0), table,
+                 {"ssd_v1": None, "yolov8_n": None}, None,
+                 fleet=fleet, adapt=adapt, alpha=0.3)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=1)
+              for i in range(40)]
+    return gw.process_stream(scenes), base_pick
+
+
+def test_gateway_closed_loop_reroutes_away_from_throttled_device(
+        monkeypatch):
+    stats, base_pick = _gateway_episode(monkeypatch, adapt=True)
+    other = {"orin_nano": "yolov8_n@pi5",
+             "pi5": "ssd_v1@orin_nano"}[base_pick.device]
+    # adaptation notices the throttled favorite and switches
+    assert stats.pair_histogram.get(other, 0) > 25
+
+
+def test_gateway_static_profile_never_reroutes(monkeypatch):
+    stats, base_pick = _gateway_episode(monkeypatch, adapt=False)
+    assert stats.pair_histogram == {base_pick.pair_name: 40}
+
+
+def test_gateway_adaptive_beats_static_on_energy(monkeypatch):
+    adaptive, _ = _gateway_episode(monkeypatch, adapt=True)
+    static, _ = _gateway_episode(monkeypatch, adapt=False)
+    assert adaptive.backend_energy_mwh < static.backend_energy_mwh
+
+
+def test_gateway_exploration_recovers_from_transient_drift(monkeypatch):
+    """Pure exploitation abandons a pair whose cost spiked and never
+    re-measures it; periodic exploration refreshes its rows after the
+    device recovers."""
+    from repro.core.gateway import Gateway
+    from repro.core.router import OracleRouter
+    from repro.detection import train
+    from repro.detection.detectors import DETECTOR_CONFIGS
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+
+    def episode(explore_every):
+        rows = []
+        for g in range(5):
+            for m, d in (("ssd_v1", "orin_nano"), ("yolov8_n", "pi5")):
+                flops = DETECTOR_CONFIGS[m].flops
+                rows.append(ProfileEntry(m, d, g, 60.0,
+                                         DEVICES[d].time_ms(flops),
+                                         DEVICES[d].energy_mwh(flops)))
+        table = ProfileTable(rows)
+        favorite = greedy_route(1, table, 5.0)
+        fleet = DriftingFleet([DriftEvent(favorite.device, "dropout",
+                                          start=0, end=30, severity=50.0)])
+        gw = Gateway(OracleRouter(table, 5.0), table,
+                     {"ssd_v1": None, "yolov8_n": None}, None,
+                     fleet=fleet, adapt=True, alpha=0.3,
+                     explore_every=explore_every)
+        scenes = [sc.make_scene(np.random.default_rng(i), count=1)
+                  for i in range(150)]
+        gw.process_stream(scenes)
+        return table.entry(favorite.pair, 1).energy_mwh, favorite
+
+    poisoned, fav = episode(explore_every=0)
+    recovered, _ = episode(explore_every=4)
+    assert poisoned > 5 * fav.energy_mwh   # abandoned: stuck at spike value
+    assert recovered < 2 * fav.energy_mwh  # explored: re-converged to healthy
+
+
+def test_gateway_adapt_rejects_unshared_table(monkeypatch, table):
+    """adapt=True with a router holding a DIFFERENT table would be a silent
+    no-op (observations never reach routing) — must fail loudly."""
+    from repro.core.gateway import Gateway
+    from repro.core.router import OracleRouter
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    with pytest.raises(ValueError, match="same object"):
+        Gateway(OracleRouter(table.copy(), 5.0), table, {}, adapt=True)
+    Gateway(OracleRouter(table, 5.0), table, {}, adapt=True)  # shared: fine
+
+
+# ------------------------------------------------------ serving closed loop
+
+def test_pool_observe_closes_the_loop():
+    entries = [ProfileEntry(a, "pod", b, 80.0, 1.0, energy)
+               for a, energy in (("small", 1.0), ("big", 5.0))
+               for _, _, b in LENGTH_BUCKETS]
+    pool = ServingPool(ProfileTable(entries), delta=5.0)
+    assert pool.route(100).arch == "small"
+    for _ in range(30):  # 'small' measured far more expensive than profiled
+        pool.observe("small", energy_mwh=50.0, alpha=0.3)
+    assert pool.route(100).arch == "big"
+    with pytest.raises(KeyError):
+        pool.observe("unknown-arch", time_ms=1.0)
+
+
+# --------------------------------------------------------- batched dispatch
+
+class _StubBackend:
+    def __init__(self, name="stub", max_batch=3):
+        self.name = name
+        self.max_batch = max_batch
+        self.batch_sizes = []
+
+    def serve_batch(self, requests):
+        self.batch_sizes.append(len(requests))
+        return [Result(uid=r.uid, tokens=np.zeros(1, np.int32),
+                       prefill_s=.01, decode_s=.01, backend=self.name,
+                       batch_size=len(requests)) for r in requests]
+
+
+def test_dispatch_queue_batches_up_to_max_batch():
+    be = _StubBackend(max_batch=3)
+    q = DispatchQueue(be)
+    got = []
+    for uid in range(7):
+        got += q.submit(Request(uid=uid, prompt=np.arange(4)))
+    got += q.flush()
+    assert be.batch_sizes == [3, 3, 1]
+    assert q.calls == 3 and q.served == 7
+    assert [r.uid for r in got] == list(range(7))
+    assert q.flush() == []  # idempotent when drained
+
+
+def test_serve_driver_batches_fewer_calls_than_requests(monkeypatch):
+    from repro.launch import serve
+
+    built = []
+
+    def stub_backend(name, cfg, *, max_batch=8, max_seq=256, seed=0):
+        be = _StubBackend(name, max_batch)
+        built.append(be)
+        return be
+
+    monkeypatch.setattr(serve, "Backend", stub_backend)
+    assert serve.main(["--requests", "12", "--max-batch", "4",
+                       "--archs", "qwen2.5-3b", "mamba2-370m",
+                       "--dryrun-artifact", "/nonexistent"]) == 0
+    calls = sum(len(be.batch_sizes) for be in built)
+    served = sum(sum(be.batch_sizes) for be in built)
+    assert served == 12
+    assert calls < 12  # true batching: fewer engine calls than requests
+
+
+def test_serve_adapt_observes_energy_scaled_by_slowdown(monkeypatch):
+    """--adapt must move the ENERGY column (what greedy routing minimizes),
+    scaled by the backend's slowdown relative to its fastest batch."""
+    from repro.launch import serve
+
+    class SlowingBackend(_StubBackend):
+        def serve_batch(self, requests):
+            results = super().serve_batch(requests)
+            slow = 0.005 * len(self.batch_sizes)  # each batch slower
+            return [Result(uid=r.uid, tokens=r.tokens, prefill_s=slow,
+                           decode_s=0.01, backend=r.backend,
+                           batch_size=r.batch_size) for r in results]
+
+    observed = []
+    real_observe = serve.ServingPool.observe
+
+    def spy(self, arch, **kw):
+        observed.append((arch, kw))
+        return real_observe(self, arch, **kw)
+
+    monkeypatch.setattr(serve.ServingPool, "observe", spy)
+    monkeypatch.setattr(
+        serve, "Backend",
+        lambda name, cfg, *, max_batch=8, max_seq=256, seed=0:
+        SlowingBackend(name, max_batch))
+    assert serve.main(["--requests", "8", "--max-batch", "2",
+                       "--archs", "qwen2.5-3b",
+                       "--dryrun-artifact", "/nonexistent", "--adapt"]) == 0
+    assert observed
+    assert all({"time_ms", "energy_mwh"} <= set(kw) for _, kw in observed)
+    energies = [kw["energy_mwh"] for _, kw in observed]
+    # per-shape baselines: each shape's first observation sits at the
+    # profiled value; repeated shapes see the growing slowdown
+    assert max(energies) > min(energies) > 0
+
+
+def test_serve_batch_equivalent_to_single_requests():
+    """Batched serve_batch returns the same tokens as serving each request
+    alone (equal-length prompts: no padding divergence)."""
+    from repro.configs import get_config
+    from repro.serving.engine import Backend
+
+    cfg = get_config("qwen2.5-3b").reduced()
+    be = Backend("qwen", cfg, max_seq=64)
+    reqs = [Request(uid=i, prompt=np.arange(9) * (i + 2), max_new_tokens=3)
+            for i in range(3)]
+    batched = be.serve_batch(reqs)
+    for req, res in zip(reqs, batched):
+        solo = be.serve_batch([req])[0]
+        assert res.batch_size == 3 and solo.batch_size == 1
+        np.testing.assert_array_equal(res.tokens, solo.tokens)
+
+
+def test_dispatch_queue_mixed_lengths_match_solo_serving():
+    """Regression: a mixed-length flush must split into homogeneous
+    serve_batch calls — right-padding a short prompt next to a longer one
+    makes its first generated token come from a PAD position."""
+    from repro.configs import get_config
+    from repro.serving.engine import Backend
+
+    cfg = get_config("qwen2.5-3b").reduced()
+    q = DispatchQueue(Backend("qwen", cfg, max_batch=4, max_seq=64))
+    reqs = [Request(uid=0, prompt=np.arange(5), max_new_tokens=3),
+            Request(uid=1, prompt=np.arange(9), max_new_tokens=3),
+            Request(uid=2, prompt=np.arange(5) + 7, max_new_tokens=3)]
+    got = []
+    for r in reqs:
+        got += q.submit(r)
+    got += q.flush()
+    assert q.calls == 2 and q.served == 3  # one call per length group
+    by_uid = {r.uid: r for r in got}
+    for req in reqs:
+        solo = q.backend.serve_batch([req])[0]
+        np.testing.assert_array_equal(by_uid[req.uid].tokens, solo.tokens)

@@ -8,17 +8,22 @@ import pytest
 
 SCRIPT = r"""
 import os
+# force the host platform BEFORE jax import: the 8 simulated devices only
+# exist on CPU, and without this a libtpu install probes GCP instance
+# metadata with minutes of retries (the stripped subprocess env drops the
+# JAX_PLATFORMS=cpu this container's shell exports)
+os.environ["JAX_PLATFORMS"] = "cpu"
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 from repro.configs import get_config
 from repro.launch.dryrun import lower_combo
 from repro.launch import hlo_cost
+from repro.launch.mesh import make_mesh
 from repro.models.base import InputShape
 from repro.sharding import specs as sp
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("qwen2.5-3b").reduced(d_model=256, num_heads=8,
                                        num_kv_heads=4, head_dim=32,
                                        vocab_size=512, d_ff=512)

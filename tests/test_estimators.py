@@ -1,8 +1,7 @@
 """Estimator (ED/SF/OB) and scene-generator tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _propcheck import given, settings, st
 
 from repro.core.estimators import (EdgeDetectionEstimator, OracleEstimator,
                                    OutputBasedEstimator)

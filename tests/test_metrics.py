@@ -1,7 +1,6 @@
 """mAP metric unit + property tests."""
 import numpy as np
-import hypothesis.strategies as st
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core.metrics import MAPAccumulator, average_precision, iou
 

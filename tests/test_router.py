@@ -1,7 +1,6 @@
 """Algorithm 1 unit tests + the Theorem 3.1 optimality property."""
-import hypothesis.strategies as st
 import pytest
-from hypothesis import given, settings
+from _propcheck import given, settings, st
 
 from repro.core.groups import DEFAULT_GROUP_RULES, group_of
 from repro.core.profiles import ProfileEntry, ProfileTable
@@ -49,6 +48,15 @@ def test_greedy_group_dependence(toy_table):
     # group 4: tiny=34, mid=47, big=60; delta=5 -> only big
     e = greedy_route(7, toy_table, delta_map=5.0)  # count 7 -> group 4
     assert e.pair == ("big", "devC")
+
+
+def test_greedy_unprofiled_group_names_the_group():
+    # regression: used to surface as a bare `max() arg is an empty sequence`
+    # when the profile (e.g. a dry-run table filtered by --archs) had no rows
+    # for the requested group
+    table = table_from([("tiny", "devA", 0, 50.0, 5.0, 0.010)])
+    with pytest.raises(ValueError, match="no profile rows for group 4"):
+        greedy_route(7, table, delta_map=5.0)
 
 
 def test_group_rules():

@@ -4,6 +4,7 @@ import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_mesh
 from repro.sharding import specs as sp
 from repro.sharding import ctx
 
@@ -22,8 +23,7 @@ def test_spec_rules_basic():
 
 
 def test_divisibility_drops_axes():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     # fake a 16x16 mesh via explicit shape map
     class FakeMesh:
         shape = {"data": 16, "model": 16}
@@ -36,8 +36,7 @@ def test_divisibility_drops_axes():
 
 
 def test_batch_spec():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     assert sp.batch_spec(mesh, 8, 2) == P(("data",), None)
     class FakeMesh:
         axis_names = ("pod", "data", "model")
@@ -53,8 +52,7 @@ def test_ctx_noop_outside_context():
 
 
 def test_ctx_skips_non_divisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     with ctx.activation_sharding(("data",), 16, mesh=mesh):
         x = jnp.ones((3, 8))  # 3 % 16 != 0
         assert ctx.constrain_batch(x) is x
