@@ -140,7 +140,110 @@ def bench_delta_sweep(quick=False):
 
 # -------------------------------------------------------- gateway overhead
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def bench_gateway_hotpath(quick=False):
+    """Fused-vs-unfused gateway latency + batched-vs-scalar routing
+    throughput: the two per-frame hot-path costs this repo optimizes.
+
+    Canny: 'unfused' runs the same maths stage-per-dispatch (a device sync
+    between blur/Sobel/NMS/hysteresis — the per-stage HBM-round-trip cost
+    model); 'fused' is one launch (the jnp oracle under one jit on CPU, the
+    Pallas megakernel on TPU).  Routing: B python greedy_route calls vs one
+    tensorized route_batch call, with a per-frame exact-match check."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.profiles import ProfileEntry, ProfileTable
+    from repro.core.router import greedy_route, route_batch
+    from repro.detection.detectors import DETECTOR_CONFIGS
+    from repro.detection.devices import DEVICES, TESTBED_PAIRS
+    from repro.kernels.canny_fused import ref as canny_ref
+    from repro.kernels.canny_fused.ops import canny_edge
+
+    def timeit(fn, *args, n=None):
+        n = n or (5 if quick else 20)
+        jax.block_until_ready(fn(*args))  # compile/warm
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n * 1e6
+
+    backend = jax.default_backend()
+    b, h, w = (4, 64, 64) if quick else (8, 96, 96)
+    img = jax.random.uniform(jax.random.PRNGKey(0), (b, h, w), jnp.float32)
+    unfused_us = timeit(lambda x: canny_ref.canny_edge_staged(x), img)
+    fused_us = timeit(lambda x: canny_edge(x), img)
+    fused_matches = bool(np.array_equal(
+        np.asarray(canny_edge(img, impl="interpret", tile_rows=32)),
+        np.asarray(canny_ref.canny_edge(img))))
+
+    print("\n== gateway hot path (fused vs unfused) ==")
+    print("stage,impl,us_per_batch,us_per_frame")
+    print(f"canny,unfused_staged,{unfused_us:.0f},{unfused_us / b:.0f}")
+    print(f"canny,fused_{backend},{fused_us:.0f},{fused_us / b:.0f}")
+    print(f"canny_fused_bit_identical_to_oracle,{fused_matches}")
+
+    # routing: nominal profile over the paper testbed (routing dynamics
+    # only — no trained detectors needed)
+    nominal = {"ssd_v1": 52.0, "ssd_lite": 55.0, "yolov8_n": 57.0,
+               "yolov8_s": 60.0}
+    entries = []
+    for m, d in TESTBED_PAIRS:
+        flops = DETECTOR_CONFIGS[m].flops
+        for g in range(5):
+            entries.append(ProfileEntry(
+                m, d, g, nominal[m] - 1.5 * g,
+                DEVICES[d].time_ms(flops), DEVICES[d].energy_mwh(flops)))
+    table = ProfileTable(entries)
+    nb = 1024 if quick else 4096
+    counts = np.random.default_rng(0).integers(0, 9, size=nb)
+    t0 = time.perf_counter()
+    scalar_pairs = [greedy_route(int(c), table, 5.0).pair for c in counts]
+    scalar_s = time.perf_counter() - t0
+    route_batch(counts, table, 5.0)  # warm the jit
+    t0 = time.perf_counter()
+    idx = route_batch(counts, table, 5.0)
+    batched_s = time.perf_counter() - t0
+    batched_pairs = [table.entries[i].pair for i in idx]
+    match = batched_pairs == scalar_pairs
+    print("routing,impl,requests_per_s")
+    print(f"routing,scalar_python,{nb / scalar_s:.0f}")
+    print(f"routing,batched_xla,{nb / batched_s:.0f}")
+    print(f"routing_batched_matches_scalar,{match}")
+
+    return {
+        "backend": backend,
+        "canny": {"batch": b, "frame": [h, w],
+                  "unfused_staged_us_per_frame": unfused_us / b,
+                  "fused_us_per_frame": fused_us / b,
+                  "speedup": unfused_us / fused_us,
+                  "fused_bit_identical_to_oracle": fused_matches},
+        "routing": {"batch": nb,
+                    "scalar_requests_per_s": nb / scalar_s,
+                    "batched_requests_per_s": nb / batched_s,
+                    "speedup": scalar_s / batched_s,
+                    "batched_matches_scalar": match},
+    }
+
+
 def bench_overhead(quick=False):
+    hotpath = bench_gateway_hotpath(quick)
+    # persist the perf trajectory at the repo root (append-only across PRs);
+    # the smoke target relies on a FAILED write exiting nonzero
+    path = os.path.join(REPO_ROOT, "BENCH_gateway.json")
+    try:
+        history = []
+        if os.path.exists(path) and os.path.getsize(path) > 0:
+            with open(path) as f:
+                history = json.load(f)
+        history.append(hotpath)
+        with open(path, "w") as f:
+            json.dump(history, f, indent=1)
+        print(f"wrote {path} ({len(history)} run(s))")
+    except (OSError, ValueError) as exc:
+        raise SystemExit(f"cannot write {path}: {exc}")
+
     scenes = sc.full_dataset(60 if quick else 150, seed=35)
     rows = common.run_all_routers(scenes, delta=5.0,
                                   subset={"Orc", "ED", "SF", "OB", "RR"})

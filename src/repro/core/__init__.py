@@ -1,11 +1,11 @@
 """ECORE core: profiling table, routing algorithms, estimators, gateway."""
 from .groups import DEFAULT_GROUP_RULES, group_of
-from .profiles import ProfileEntry, ProfileTable
+from .profiles import ProfileArrays, ProfileEntry, ProfileTable
 from .router import (BASELINE_ROUTERS, GreedyEstimateRouter,
                      HighestMAPPerGroupRouter, HighestMAPRouter,
                      LowestEnergyRouter, LowestInferenceRouter, OracleRouter,
                      RandomRouter, RoundRobinRouter, feasible_for_count,
-                     feasible_set, greedy_route, pareto_front)
+                     feasible_set, greedy_route, pareto_front, route_batch)
 from .estimators import (EdgeDetectionEstimator, OracleEstimator,
                          OutputBasedEstimator, SSDFrontEndEstimator)
 from .gateway import EpisodeStats, Gateway

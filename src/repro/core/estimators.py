@@ -9,16 +9,28 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.detection.canny import canny_count
+from repro.detection.canny import canny_count, canny_count_batch
 from repro.detection.detectors import DETECTOR_CONFIGS
 from repro.detection.scenes import IMG
 
 
 class Estimator:
     name = "base"
+    #: True if estimate_batch is a real batched launch with no per-frame
+    #: feedback dependency (lets the gateway estimate+route whole batches)
+    batchable = False
 
     def estimate(self, image: np.ndarray) -> Tuple[int, float]:
         raise NotImplementedError
+
+    def estimate_batch(self, images: np.ndarray
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """images [B,H,W] -> (counts [B], gateway_flops [B]).  The generic
+        fallback loops ``estimate``; batchable estimators override with one
+        device launch for the whole batch."""
+        pairs = [self.estimate(im) for im in images]
+        return (np.asarray([c for c, _ in pairs]),
+                np.asarray([f for _, f in pairs], np.float64))
 
     def observe(self, detected_count: int) -> None:
         """Feedback from the backend's detection result (used by OB)."""
@@ -30,17 +42,23 @@ class Estimator:
 class EdgeDetectionEstimator(Estimator):
     """ED: Canny edges -> connected-component count.  Cheapest, coarse."""
     name = "ED"
+    batchable = True
     # gaussian+sobel+nms+hysteresis: ~60 flops/pixel
     FLOPS_PER_PIXEL = 60.0
 
     def estimate(self, image):
         return canny_count(image), image.size * self.FLOPS_PER_PIXEL
 
+    def estimate_batch(self, images):
+        flops = np.full(len(images), images[0].size * self.FLOPS_PER_PIXEL)
+        return canny_count_batch(images), flops
+
 
 class SSDFrontEndEstimator(Estimator):
     """SF: a lightweight detector AT THE GATEWAY counts objects.  More
     accurate than ED, at a higher gateway cost."""
     name = "SF"
+    batchable = True
 
     def __init__(self, detector_params, model: str = "ssd_v1",
                  score_thr: float = 0.5):
@@ -53,6 +71,11 @@ class SSDFrontEndEstimator(Estimator):
     def estimate(self, image):
         boxes, scores, classes = self._run(self._params, image[None])[0]
         return int((scores >= self._thr).sum()), self._flops
+
+    def estimate_batch(self, images):
+        outs = self._run(self._params, np.asarray(images))
+        counts = np.asarray([int((s >= self._thr).sum()) for _, s, _ in outs])
+        return counts, np.full(len(images), self._flops, np.float64)
 
 
 class OutputBasedEstimator(Estimator):

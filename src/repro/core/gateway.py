@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core.energy import gateway_cost
 from repro.core.estimators import Estimator, OracleEstimator
+from repro.core.groups import DEFAULT_GROUP_RULES, group_of
 from repro.core.metrics import MAPAccumulator
 from repro.core.profiles import ProfileTable
 from repro.core.router import Router
@@ -60,13 +61,26 @@ class Gateway:
     re-measured, so it stays poisoned after the device recovers.
     ``explore_every=N`` serves every Nth request on a round-robin pair
     instead of the router's pick (a small accuracy/energy tax), keeping
-    every pair's profile fresh."""
+    every pair's profile fresh.
+
+    Batched hot path: with a ``batchable`` estimator (ED/SF) and a
+    ``batchable`` router (greedy/oracle) and the loop open (``adapt=False``),
+    ``process_stream`` estimates the WHOLE stream in one device launch and
+    routes it in one XLA call (``Router.route_batch``) instead of per-frame
+    Python — decisions are identical to the scalar path (tested).  Set
+    ``batch_routing=False`` to force the scalar path.
+
+    mAP closed loop: ``adapt_map=True`` (requires ``adapt=True``) folds each
+    request's MEASURED per-frame detection quality back into the served
+    pair's row for the scene's TRUE group via ``observe`` — the third
+    profile column (after latency/energy) the runtime keeps fresh."""
 
     def __init__(self, router: Router, table: ProfileTable,
                  detector_params: Dict[str, Dict],
                  estimator: Optional[Estimator] = None, *,
                  fleet=None, adapt: bool = False, alpha: float = 0.1,
-                 explore_every: int = 0):
+                 explore_every: int = 0, adapt_map: bool = False,
+                 batch_routing: bool = True):
         from repro.detection.train import run_detector  # lazy: heavy import
         self._run = run_detector
         self.router = router
@@ -77,38 +91,85 @@ class Gateway:
         self.adapt = adapt
         self.alpha = alpha
         self.explore_every = explore_every
+        self.adapt_map = adapt_map
+        self.batch_routing = batch_routing
         if adapt and getattr(router, "table", None) is not table:
             raise ValueError(
                 "adapt=True requires router.table to BE the gateway's table "
                 "(same object): observe_pair updates would otherwise never "
                 "reach the router's decisions")
+        if adapt_map and not adapt:
+            raise ValueError("adapt_map=True requires adapt=True")
+
+    def observe(self, pair: Tuple[str, str], group: int, *,
+                map_pct: Optional[float] = None,
+                time_ms: Optional[float] = None,
+                energy_mwh: Optional[float] = None) -> None:
+        """Fold runtime measurements into the profile: latency/energy are
+        group-independent (every row of the pair moves, like the serving
+        pool); detection quality is per-group, so a measured mAP only
+        touches the observed group's row."""
+        if time_ms is not None or energy_mwh is not None:
+            self.table.observe_pair(pair, time_ms=time_ms,
+                                    energy_mwh=energy_mwh, alpha=self.alpha)
+        if map_pct is not None:
+            self.table.observe(pair, group, map_pct=map_pct,
+                               alpha=self.alpha)
+
+    def _route_all(self, scenes: List[Scene]):
+        """The batched estimate->route fast path, or None when per-frame
+        semantics (closed loop, exploration, feedback estimators) force the
+        scalar loop."""
+        # note: explore_every only fires under adapt (see the scalar loop),
+        # so adapt alone decides; exploration never disables this path on
+        # an open-loop stream
+        if (not self.batch_routing or self.adapt
+                or self.estimator is None or not self.estimator.batchable
+                or not self.router.batchable or not scenes):
+            return None
+        images = np.stack([s.image for s in scenes])
+        counts, flops = self.estimator.estimate_batch(images)
+        pairs = self.router.route_batch(
+            estimated_counts=counts,
+            true_counts=[s.count for s in scenes])
+        return list(zip(counts, flops, pairs))
 
     def process_stream(self, stream: Sequence[Scene]) -> EpisodeStats:
+        scenes = list(stream)
         acc = MAPAccumulator(NUM_CLASSES)
         be_energy = be_time = gw_energy = gw_time = 0.0
         hist: Dict[str, int] = {}
         if self.estimator is not None:
             self.estimator.reset()
         self.router.reset()
-        for step, scene in enumerate(stream):
+        routed = self._route_all(scenes)
+        for step, scene in enumerate(scenes):
             est_count = None
-            if self.estimator is not None:
-                if isinstance(self.estimator, OracleEstimator):
-                    self.estimator.true_count = scene.count
-                est_count, est_flops = self.estimator.estimate(scene.image)
-                gc = gateway_cost(est_flops)
+            if routed is not None:
+                est_count, est_flops, pair = routed[step]
+                gc = gateway_cost(float(est_flops))
                 gw_energy += gc["energy_mwh"]
                 gw_time += gc["time_ms"]
             else:
-                gc = gateway_cost(0.0)  # routing-table lookup only
-                gw_energy += gc["energy_mwh"]
-                gw_time += gc["time_ms"]
-            pair = self.router.route(estimated_count=est_count,
-                                     true_count=scene.count)
-            if (self.adapt and self.explore_every
-                    and step % self.explore_every == self.explore_every - 1):
-                pairs = self.table.pairs()
-                pair = pairs[(step // self.explore_every) % len(pairs)]
+                if self.estimator is not None:
+                    if isinstance(self.estimator, OracleEstimator):
+                        self.estimator.true_count = scene.count
+                    est_count, est_flops = self.estimator.estimate(
+                        scene.image)
+                    gc = gateway_cost(est_flops)
+                    gw_energy += gc["energy_mwh"]
+                    gw_time += gc["time_ms"]
+                else:
+                    gc = gateway_cost(0.0)  # routing-table lookup only
+                    gw_energy += gc["energy_mwh"]
+                    gw_time += gc["time_ms"]
+                pair = self.router.route(estimated_count=est_count,
+                                         true_count=scene.count)
+                if (self.adapt and self.explore_every
+                        and step % self.explore_every
+                        == self.explore_every - 1):
+                    pairs = self.table.pairs()
+                    pair = pairs[(step // self.explore_every) % len(pairs)]
             model, device = pair
             hist[f"{model}@{device}"] = hist.get(f"{model}@{device}", 0) + 1
             boxes, scores, classes = self._run(self.params[model],
@@ -123,8 +184,17 @@ class Gateway:
             be_energy += e_mwh
             be_time += t_ms
             if self.adapt:
-                self.table.observe_pair(pair, time_ms=t_ms, energy_mwh=e_mwh,
-                                        alpha=self.alpha)
+                measured_map = None
+                if self.adapt_map:
+                    one = MAPAccumulator(NUM_CLASSES)
+                    one.add_image(boxes, scores, classes, scene.boxes,
+                                  scene.classes)
+                    measured_map = one.map()
+                group = group_of(scene.count,
+                                 getattr(self.router, "rules",
+                                         None) or DEFAULT_GROUP_RULES)
+                self.observe(pair, group, time_ms=t_ms, energy_mwh=e_mwh,
+                             map_pct=measured_map)
             if self.estimator is not None:
                 # OB feedback: the count the BACKEND detected
                 self.estimator.observe(int((scores >= 0.5).sum()))

@@ -29,11 +29,37 @@ class ProfileEntry:
         return f"{self.model}@{self.device}"
 
 
+@dataclasses.dataclass(frozen=True)
+class ProfileArrays:
+    """Array-backed view of a ProfileTable for tensorized routing.
+
+    One row per group, padded to the widest group: within a row, entries
+    keep the TABLE's order (so a masked argmin breaks ties exactly like the
+    scalar ``min`` over ``for_group``).  Pads carry -inf mAP / +inf cost and
+    ``valid=False``.  ``entry_index[g, p]`` maps back into
+    ``ProfileTable.entries``; ``row_of`` maps a group label to its row.
+
+    Snapshot semantics: built for one table ``version`` and cached until an
+    ``observe`` bumps it (see ``ProfileTable.as_arrays``).
+    """
+    groups: Tuple[int, ...]
+    row_of: Dict[int, int]
+    map_pct: object      # jnp [G, P] f32
+    energy_mwh: object   # jnp [G, P] f32
+    time_ms: object      # jnp [G, P] f32
+    valid: object        # jnp [G, P] bool
+    entry_index: object  # np  [G, P] int32
+    version: int
+
+
 class ProfileTable:
     def __init__(self, entries: Iterable[ProfileEntry]):
         self.entries: List[ProfileEntry] = list(entries)
         if not self.entries:
             raise ValueError("empty profiling table")
+        #: bumped on every observe(); invalidates the as_arrays() cache
+        self.version = 0
+        self._arrays: Optional[ProfileArrays] = None
 
     def for_group(self, group: int) -> List[ProfileEntry]:
         return [e for e in self.entries if e.group == group]
@@ -56,6 +82,38 @@ class ProfileTable:
         rows = [e.map_pct for e in self.entries if e.pair == pair]
         return sum(rows) / len(rows)
 
+    def as_arrays(self) -> ProfileArrays:
+        """Padded per-group arrays for the tensorized router (cached; rebuilt
+        lazily after an ``observe`` bumps ``version``)."""
+        if self._arrays is not None and self._arrays.version == self.version:
+            return self._arrays
+        import numpy as np
+        import jax.numpy as jnp
+        groups = sorted({e.group for e in self.entries})
+        row_of = {g: i for i, g in enumerate(groups)}
+        per_row = [[i for i, e in enumerate(self.entries) if e.group == g]
+                   for g in groups]
+        G, P = len(groups), max(len(r) for r in per_row)
+        map_pct = np.full((G, P), -np.inf, np.float32)
+        energy = np.full((G, P), np.inf, np.float32)
+        time_ms = np.full((G, P), np.inf, np.float32)
+        valid = np.zeros((G, P), bool)
+        entry_index = np.zeros((G, P), np.int32)
+        for r, idxs in enumerate(per_row):
+            for p, i in enumerate(idxs):
+                e = self.entries[i]
+                map_pct[r, p] = e.map_pct
+                energy[r, p] = e.energy_mwh
+                time_ms[r, p] = e.time_ms
+                valid[r, p] = True
+                entry_index[r, p] = i
+        self._arrays = ProfileArrays(
+            groups=tuple(groups), row_of=row_of,
+            map_pct=jnp.asarray(map_pct), energy_mwh=jnp.asarray(energy),
+            time_ms=jnp.asarray(time_ms), valid=jnp.asarray(valid),
+            entry_index=entry_index, version=self.version)
+        return self._arrays
+
     # ----------------------------------------------------- dynamic profiling
     def observe(self, pair: Tuple[str, str], group: int, *,
                 time_ms: Optional[float] = None,
@@ -77,6 +135,7 @@ class ProfileTable:
                 if map_pct is not None:
                     upd["map_pct"] = (1 - alpha) * e.map_pct + alpha * map_pct
                 self.entries[i] = _dc.replace(e, **upd)
+                self.version += 1
                 return
         raise KeyError((pair, group))
 

@@ -16,6 +16,8 @@ from __future__ import annotations
 import random
 from typing import List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from .groups import DEFAULT_GROUP_RULES, group_of
 from .profiles import ProfileEntry, ProfileTable
 
@@ -67,6 +69,81 @@ def greedy_route(number_of_objects: int, profiling_data: ProfileTable,
     return min(refined, key=lambda e: e.energy_mwh)         # lines 14-15
 
 
+# ------------------------------------------------------- tensorized routing
+
+def _route_batch_jit():
+    """Build (once) the jitted Algorithm-1-over-arrays kernel.
+
+    Lines 1-7 become a vectorized rule lookup, lines 8-13 a per-row max +
+    threshold mask, lines 14-15 a masked argmin — one XLA call for the whole
+    batch instead of B Python loops.  Returns (group_row, pick, ok): the
+    arrays row each count landed in (-1 = unprofiled group), the argmin
+    column, and whether the feasible set was non-empty.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def kernel(counts, lo, hi, rule_rows, map_pct, energy, valid, delta):
+        c = counts[:, None]
+        m = (c >= lo[None, :]) & (c <= hi[None, :])         # lines 1-7
+        rule = jnp.where(m.any(axis=1), jnp.argmax(m, axis=1),
+                         lo.shape[0] - 1)                   # group_of fallback
+        g = rule_rows[rule]                                 # lines 8-9
+        g_safe = jnp.maximum(g, 0)
+        gm = map_pct[g_safe]                                # [B, P]
+        max_map = jnp.max(gm, axis=1, keepdims=True)        # line 10 (pads=-inf)
+        feasible = valid[g_safe] & (gm >= max_map - delta)  # lines 11-13
+        e = jnp.where(feasible, energy[g_safe], jnp.inf)
+        pick = jnp.argmin(e, axis=1)                        # lines 14-15
+        return g, pick, feasible.any(axis=1)
+
+    return kernel
+
+
+_route_batch_kernel = None
+
+
+def route_batch(counts, profiling_data: ProfileTable, delta_map: float,
+                group_rules: Sequence = DEFAULT_GROUP_RULES) -> np.ndarray:
+    """Algorithm 1 lines 1-15 over a whole batch of counts in one XLA call.
+
+    Returns indices into ``profiling_data.entries`` — one per count, exactly
+    the entry scalar ``greedy_route`` would pick (ties break identically:
+    arrays keep table order and argmin takes the first minimum; property-
+    tested in tests/test_batched_routing.py).  The comparisons run in f32,
+    so mAP/energy values that only differ beyond f32 precision could in
+    principle diverge from the float64 scalar path — real profiles are far
+    coarser than that.
+
+    Raises the same ``ValueError`` as the scalar path when any count lands
+    in an unprofiled group.
+    """
+    import jax.numpy as jnp
+    global _route_batch_kernel
+    if _route_batch_kernel is None:
+        _route_batch_kernel = _route_batch_jit()
+    arrays = profiling_data.as_arrays()
+    lo = np.asarray([r[0] for r in group_rules], np.int32)
+    hi = np.asarray([r[1] if r[1] is not None else np.iinfo(np.int32).max
+                     for r in group_rules], np.int32)
+    rule_rows = np.asarray([arrays.row_of.get(label, -1)
+                            for _, _, label in group_rules], np.int32)
+    counts = np.asarray(counts, np.int32)
+    g, pick, ok = _route_batch_kernel(
+        jnp.asarray(counts), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(rule_rows), arrays.map_pct, arrays.energy_mwh,
+        arrays.valid, jnp.float32(delta_map))
+    g, pick, ok = np.asarray(g), np.asarray(pick), np.asarray(ok)
+    if (bad := ~(ok & (g >= 0))).any():
+        group = group_of(int(counts[np.argmax(bad)]), group_rules)
+        known = sorted({e.group for e in profiling_data.entries})
+        raise ValueError(
+            f"no profile rows for group {group} (table covers groups "
+            f"{known}); profile every group the router can be asked for")
+    return arrays.entry_index[g, pick]
+
+
 class Router:
     """Base: given request metadata, pick a (model, device) pair."""
     name = "base"
@@ -74,6 +151,9 @@ class Router:
     uses_estimate = False
     #: True if the router consumes the ground-truth count (oracle-class)
     uses_ground_truth = False
+    #: True if route_batch is a single tensorized call (stateless routers
+    #: whose per-frame decision depends only on the count)
+    batchable = False
 
     def __init__(self, table: ProfileTable, delta_map: float = 5.0,
                  group_rules: Sequence = DEFAULT_GROUP_RULES):
@@ -85,6 +165,24 @@ class Router:
               true_count: Optional[int] = None) -> Pair:
         raise NotImplementedError
 
+    def route_batch(self, *, estimated_counts=None,
+                    true_counts=None) -> List[Pair]:
+        """Route a whole batch.  Tensorized (one XLA call) for ``batchable``
+        routers; the generic fallback loops ``route`` so every router face
+        exposes the same API."""
+        n = len(estimated_counts if estimated_counts is not None
+                else true_counts)
+        est = ([None] * n if estimated_counts is None
+               else list(estimated_counts))
+        true = [None] * n if true_counts is None else list(true_counts)
+        return [self.route(estimated_count=e, true_count=t)
+                for e, t in zip(est, true)]
+
+    def _route_batch_greedy(self, counts) -> List[Pair]:
+        idx = route_batch(counts, self.table, self.delta, self.rules)
+        entries = self.table.entries
+        return [entries[i].pair for i in idx]
+
     def reset(self):
         pass
 
@@ -94,20 +192,29 @@ class GreedyEstimateRouter(Router):
     this; the estimator lives in the gateway)."""
     name = "greedy"
     uses_estimate = True
+    batchable = True
 
     def route(self, *, estimated_count=None, true_count=None) -> Pair:
         return greedy_route(int(estimated_count or 0), self.table, self.delta,
                             self.rules).pair
+
+    def route_batch(self, *, estimated_counts=None, true_counts=None):
+        counts = [int(c or 0) for c in estimated_counts]
+        return self._route_batch_greedy(counts)
 
 
 class OracleRouter(Router):
     """Orc: Algorithm 1 with perfect knowledge of the object count."""
     name = "Orc"
     uses_ground_truth = True
+    batchable = True
 
     def route(self, *, estimated_count=None, true_count=None) -> Pair:
         return greedy_route(int(true_count), self.table, self.delta,
                             self.rules).pair
+
+    def route_batch(self, *, estimated_counts=None, true_counts=None):
+        return self._route_batch_greedy([int(c) for c in true_counts])
 
 
 class RoundRobinRouter(Router):

@@ -1,65 +1,28 @@
 """Canny edge detection + connected-component object counting (ED estimator).
 
-Pipeline (paper §3.3 approach 1): gaussian blur -> Sobel gradients (Pallas
-kernel on TPU, jnp oracle on CPU) -> direction-quantized non-maximum
-suppression -> double-threshold hysteresis -> connected components of the
-dilated edge map, filtered by size, as the object-count estimate.
+Pipeline (paper §3.3 approach 1): gaussian blur -> Sobel gradients ->
+direction-quantized non-maximum suppression -> double-threshold hysteresis ->
+connected components of the dilated edge map, filtered by size, as the
+object-count estimate.
+
+The edge-map stage is the gateway's per-frame hot path and lives in
+``repro.kernels.canny_fused``: one fused Pallas megakernel launch on TPU
+(no intermediate map ever round-trips to HBM; only the bool edge map is
+written), the bit-identical jnp oracle everywhere else.  This module adds
+the (host-side) component counting on top.
 """
 from __future__ import annotations
 
-from typing import Tuple
-
-import jax
-import jax.numpy as jnp
 import numpy as np
+import jax.numpy as jnp
 
-from repro.kernels.sobel.ops import sobel_grad
-
-
-def gaussian_blur(img, sigma: float = 1.0):
-    """Separable 5-tap gaussian, batch [B,H,W]."""
-    r = 2
-    xs = jnp.arange(-r, r + 1)
-    k = jnp.exp(-0.5 * (xs / sigma) ** 2)
-    k = k / k.sum()
-    pad = jnp.pad(img, ((0, 0), (0, 0), (r, r)), mode="edge")
-    h = sum(pad[:, :, i:i + img.shape[2]] * k[i] for i in range(2 * r + 1))
-    padv = jnp.pad(h, ((0, 0), (r, r), (0, 0)), mode="edge")
-    return sum(padv[:, i:i + img.shape[1], :] * k[i]
-               for i in range(2 * r + 1))
+from repro.kernels.canny_fused.ops import canny_edge
+from repro.kernels.canny_fused.ref import gaussian_blur  # noqa: F401  (re-export)
 
 
-@jax.jit
 def _canny_map(img, lo: float = 0.6, hi: float = 1.0):
-    """img [B,H,W] -> edge map [B,H,W] bool (jit-compiled gateway stage)."""
-    sm = gaussian_blur(img)
-    mag, q = sobel_grad(sm)
-    # non-maximum suppression along quantized direction
-    p = jnp.pad(mag, ((0, 0), (1, 1), (1, 1)))
-    h, w = img.shape[1], img.shape[2]
-    c = p[:, 1:h + 1, 1:w + 1]
-    neigh = [
-        (p[:, 1:h + 1, 2:], p[:, 1:h + 1, :w]),        # 0: E/W
-        (p[:, 2:, 2:], p[:, :h, :w]),                  # 1: SE/NW
-        (p[:, 2:, 1:w + 1], p[:, :h, 1:w + 1]),        # 2: S/N
-        (p[:, 2:, :w], p[:, :h, 2:]),                  # 3: SW/NE
-    ]
-    keep = jnp.zeros_like(c, bool)
-    for d, (a, b2) in enumerate(neigh):
-        m = (q == d) & (c >= a) & (c >= b2)
-        keep = keep | m
-    thin = mag * keep
-    strong = thin > hi
-    weak = thin > lo
-    # hysteresis: grow strong into weak (fixed-iteration dilation)
-    def grow(s, _):
-        sp = jnp.pad(s, ((0, 0), (1, 1), (1, 1)))
-        dil = (sp[:, :h, 1:w + 1] | sp[:, 2:, 1:w + 1] | sp[:, 1:h + 1, :w]
-               | sp[:, 1:h + 1, 2:] | sp[:, :h, :w] | sp[:, :h, 2:]
-               | sp[:, 2:, :w] | sp[:, 2:, 2:] | s)
-        return dil & weak, None
-    strong, _ = jax.lax.scan(grow, strong, None, length=8)
-    return strong
+    """img [B,H,W] -> edge map [B,H,W] bool (fused gateway stage)."""
+    return canny_edge(img, lo, hi)
 
 
 def _label_count(edge: np.ndarray, min_size: int = 20,
@@ -103,5 +66,7 @@ def canny_count(img: np.ndarray) -> int:
 
 
 def canny_count_batch(imgs: np.ndarray) -> np.ndarray:
+    """Estimate object counts for a whole [B, H, W] batch: ONE edge-map
+    launch for the batch, then per-image component counting."""
     edges = np.asarray(_canny_map(jnp.asarray(imgs)))
     return np.asarray([_label_count(e) for e in edges])

@@ -1,0 +1,1 @@
+from .ops import canny_edge  # noqa: F401

@@ -1,0 +1,164 @@
+"""Pallas TPU megakernel: the whole Canny gateway stage in one ``pallas_call``.
+
+The gateway runs this on EVERY incoming frame, so the seed pipeline's shape —
+one small Sobel kernel sandwiched between ~6 separate jnp stages, each a full
+HBM round-trip of the frame — put a hard floor under per-frame latency.  This
+kernel fuses gaussian blur -> Sobel -> direction-quantized NMS -> double
+threshold -> fixed-iteration hysteresis into ONE launch: no intermediate
+(blurred / magnitude / thinned) map ever round-trips to HBM — only the final
+bool edge map is written back.
+
+Tiling / halo scheme
+--------------------
+Grid = (batch, row_tiles): each program owns ``tile_rows`` output rows and
+sees three stacked input blocks — the PREVIOUS, CURRENT and NEXT row-tile
+(index maps clamped at the frame edges) — from which it assembles a
+``tile_rows + 2*HALO`` row window.  Fetching whole neighbour tiles (rather
+than an overlapping element-offset window, which BlockSpec's block-index
+granularity cannot express) means each input tile is DMA'd up to 3x, but
+that is input traffic only — still far below the staged pipeline's ~6 full
+frame read+write round-trips, and the win grows with everything that never
+leaves VMEM.  HALO = 12 rows per side is exactly the receptive-field height
+of one output row:
+
+    2 (gaussian blur) + 1 (Sobel) + 1 (NMS) + 8 (hysteresis dilations) = 12
+
+so every window row that influences an emitted row is computed from real
+neighbour data; window rows closer than HALO to the window edge may be
+corrupt (they see the window's own replicated/zero padding instead of the
+true neighbour tile) and are discarded.  This is why ``tile_rows >= HALO`` is
+required: the halo must fit inside one neighbouring block.
+
+Frame-boundary parity: the jnp oracle pads each stage differently (blur and
+Sobel replicate their INPUT at the frame edge; NMS and hysteresis zero-pad),
+and replicating the raw frame before blurring is NOT the same as replicating
+the blurred frame before Sobel.  The kernel therefore re-applies the
+per-stage semantics to the out-of-frame window rows between stages — edge
+rows re-replicated after blur, magnitudes zeroed outside the frame — which
+makes the emitted rows bit-identical to ``ref.canny_edge`` (tested exactly,
+not to a tolerance, in tests/test_canny_fused.py).
+
+VMEM budget: the working set is the window (~[tile_rows+24, W]) in f32 for
+the frame/blur/magnitude stages plus a few bool maps — ~5 f32-equivalent
+buffers.  At the default tile_rows=128 and W=1024 that is ~3 MB, well inside
+the ~16 MB/core budget; frames wider than ~4k columns should shrink
+``tile_rows`` (the grid already scales to any frame HEIGHT).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HYSTERESIS_ITERS
+
+#: rows of neighbour context one output row depends on (see module docstring)
+HALO = 2 + 1 + 1 + HYSTERESIS_ITERS
+
+
+def _canny_kernel(prev_ref, cur_ref, next_ref, out_ref, *,
+                  h: int, tile: int, lo: float, hi: float):
+    i = pl.program_id(1)
+    win = jnp.concatenate([prev_ref[0][tile - HALO:], cur_ref[0],
+                           next_ref[0][:HALO]], axis=0)  # [tile+2*HALO, W]
+    rows, w = win.shape
+    # global frame row of every window row; rows outside [0, h) only occur in
+    # frame-edge tiles (or grid padding past a non-tile-multiple height)
+    gr = (jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
+          + i * tile - HALO)
+    oob_top = gr < 0
+    oob_bot = gr > h - 1
+    oob = oob_top | oob_bot
+    # frame row 0 sits at window index HALO whenever oob_top is non-empty
+    # (only tile 0); frame row h-1 sits at HALO + (h-1) - i*tile whenever
+    # oob_bot is non-empty (clamped to a no-op position otherwise)
+    bot_pos = jnp.clip(HALO + (h - 1) - i * tile, 0, rows - 1)
+
+    def replicate_frame_edges(a):
+        top = a[HALO][None, :]
+        bot = jax.lax.dynamic_slice_in_dim(a, bot_pos, 1, axis=0)
+        return jnp.where(oob_bot, bot, jnp.where(oob_top, top, a))
+
+    # ---- gaussian blur (oracle pads the INPUT with edge replication)
+    win = replicate_frame_edges(win)
+    r = 2
+    # same maths as ref.gauss_kernel, but built from an in-kernel iota —
+    # Pallas kernels cannot capture traced constants like jnp.arange
+    xs = jax.lax.broadcasted_iota(jnp.float32, (2 * r + 1, 1), 0) - r
+    k = jnp.exp(-0.5 * (xs / 1.0) ** 2)
+    k = (k / k.sum())[:, 0]
+    padh = jnp.pad(win, ((0, 0), (r, r)), mode="edge")
+    blur_h = sum(padh[:, j:j + w] * k[j] for j in range(2 * r + 1))
+    padv = jnp.pad(blur_h, ((r, r), (0, 0)), mode="edge")
+    sm = sum(padv[j:j + rows, :] * k[j] for j in range(2 * r + 1))
+
+    # ---- Sobel (oracle pads the BLURRED map with edge replication)
+    sm = replicate_frame_edges(sm)
+    xp = jnp.pad(sm, ((1, 1), (1, 1)), mode="edge")
+    tl = xp[:-2, :-2]; tc = xp[:-2, 1:-1]; tr = xp[:-2, 2:]
+    ml = xp[1:-1, :-2];                     mr = xp[1:-1, 2:]
+    bl = xp[2:, :-2];  bc = xp[2:, 1:-1];  br = xp[2:, 2:]
+    gx = (tr + 2 * mr + br) - (tl + 2 * ml + bl)
+    gy = (bl + 2 * bc + br) - (tl + 2 * tc + tr)
+    mag = jnp.sqrt(gx * gx + gy * gy)
+    q = jnp.round(jnp.arctan2(gy, gx) / (jnp.pi / 4)).astype(jnp.int32) % 4
+
+    # ---- NMS (oracle zero-pads the magnitude at the frame border)
+    mag = jnp.where(oob, 0.0, mag)
+    p = jnp.pad(mag, ((1, 1), (1, 1)))
+    c = p[1:rows + 1, 1:w + 1]
+    neigh = [
+        (p[1:rows + 1, 2:], p[1:rows + 1, :w]),        # 0: E/W
+        (p[2:, 2:], p[:rows, :w]),                     # 1: SE/NW
+        (p[2:, 1:w + 1], p[:rows, 1:w + 1]),           # 2: S/N
+        (p[2:, :w], p[:rows, 2:]),                     # 3: SW/NE
+    ]
+    keep = jnp.zeros_like(c, bool)
+    for d, (a, b2) in enumerate(neigh):
+        keep = keep | ((q == d) & (c >= a) & (c >= b2))
+    thin = mag * keep
+
+    # ---- double threshold + hysteresis (zero-padded at the frame border:
+    # out-of-frame rows must stay False so growth matches the oracle)
+    strong = (thin > hi) & ~oob
+    weak = (thin > lo) & ~oob
+    for _ in range(HYSTERESIS_ITERS):
+        sp = jnp.pad(strong, ((1, 1), (1, 1)))
+        dil = (sp[:rows, 1:w + 1] | sp[2:, 1:w + 1] | sp[1:rows + 1, :w]
+               | sp[1:rows + 1, 2:] | sp[:rows, :w] | sp[:rows, 2:]
+               | sp[2:, :w] | sp[2:, 2:] | strong)
+        strong = dil & weak
+
+    out_ref[0] = strong[HALO:HALO + tile]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lo", "hi", "tile_rows", "interpret"))
+def canny_edge_pallas(img, *, lo: float = 0.6, hi: float = 1.0,
+                      tile_rows: int | None = None, interpret: bool = False):
+    """img [B,H,W] f32 -> edge map [B,H,W] bool, one fused pallas_call.
+
+    ``tile_rows`` picks the row-tile height (defaults to whole-frame up to
+    128 rows); any frame height works, including non-multiples of the tile.
+    """
+    b, h, w = img.shape
+    tile = tile_rows if tile_rows is not None else min(max(h, HALO), 128)
+    if tile < HALO:
+        raise ValueError(
+            f"tile_rows={tile} < HALO={HALO}: the halo must fit inside one "
+            f"neighbouring row-tile block")
+    n = pl.cdiv(h, tile)
+    kernel = functools.partial(_canny_kernel, h=h, tile=tile, lo=lo, hi=hi)
+    block = lambda f: pl.BlockSpec((1, tile, w), f)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n),
+        in_specs=[block(lambda bi, i: (bi, jnp.maximum(i - 1, 0), 0)),
+                  block(lambda bi, i: (bi, i, 0)),
+                  block(lambda bi, i: (bi, jnp.minimum(i + 1, n - 1), 0))],
+        out_specs=block(lambda bi, i: (bi, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), jnp.bool_),
+        interpret=interpret,
+    )(img, img, img)

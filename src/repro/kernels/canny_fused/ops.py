@@ -1,0 +1,22 @@
+"""Dispatch wrapper for the fused Canny gateway kernel."""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+
+
+def canny_edge(img, lo: float = 0.6, hi: float = 1.0, *,
+               impl: str = "auto", tile_rows: int | None = None):
+    """img [B,H,W] f32 -> edge map [B,H,W] bool.
+
+    impl: 'auto' (pallas on TPU, xla oracle elsewhere) | 'xla' |
+    'pallas' (TPU megakernel) | 'interpret' (CPU parity check).
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return ref.canny_edge(img, lo, hi)
+    from .canny_fused import canny_edge_pallas
+    return canny_edge_pallas(img, lo=lo, hi=hi, tile_rows=tile_rows,
+                             interpret=(impl == "interpret"))

@@ -1,0 +1,107 @@
+"""jnp parity oracle for the fused Canny gateway kernel.
+
+``canny_edge`` is the SINGLE semantic definition of the gateway's edge-map
+stage: gaussian blur -> Sobel gradients -> direction-quantized non-maximum
+suppression -> double threshold -> fixed-iteration hysteresis.  The Pallas
+megakernel (canny_fused.py) must reproduce it bit-for-bit; the detection
+pipeline (detection/canny.py) routes through ops.canny_edge which picks the
+oracle on CPU and the kernel on TPU.
+
+``canny_edge_staged`` runs the SAME stages as separate jit calls with a
+device sync between each — the "unfused" baseline benchmarks/run.py times
+against the fused paths.  Stage-per-dispatch is how the seed pipeline
+behaved from the scheduler's point of view: every stage a full HBM
+round-trip of the frame.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sobel import ref as sobel_ref
+
+HYSTERESIS_ITERS = 8
+
+
+def gauss_kernel(sigma: float = 1.0, radius: int = 2):
+    xs = jnp.arange(-radius, radius + 1)
+    k = jnp.exp(-0.5 * (xs / sigma) ** 2)
+    return k / k.sum()
+
+
+def gaussian_blur(img, sigma: float = 1.0):
+    """Separable 5-tap gaussian, batch [B,H,W] (horizontal then vertical)."""
+    r = 2
+    k = gauss_kernel(sigma, r)
+    pad = jnp.pad(img, ((0, 0), (0, 0), (r, r)), mode="edge")
+    h = sum(pad[:, :, i:i + img.shape[2]] * k[i] for i in range(2 * r + 1))
+    padv = jnp.pad(h, ((0, 0), (r, r), (0, 0)), mode="edge")
+    return sum(padv[:, i:i + img.shape[1], :] * k[i]
+               for i in range(2 * r + 1))
+
+
+def nms(mag, q):
+    """Thin edges: keep pixels that are maxima along their quantized
+    gradient direction (zero-padded neighbours at the frame border)."""
+    h, w = mag.shape[1], mag.shape[2]
+    p = jnp.pad(mag, ((0, 0), (1, 1), (1, 1)))
+    c = p[:, 1:h + 1, 1:w + 1]
+    neigh = [
+        (p[:, 1:h + 1, 2:], p[:, 1:h + 1, :w]),        # 0: E/W
+        (p[:, 2:, 2:], p[:, :h, :w]),                  # 1: SE/NW
+        (p[:, 2:, 1:w + 1], p[:, :h, 1:w + 1]),        # 2: S/N
+        (p[:, 2:, :w], p[:, :h, 2:]),                  # 3: SW/NE
+    ]
+    keep = jnp.zeros_like(c, bool)
+    for d, (a, b2) in enumerate(neigh):
+        m = (q == d) & (c >= a) & (c >= b2)
+        keep = keep | m
+    return mag * keep
+
+
+def hysteresis(thin, lo: float, hi: float):
+    """Double threshold, then grow strong edges into weak ones for a fixed
+    number of dilation rounds (zero-padded at the frame border)."""
+    h, w = thin.shape[1], thin.shape[2]
+    strong = thin > hi
+    weak = thin > lo
+
+    def grow(s, _):
+        sp = jnp.pad(s, ((0, 0), (1, 1), (1, 1)))
+        dil = (sp[:, :h, 1:w + 1] | sp[:, 2:, 1:w + 1] | sp[:, 1:h + 1, :w]
+               | sp[:, 1:h + 1, 2:] | sp[:, :h, :w] | sp[:, :h, 2:]
+               | sp[:, 2:, :w] | sp[:, 2:, 2:] | s)
+        return dil & weak, None
+
+    strong, _ = jax.lax.scan(grow, strong, None, length=HYSTERESIS_ITERS)
+    return strong
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi"))
+def canny_edge(img, lo: float = 0.6, hi: float = 1.0):
+    """img [B,H,W] f32 -> edge map [B,H,W] bool (one fused XLA program)."""
+    sm = gaussian_blur(img)
+    mag, q = sobel_ref.sobel_grad(sm)
+    thin = nms(mag, q)
+    return hysteresis(thin, lo, hi)
+
+
+# ------------------------------------------------- unfused benchmark baseline
+
+_blur_jit = jax.jit(gaussian_blur)
+_sobel_jit = jax.jit(sobel_ref.sobel_grad)
+_nms_jit = jax.jit(nms)
+_hyst_jit = jax.jit(hysteresis, static_argnames=("lo", "hi"))
+
+
+def canny_edge_staged(img, lo: float = 0.6, hi: float = 1.0):
+    """Stage-per-dispatch Canny: same maths as ``canny_edge`` but each stage
+    is its own jit call with a sync in between (the per-stage-HBM-round-trip
+    cost model the fused paths eliminate).  Benchmark baseline only."""
+    sm = jax.block_until_ready(_blur_jit(img))
+    mag, q = _sobel_jit(sm)
+    jax.block_until_ready(mag)
+    thin = jax.block_until_ready(_nms_jit(mag, q))
+    return jax.block_until_ready(_hyst_jit(thin, lo, hi))

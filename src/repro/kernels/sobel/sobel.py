@@ -6,8 +6,11 @@ tile resident in VMEM and fuses gradient, magnitude and direction
 quantization in one pass (one HBM read, two writes).
 
 Grid: one program per batch image (scene images are small: 64..256 px, so a
-full [H, W] tile fits VMEM comfortably; for larger frames extend the grid
-over row-tiles with a 1-px halo).
+full [H, W] tile fits VMEM comfortably).  The gateway hot path no longer
+calls this kernel: ``repro.kernels.canny_fused`` fuses blur/Sobel/NMS/
+hysteresis into one row-tiled pallas_call with a 12-row halo, which also
+covers the frames-larger-than-VMEM case.  This standalone kernel remains for
+callers that want raw gradients.
 """
 from __future__ import annotations
 

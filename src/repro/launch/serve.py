@@ -9,7 +9,12 @@ router makes the same decisions it would on the pod.
 
 Dispatch is BATCHED: each backend owns a request queue that flushes up to
 ``--max-batch`` requests per ``serve_batch`` call, so N requests take far
-fewer than N engine calls.  ``--adapt`` closes the loop: each backend's
+fewer than N engine calls, and ``--max-wait-ms`` bounds how long a partial
+batch waits for stragglers before being served anyway.  Routing is batched
+too: with a static profile the whole workload is routed in ONE tensorized
+``ServingPool.route_batch`` call (``--adapt`` forces per-request routing,
+since each observation changes the table the next decision reads).
+``--adapt`` closes the loop: each backend's
 measured per-request latency, relative to its OWN first measurement (local
 CPU ms and pod-profile ms are different scales, so only the relative
 slowdown transfers), rescales its profiled time AND energy via
@@ -62,6 +67,10 @@ def main(argv=None):
     ap.add_argument("--dryrun-artifact", default="artifacts/dryrun.jsonl")
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait-ms", type=float, default=None,
+                    help="serve a partial batch once its oldest request "
+                         "has waited this long (default: wait for a full "
+                         "batch)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--adapt", action="store_true",
                     help="EWMA-update the routing profile from measured "
@@ -116,10 +125,16 @@ def main(argv=None):
                 pool.observe(d.arch, time_ms=prof_t * slowdown,
                              energy_mwh=prof_e * slowdown)
 
-    for uid in range(args.requests):
-        plen = int(rng.choice([32, 128, 1024, 4096, 40_000],
-                              p=[.3, .3, .2, .1, .1]))
-        decision = pool.route(plen)
+    plens = [int(rng.choice([32, 128, 1024, 4096, 40_000],
+                            p=[.3, .3, .2, .1, .1]))
+             for _ in range(args.requests)]
+    # static profile: route the whole workload in one tensorized XLA call;
+    # --adapt routes per request because each observation mutates the table
+    # the next decision must read
+    batch_decisions = None if args.adapt else pool.route_batch(plens)
+    for uid, plen in enumerate(plens):
+        decision = (batch_decisions[uid] if batch_decisions is not None
+                    else pool.route(plen))
         decisions[uid] = (decision, plen)
         routed_energy += decision.energy_mwh
         routed_time += decision.time_ms
@@ -127,10 +142,13 @@ def main(argv=None):
             cfg = get_config(decision.arch).reduced()
             queues[decision.arch] = DispatchQueue(
                 Backend(decision.arch, cfg, max_batch=args.max_batch,
-                        max_seq=96, seed=uid))
+                        max_seq=96, seed=uid),
+                max_wait_ms=args.max_wait_ms)
         prompt = rng.integers(0, 1000, size=min(plen, PROMPT_CAP))
         handle(queues[decision.arch].submit(
             Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new)))
+        for q in queues.values():  # deadline-bounded partial flushes
+            handle(q.poll())
     for q in queues.values():
         handle(q.flush())
 

@@ -95,7 +95,7 @@ class Backend:
 
 
 class DispatchQueue:
-    """Per-backend request queue with batched flush.
+    """Per-backend request queue with batched, latency-bounded flush.
 
     Requests accumulate until ``backend.max_batch`` is reached, then go out
     batched — the driver-side half of the engine's batching support (the
@@ -104,18 +104,44 @@ class DispatchQueue:
     distinct prompt LENGTH: ``serve_batch`` right-pads to the longest prompt
     and reads the first generated token from the batch-wide last position,
     so a mixed-length batch would corrupt the shorter requests' outputs —
-    homogeneous sub-batches keep batched results identical to solo serving."""
+    homogeneous sub-batches keep batched results identical to solo serving.
 
-    def __init__(self, backend: Backend):
+    ``max_wait_ms`` bounds how long the OLDEST pending request waits for the
+    batch to fill: once the deadline passes, the next ``submit`` or
+    ``poll`` serves the partial batch instead of holding it for stragglers.
+    The deadline is checked cooperatively (no background thread) — a serving
+    loop calls ``poll()`` on its idle ticks.  ``clock`` is injectable for
+    deterministic tests (defaults to ``time.monotonic``, seconds)."""
+
+    def __init__(self, backend: Backend, *,
+                 max_wait_ms: Optional[float] = None, clock=time.monotonic):
         self.backend = backend
+        self.max_wait_ms = max_wait_ms
+        self._clock = clock
+        self._oldest: Optional[float] = None
         self.pending: List[Request] = []
         self.calls = 0
         self.served = 0
 
+    def _deadline_passed(self) -> bool:
+        return (self.max_wait_ms is not None and self._oldest is not None
+                and (self._clock() - self._oldest) * 1e3 >= self.max_wait_ms)
+
     def submit(self, req: Request) -> List[Result]:
-        """Enqueue; returns flushed results when the batch fills, else []."""
+        """Enqueue; returns flushed results when the batch fills (or the
+        oldest pending request's deadline has passed), else []."""
+        if not self.pending:
+            self._oldest = self._clock()
         self.pending.append(req)
-        if len(self.pending) >= self.backend.max_batch:
+        if (len(self.pending) >= self.backend.max_batch
+                or self._deadline_passed()):
+            return self.flush()
+        return []
+
+    def poll(self) -> List[Result]:
+        """Serve the pending partial batch if it has waited past
+        ``max_wait_ms``; [] otherwise.  No-op without a deadline."""
+        if self.pending and self._deadline_passed():
             return self.flush()
         return []
 
@@ -123,6 +149,7 @@ class DispatchQueue:
         if not self.pending:
             return []
         batch, self.pending = self.pending, []
+        self._oldest = None
         by_len: Dict[int, List[Request]] = {}
         for r in batch:
             by_len.setdefault(len(r.prompt), []).append(r)

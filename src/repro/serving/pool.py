@@ -25,7 +25,7 @@ import os
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.profiles import ProfileEntry, ProfileTable
-from repro.core.router import feasible_set
+from repro.core.router import feasible_set, route_batch
 
 # prompt-length buckets = the serving "object count groups"
 LENGTH_BUCKETS = ((0, 512, 0), (513, 2048, 1), (2049, 8192, 2),
@@ -108,18 +108,45 @@ class ServingPool:
         return PoolDecision(arch=e.model, bucket=bucket, time_ms=e.time_ms,
                             energy_mwh=e.energy_mwh, score=e.map_pct)
 
+    def route_batch(self, prompt_lens: Sequence[int]) -> List[PoolDecision]:
+        """Route a whole batch of requests in ONE XLA call: the tensorized
+        Algorithm 1 over the length buckets (which are the profile groups),
+        decision-for-decision identical to per-request ``route``."""
+        idx = route_batch(prompt_lens, self.table, self.delta,
+                          group_rules=LENGTH_BUCKETS)
+        out = []
+        for i in idx:
+            e = self.table.entries[i]
+            out.append(PoolDecision(arch=e.model, bucket=e.group,
+                                    time_ms=e.time_ms,
+                                    energy_mwh=e.energy_mwh,
+                                    score=e.map_pct))
+        return out
+
     def observe(self, arch: str, *, time_ms: Optional[float] = None,
                 energy_mwh: Optional[float] = None,
+                map_pct: Optional[float] = None,
+                bucket: Optional[int] = None,
                 alpha: float = 0.1) -> None:
-        """Closed loop: EWMA-fold a measured serving latency/energy back into
-        the profile — every device/mesh row of ``arch``, all buckets
-        (latency/energy are bucket-independent in the dry-run profile, like
-        the paper's per-group replication)."""
+        """Closed loop: EWMA-fold measured serving signals back into the
+        profile.  Latency/energy touch every device/mesh row of ``arch``,
+        all buckets (they are bucket-independent in the dry-run profile,
+        like the paper's per-group replication).  A measured QUALITY signal
+        (``map_pct``) is bucket-specific — pass the ``bucket`` it was
+        measured on and only that row moves."""
+        if map_pct is not None and bucket is None:
+            raise ValueError(
+                "map_pct is per-bucket: pass bucket= with the measurement")
         matched = False
         for pair in self.table.pairs():
             if pair[0] == arch:
-                self.table.observe_pair(pair, time_ms=time_ms,
-                                        energy_mwh=energy_mwh, alpha=alpha)
+                if time_ms is not None or energy_mwh is not None:
+                    self.table.observe_pair(pair, time_ms=time_ms,
+                                            energy_mwh=energy_mwh,
+                                            alpha=alpha)
+                if map_pct is not None:
+                    self.table.observe(pair, bucket, map_pct=map_pct,
+                                       alpha=alpha)
                 matched = True
         if not matched:
             raise KeyError(arch)

@@ -1,0 +1,346 @@
+"""Tensorized routing (route_batch) ≡ scalar Algorithm 1, the gateway's
+batched hot path, the latency-bounded dispatch flush, and the mAP closed
+loop."""
+import numpy as np
+import pytest
+from _propcheck import given, settings, st
+
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.core.router import (GreedyEstimateRouter, OracleRouter,
+                               greedy_route, route_batch)
+from repro.detection import scenes as sc
+from repro.detection.devices import DEVICES
+from repro.serving.engine import DispatchQueue, Request, Result
+from repro.serving.pool import LENGTH_BUCKETS, ServingPool
+
+
+def make_table(rows):
+    return ProfileTable([ProfileEntry(*r) for r in rows])
+
+
+@pytest.fixture
+def table():
+    rows = []
+    for g in range(5):
+        rows += [
+            ("tiny", "devA", g, 50.0 - 4 * g, 5.0, 0.010),
+            ("mid", "devB", g, 55.0 - 2 * g, 9.0, 0.025),
+            ("big", "devC", g, 60.0, 20.0, 0.060),
+        ]
+    return make_table(rows)
+
+
+# ------------------------------------------------- route_batch ≡ greedy_route
+
+def test_route_batch_matches_scalar_per_count(table):
+    counts = list(range(9)) + [50, 0, 7]
+    for delta in (0.0, 5.0, 14.0, 100.0):
+        idx = route_batch(counts, table, delta)
+        for c, i in zip(counts, idx):
+            assert table.entries[i] is greedy_route(c, table, delta)
+
+
+def test_route_batch_unprofiled_group_raises_like_scalar():
+    table = make_table([("tiny", "devA", 0, 50.0, 5.0, 0.010)])
+    with pytest.raises(ValueError, match="no profile rows for group 4"):
+        route_batch([0, 7], table, 5.0)
+
+
+def test_route_batch_sees_observe_updates(table):
+    """The cached array view must be invalidated by EWMA observations."""
+    before = route_batch([0], table, 100.0)[0]
+    assert table.entries[before].pair == ("tiny", "devA")
+    table.observe_pair(("tiny", "devA"), energy_mwh=9.0, alpha=1.0)
+    after = route_batch([0], table, 100.0)[0]
+    assert table.entries[after].pair == ("mid", "devB")
+    assert table.entries[after] is greedy_route(0, table, 100.0)
+
+
+# values are small dyadic rationals (exact in f32 AND f64), so the f32
+# tensorized path and the float64 scalar path see literally the same numbers
+# and must agree even at exact feasibility-threshold ties
+entry_strategy = st.tuples(
+    st.sampled_from(["m1", "m2", "m3", "m4"]),
+    st.sampled_from(["d1", "d2"]),
+    st.integers(0, 800),     # map_pct * 8
+    st.integers(1, 800),     # time_ms * 8
+    st.integers(1, 1024),    # energy_mwh * 1024
+)
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    entries=st.lists(entry_strategy, min_size=1, max_size=20,
+                     unique_by=lambda e: (e[0], e[1])),
+    counts=st.lists(st.integers(0, 12), min_size=1, max_size=16),
+    delta8=st.integers(0, 400),
+)
+def test_route_batch_property(entries, counts, delta8):
+    rows = []
+    for m, d, mp8, t8, e1024 in entries:
+        for g in range(5):
+            rows.append(ProfileEntry(m, d, g, (mp8 - 8 * g) / 8, t8 / 8,
+                                     e1024 / 1024))
+    table = ProfileTable(rows)
+    delta = delta8 / 8
+    idx = route_batch(counts, table, delta)
+    for c, i in zip(counts, idx):
+        assert table.entries[i] is greedy_route(c, table, delta)
+
+
+def test_router_route_batch_faces(table):
+    counts = [0, 3, 7, 1, 12]
+    greedy = GreedyEstimateRouter(table, 5.0)
+    assert greedy.route_batch(estimated_counts=counts) == \
+        [greedy.route(estimated_count=c) for c in counts]
+    orc = OracleRouter(table, 5.0)
+    assert orc.route_batch(true_counts=counts) == \
+        [orc.route(true_count=c) for c in counts]
+
+
+# ------------------------------------------------------ pool batched routing
+
+def _pool():
+    entries = [ProfileEntry(a, "pod", b, score - b, 1.0, energy)
+               for a, score, energy in (("small", 80.0, 1.0),
+                                        ("big", 84.0, 5.0))
+               for _, _, b in LENGTH_BUCKETS]
+    return ServingPool(ProfileTable(entries), delta=5.0)
+
+
+def test_pool_route_batch_matches_scalar():
+    pool = _pool()
+    lens = [1, 100, 512, 513, 2048, 2049, 8192, 8193, 32768, 32769, 600_000]
+    assert pool.route_batch(lens) == [pool.route(n) for n in lens]
+
+
+def test_pool_route_batch_unprofiled_bucket_raises():
+    pool = ServingPool(ProfileTable([ProfileEntry("only", "pod", 0,
+                                                  80.0, 1.0, 1.0)]), 5.0)
+    with pytest.raises(ValueError, match="no profile rows for group 4"):
+        pool.route_batch([100, 40_000])
+
+
+# --------------------------------------------------- gateway batched hot path
+
+def _fake_run_detector(params, images):
+    none = np.zeros((0, 4), np.float32)
+    return [(none, np.zeros(0, np.float32), np.zeros(0, np.int32))
+            for _ in range(len(images))]
+
+
+def _grouped_table():
+    from repro.detection.detectors import DETECTOR_CONFIGS
+    rows = []
+    for g in range(5):  # cheap pair falls out of the feasible set as g grows
+        for m, d, mp in (("ssd_v1", "orin_nano", 60.0 - 3 * g),
+                         ("yolov8_n", "pi5", 60.0)):
+            flops = DETECTOR_CONFIGS[m].flops
+            rows.append(ProfileEntry(m, d, g, mp, DEVICES[d].time_ms(flops),
+                                     DEVICES[d].energy_mwh(flops)))
+    return ProfileTable(rows)
+
+
+def test_gateway_batched_routing_identical_to_scalar(monkeypatch):
+    from repro.core.estimators import EdgeDetectionEstimator
+    from repro.core.gateway import Gateway
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=i % 6)
+              for i in range(24)]
+    params = {"ssd_v1": None, "yolov8_n": None}
+
+    def episode(batch_routing):
+        table = _grouped_table()
+        gw = Gateway(GreedyEstimateRouter(table, 5.0), table, params,
+                     EdgeDetectionEstimator(), batch_routing=batch_routing)
+        return gw.process_stream(scenes)
+
+    batched, scalar = episode(True), episode(False)
+    assert batched == scalar  # decisions, costs and accounting all identical
+    assert len(batched.pair_histogram) == 2  # routing actually varied
+
+
+def test_gateway_adapt_forces_scalar_path(monkeypatch):
+    """The closed loop mutates the table per request, so the batched
+    single-shot routing must be bypassed when adapt=True."""
+    from repro.core.estimators import EdgeDetectionEstimator
+    from repro.core.gateway import Gateway
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    table = _grouped_table()
+    gw = Gateway(GreedyEstimateRouter(table, 5.0), table,
+                 {"ssd_v1": None, "yolov8_n": None},
+                 EdgeDetectionEstimator(), adapt=True)
+    assert gw._route_all([sc.make_scene(np.random.default_rng(0),
+                                        count=1)]) is None
+
+
+# ------------------------------------------------------- mAP closed loop
+
+def test_gateway_observe_updates_map_for_one_group(table):
+    from repro.core.gateway import Gateway
+    gw = Gateway(OracleRouter(table, 5.0), table,
+                 {}, None, adapt=True, alpha=0.5)
+    gw.observe(("big", "devC"), 2, map_pct=20.0)
+    assert table.entry(("big", "devC"), 2).map_pct == 40.0  # EWMA'd
+    assert table.entry(("big", "devC"), 0).map_pct == 60.0  # other groups
+    assert table.entry(("mid", "devB"), 2).map_pct == 51.0  # other pairs
+
+
+def test_gateway_adapt_map_closes_quality_loop(monkeypatch):
+    """A backend that measures WORSE quality than profiled loses its row's
+    mAP via the EWMA — the routing table's third closed-loop column."""
+    from repro.core.gateway import Gateway
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    table = _grouped_table()
+    before = {(e.pair, e.group): e.map_pct for e in table.entries}
+    gw = Gateway(OracleRouter(table, 5.0), table,
+                 {"ssd_v1": None, "yolov8_n": None}, None,
+                 adapt=True, adapt_map=True, alpha=0.3)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=2)
+              for i in range(10)]
+    stats = gw.process_stream(scenes)
+    served = [p for p, n in stats.pair_histogram.items() if n > 0]
+    assert served
+    model, device = served[0].split("@")
+    # fake detector finds nothing -> measured quality 0 -> row EWMAs down,
+    # and ONLY the observed group's row moves
+    assert table.entry((model, device), 2).map_pct \
+        < before[((model, device), 2)]
+    assert table.entry((model, device), 0).map_pct \
+        == before[((model, device), 0)]
+
+
+def test_gateway_adapt_map_honors_router_group_rules(monkeypatch):
+    """Regression: the measured-quality observation must land in the group
+    the ROUTER's rules assign, not DEFAULT_GROUP_RULES — custom labels
+    would otherwise KeyError (or hit the wrong row) mid-stream."""
+    from repro.core.gateway import Gateway
+    from repro.detection import train
+    from repro.detection.detectors import DETECTOR_CONFIGS
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    rules = ((0, 1, 10), (2, None, 20))  # two coarse groups, custom labels
+    rows = []
+    for g in (10, 20):
+        for m, d in (("ssd_v1", "orin_nano"), ("yolov8_n", "pi5")):
+            flops = DETECTOR_CONFIGS[m].flops
+            rows.append(ProfileEntry(m, d, g, 60.0,
+                                     DEVICES[d].time_ms(flops),
+                                     DEVICES[d].energy_mwh(flops)))
+    table = ProfileTable(rows)
+    gw = Gateway(OracleRouter(table, 5.0, group_rules=rules), table,
+                 {"ssd_v1": None, "yolov8_n": None}, None,
+                 adapt=True, adapt_map=True, alpha=0.5)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=3)
+              for i in range(4)]
+    stats = gw.process_stream(scenes)  # must not KeyError
+    model, device = next(iter(stats.pair_histogram)).split("@")
+    assert table.entry((model, device), 20).map_pct < 60.0  # observed group
+    assert table.entry((model, device), 10).map_pct == 60.0
+
+
+def test_gateway_explore_without_adapt_keeps_batched_path(monkeypatch):
+    """explore_every only fires under adapt, so it must not disable the
+    batched fast path on an open-loop stream."""
+    from repro.core.estimators import EdgeDetectionEstimator
+    from repro.core.gateway import Gateway
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    table = _grouped_table()
+    gw = Gateway(GreedyEstimateRouter(table, 5.0), table,
+                 {"ssd_v1": None, "yolov8_n": None},
+                 EdgeDetectionEstimator(), explore_every=5)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=1)
+              for i in range(3)]
+    assert gw._route_all(scenes) is not None
+
+
+def test_gateway_adapt_map_requires_adapt(table):
+    from repro.core.gateway import Gateway
+    with pytest.raises(ValueError, match="adapt_map"):
+        Gateway(OracleRouter(table, 5.0), table, {}, None, adapt_map=True)
+
+
+def test_pool_observe_map_is_bucket_specific():
+    pool = _pool()
+    with pytest.raises(ValueError, match="bucket"):
+        pool.observe("small", map_pct=10.0)
+    pool.observe("small", map_pct=0.0, bucket=0, alpha=0.5)
+    assert pool.table.entry(("small", "pod"), 0).map_pct == 40.0
+    assert pool.table.entry(("small", "pod"), 1).map_pct == 79.0  # untouched
+    # quality drop big enough that bucket 0 routing flips to 'big'
+    pool.observe("small", map_pct=0.0, bucket=0, alpha=1.0)
+    assert pool.route(100).arch == "big"
+    assert pool.route(1000).arch == "small"  # other buckets unaffected
+
+
+# ------------------------------------------------- latency-bounded dispatch
+
+class _StubBackend:
+    def __init__(self, name="stub", max_batch=4):
+        self.name = name
+        self.max_batch = max_batch
+        self.batch_sizes = []
+
+    def serve_batch(self, requests):
+        self.batch_sizes.append(len(requests))
+        return [Result(uid=r.uid, tokens=np.zeros(1, np.int32),
+                       prefill_s=.01, decode_s=.01, backend=self.name,
+                       batch_size=len(requests)) for r in requests]
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def test_dispatch_queue_deadline_serves_partial_batch():
+    clock = _FakeClock()
+    be = _StubBackend(max_batch=4)
+    q = DispatchQueue(be, max_wait_ms=50.0, clock=clock)
+    assert q.submit(Request(uid=0, prompt=np.arange(4))) == []
+    assert q.poll() == []                    # deadline not reached
+    clock.advance_ms(49.9)
+    assert q.poll() == []
+    clock.advance_ms(0.2)                    # oldest waited past 50ms
+    got = q.poll()
+    assert [r.uid for r in got] == [0]
+    assert be.batch_sizes == [1]             # partial batch went out
+    assert q.poll() == []                    # queue drained, deadline reset
+
+
+def test_dispatch_queue_deadline_checked_on_submit():
+    clock = _FakeClock()
+    be = _StubBackend(max_batch=4)
+    q = DispatchQueue(be, max_wait_ms=10.0, clock=clock)
+    q.submit(Request(uid=0, prompt=np.arange(4)))
+    clock.advance_ms(11)
+    got = q.submit(Request(uid=1, prompt=np.arange(4)))
+    assert [r.uid for r in got] == [0, 1]    # flushed at 2/4: deadline won
+    # deadline restarts with the next first-pending request
+    assert q.submit(Request(uid=2, prompt=np.arange(4))) == []
+    clock.advance_ms(9)
+    assert q.poll() == []
+
+
+def test_dispatch_queue_without_deadline_waits_for_full_batch():
+    clock = _FakeClock()
+    be = _StubBackend(max_batch=2)
+    q = DispatchQueue(be, clock=clock)
+    q.submit(Request(uid=0, prompt=np.arange(4)))
+    clock.advance_ms(10_000)
+    assert q.poll() == []                    # no max_wait_ms: poll is a no-op
+    assert len(q.submit(Request(uid=1, prompt=np.arange(4)))) == 2

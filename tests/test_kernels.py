@@ -15,6 +15,10 @@ from repro.kernels.ssd_scan import ref as ssd_ref
 from repro.kernels.sobel.sobel import sobel_grad_pallas
 from repro.kernels.sobel import ref as sobel_ref
 
+# every parity test here drives the Pallas kernel in interpret mode on CPU;
+# a TPU lane can select the same tests with `-m pallas` (still tier-1 fast)
+pytestmark = pytest.mark.pallas
+
 
 def tol_for(dtype):
     return 2e-2 if dtype == jnp.bfloat16 else 2e-5
