@@ -12,6 +12,8 @@ to artifacts/bench/.  Figure map (see DESIGN.md §7):
   video         — Fig. 8  temporally-correlated stream
   delta_sweep   — Fig. 9  Orc/ED/SF/OB across delta in {0,5,10,15,20,25}
   overhead      — gateway-overhead metric (per estimator)
+  serve         — end-to-end EcoreService throughput (req/s, flush counts,
+                  p50/p95 queue wait under the threaded deadline flusher)
   kernels       — kernel timings (CPU oracle path; Pallas checked in tests)
   pool_routing  — framework-level: ECORE over the TPU dry-run pool
   roofline      — per (arch x shape x mesh) roofline terms from the dry-run
@@ -227,22 +229,26 @@ def bench_gateway_hotpath(quick=False):
     }
 
 
-def bench_overhead(quick=False):
-    hotpath = bench_gateway_hotpath(quick)
-    # persist the perf trajectory at the repo root (append-only across PRs);
-    # the smoke target relies on a FAILED write exiting nonzero
+def _append_gateway_bench(record):
+    """Persist the perf trajectory at the repo root (append-only across
+    PRs); the smoke target relies on a FAILED write exiting nonzero."""
     path = os.path.join(REPO_ROOT, "BENCH_gateway.json")
     try:
         history = []
         if os.path.exists(path) and os.path.getsize(path) > 0:
             with open(path) as f:
                 history = json.load(f)
-        history.append(hotpath)
+        history.append(record)
         with open(path, "w") as f:
             json.dump(history, f, indent=1)
         print(f"wrote {path} ({len(history)} run(s))")
     except (OSError, ValueError) as exc:
         raise SystemExit(f"cannot write {path}: {exc}")
+
+
+def bench_overhead(quick=False):
+    hotpath = bench_gateway_hotpath(quick)
+    _append_gateway_bench(hotpath)
 
     scenes = sc.full_dataset(60 if quick else 150, seed=35)
     rows = common.run_all_routers(scenes, delta=5.0,
@@ -312,6 +318,77 @@ def bench_kernels(quick=False):
     us = timeit(lambda *args: ssd_ref.ssd_chunked(*args, chunk=64),
                 x2, dt, A, Bm, Cm, Dv)
     print(f"ssd_scan_512,{us:.0f},chunked")
+
+
+# ------------------------------------------------- end-to-end service
+
+def bench_serve(quick=False):
+    """End-to-end EcoreService throughput: requests/s through route ->
+    dispatch -> batched serve on real (reduced) backends, flush counts, and
+    the p50/p95 queue wait a request pays for batching under the threaded
+    deadline-bounded flusher.  Appended to BENCH_gateway.json.
+
+    Queue wait is measured submit -> own-flush START (the serve itself is
+    excluded); on this CPU container it is dominated by waiting behind
+    OTHER flushes (first-batch jit compiles serialize under the service
+    lock), not by the max_wait_ms deadline — expect it to collapse on a
+    TPU pod where serve_batch is sub-ms."""
+    from repro.configs import get_config
+    from repro.core.policy import PoolPolicy, RouteRequest
+    from repro.launch.serve import PROMPT_CAP, synthetic_pool_table
+    from repro.serving.engine import Backend
+    from repro.serving.pool import ServingPool
+    from repro.serving.service import EcoreService
+
+    archs = ["mamba2-370m", "qwen2.5-3b"]
+    n = 12 if quick else 32
+    max_wait_ms = 25.0
+    policy = PoolPolicy(ServingPool(synthetic_pool_table(archs), delta=5.0))
+
+    def factory(decision):
+        cfg = get_config(decision.backend).reduced()
+        return Backend(decision.backend, cfg, max_batch=4, max_seq=96,
+                       seed=0)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(n):
+        plen = int(rng.choice([32, 128, 1024, 40_000], p=[.4, .3, .2, .1]))
+        reqs.append(RouteRequest(
+            uid=uid, complexity=plen, max_new_tokens=4,
+            payload=rng.integers(0, 1000, size=min(plen, PROMPT_CAP))))
+
+    # futures are the only consumer here: don't buffer for results()/drain()
+    service = EcoreService(policy, factory, max_wait_ms=max_wait_ms,
+                           retain_results=False)
+    try:
+        t0 = time.perf_counter()
+        futs = [service.submit(r) for r in reqs]
+        served = [f.result(timeout=600) for f in futs]  # flusher drains all
+        wall_s = time.perf_counter() - t0
+        stats = service.stats()
+    finally:
+        service.close()
+    assert len(served) == n
+    waits = sorted(stats["queue_wait_ms"])
+    p50 = waits[len(waits) // 2]
+    p95 = waits[min(int(len(waits) * 0.95), len(waits) - 1)]
+    row = {"serve": {
+        "requests": n,
+        "backends": stats["backends"],
+        "requests_per_s": n / wall_s,
+        "serve_calls": stats["serve_calls"],
+        "deadline_flushes": stats["deadline_flushes"],
+        "max_wait_ms": max_wait_ms,
+        "queue_wait_p50_ms": p50,
+        "queue_wait_p95_ms": p95,
+    }}
+    print("\n== serve (EcoreService end-to-end) ==")
+    print("metric,value")
+    for k, v in row["serve"].items():
+        print(f"{k},{v if isinstance(v, int) else f'{v:.2f}'}")
+    _append_gateway_bench(row)
+    return row
 
 
 # ------------------------------------------------- framework pool routing
@@ -459,6 +536,7 @@ BENCHES = {
     "video": bench_video,
     "delta_sweep": bench_delta_sweep,
     "overhead": bench_overhead,
+    "serve": bench_serve,
     "kernels": bench_kernels,
     "pool_routing": bench_pool_routing,
     "roofline": bench_roofline,

@@ -10,6 +10,10 @@ lowest-energy backend within the delta accuracy tolerance.  Requests are
 then actually served — batched prefill + greedy decode — on reduced variants
 of the chosen architectures (this container is CPU-only; on a TPU pod the
 same Backend wraps the full configs under the production mesh).
+
+The driver is a thin loop over ``serving.service.EcoreService``
+(``PoolPolicy`` + per-backend dispatch queues + threaded deadline flusher);
+see examples/service_quickstart.py for the service API in isolation.
 """
 import sys
 

@@ -8,5 +8,7 @@ from .router import (BASELINE_ROUTERS, GreedyEstimateRouter,
                      feasible_set, greedy_route, pareto_front, route_batch)
 from .estimators import (EdgeDetectionEstimator, OracleEstimator,
                          OutputBasedEstimator, SSDFrontEndEstimator)
+from .policy import (DetectionPolicy, Observation, PoolPolicy, RouteDecision,
+                     RouteRequest, RoutingPolicy)
 from .gateway import EpisodeStats, Gateway
 from .metrics import MAPAccumulator, average_precision, iou

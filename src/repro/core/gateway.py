@@ -6,19 +6,21 @@ the frame to the selected (model, device) backend, and returns detections.
 Energy/latency for backends come from the profiled device models; gateway
 overhead (estimator cost) is accounted separately, exactly like the paper's
 "Gateway Overhead" metric.
+
+Decision-making lives in ``core.policy.DetectionPolicy`` (estimate+route+
+explore/adapt behind the shared ``RoutingPolicy`` API); this class is the
+thin stream driver on top of it: it executes the chosen detector, charges
+fleet/device costs, accumulates ``EpisodeStats``, and feeds measurements
+back through the single ``Observation`` plane.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core.energy import gateway_cost
-from repro.core.estimators import Estimator, OracleEstimator
-from repro.core.groups import DEFAULT_GROUP_RULES, group_of
+from repro.core.estimators import Estimator
 from repro.core.metrics import MAPAccumulator
+from repro.core.policy import DetectionPolicy, Observation, RouteRequest
 from repro.core.profiles import ProfileTable
 from repro.core.router import Router
 from repro.detection.devices import DEVICES
@@ -63,17 +65,17 @@ class Gateway:
     instead of the router's pick (a small accuracy/energy tax), keeping
     every pair's profile fresh.
 
-    Batched hot path: with a ``batchable`` estimator (ED/SF) and a
-    ``batchable`` router (greedy/oracle) and the loop open (``adapt=False``),
-    ``process_stream`` estimates the WHOLE stream in one device launch and
-    routes it in one XLA call (``Router.route_batch``) instead of per-frame
-    Python — decisions are identical to the scalar path (tested).  Set
-    ``batch_routing=False`` to force the scalar path.
+    Batched hot path: when the policy is ``batchable`` (ED/SF estimator,
+    greedy/oracle router, loop open), ``process_stream`` decides the WHOLE
+    stream in one ``DetectionPolicy.decide_batch`` call (one estimator
+    launch + one XLA routing call) instead of per-frame Python — decisions
+    are identical to the scalar path (tested).  Set ``batch_routing=False``
+    to force the scalar path.
 
     mAP closed loop: ``adapt_map=True`` (requires ``adapt=True``) folds each
     request's MEASURED per-frame detection quality back into the served
-    pair's row for the scene's TRUE group via ``observe`` — the third
-    profile column (after latency/energy) the runtime keeps fresh."""
+    pair's row for the scene's TRUE group via the observation plane — the
+    third profile column (after latency/energy) the runtime keeps fresh."""
 
     def __init__(self, router: Router, table: ProfileTable,
                  detector_params: Dict[str, Dict],
@@ -83,95 +85,69 @@ class Gateway:
                  batch_routing: bool = True):
         from repro.detection.train import run_detector  # lazy: heavy import
         self._run = run_detector
-        self.router = router
-        self.table = table
+        self.policy = DetectionPolicy(router, table, estimator, adapt=adapt,
+                                      alpha=alpha, explore_every=explore_every,
+                                      adapt_map=adapt_map,
+                                      batch_routing=batch_routing)
         self.params = detector_params
-        self.estimator = estimator
         self.fleet = fleet
-        self.adapt = adapt
-        self.alpha = alpha
-        self.explore_every = explore_every
-        self.adapt_map = adapt_map
-        self.batch_routing = batch_routing
-        if adapt and getattr(router, "table", None) is not table:
-            raise ValueError(
-                "adapt=True requires router.table to BE the gateway's table "
-                "(same object): observe_pair updates would otherwise never "
-                "reach the router's decisions")
-        if adapt_map and not adapt:
-            raise ValueError("adapt_map=True requires adapt=True")
+
+    # single source of truth for routing state is the policy — read-only
+    # mirrors here, so a post-construction toggle can't drift the two apart
+    @property
+    def router(self) -> Router:
+        return self.policy.router
+
+    @property
+    def table(self) -> ProfileTable:
+        return self.policy.table
+
+    @property
+    def estimator(self) -> Optional[Estimator]:
+        return self.policy.estimator
+
+    @property
+    def adapt(self) -> bool:
+        return self.policy.adapt
+
+    @property
+    def adapt_map(self) -> bool:
+        return self.policy.adapt_map
 
     def observe(self, pair: Tuple[str, str], group: int, *,
                 map_pct: Optional[float] = None,
                 time_ms: Optional[float] = None,
                 energy_mwh: Optional[float] = None) -> None:
-        """Fold runtime measurements into the profile: latency/energy are
-        group-independent (every row of the pair moves, like the serving
-        pool); detection quality is per-group, so a measured mAP only
-        touches the observed group's row."""
-        if time_ms is not None or energy_mwh is not None:
-            self.table.observe_pair(pair, time_ms=time_ms,
-                                    energy_mwh=energy_mwh, alpha=self.alpha)
-        if map_pct is not None:
-            self.table.observe(pair, group, map_pct=map_pct,
-                               alpha=self.alpha)
-
-    def _route_all(self, scenes: List[Scene]):
-        """The batched estimate->route fast path, or None when per-frame
-        semantics (closed loop, exploration, feedback estimators) force the
-        scalar loop."""
-        # note: explore_every only fires under adapt (see the scalar loop),
-        # so adapt alone decides; exploration never disables this path on
-        # an open-loop stream
-        if (not self.batch_routing or self.adapt
-                or self.estimator is None or not self.estimator.batchable
-                or not self.router.batchable or not scenes):
-            return None
-        images = np.stack([s.image for s in scenes])
-        counts, flops = self.estimator.estimate_batch(images)
-        pairs = self.router.route_batch(
-            estimated_counts=counts,
-            true_counts=[s.count for s in scenes])
-        return list(zip(counts, flops, pairs))
+        """Fold runtime measurements into the profile (compat shim over the
+        policy's ``Observation`` plane): latency/energy are group-independent
+        (every row of the pair moves, like the serving pool); detection
+        quality is per-group, so a measured mAP only touches the observed
+        group's row."""
+        self.policy.observe(Observation(pair=pair, group=group,
+                                        time_ms=time_ms,
+                                        energy_mwh=energy_mwh,
+                                        map_pct=map_pct))
 
     def process_stream(self, stream: Sequence[Scene]) -> EpisodeStats:
         scenes = list(stream)
         acc = MAPAccumulator(NUM_CLASSES)
         be_energy = be_time = gw_energy = gw_time = 0.0
         hist: Dict[str, int] = {}
-        if self.estimator is not None:
-            self.estimator.reset()
-        self.router.reset()
-        routed = self._route_all(scenes)
-        for step, scene in enumerate(scenes):
-            est_count = None
-            if routed is not None:
-                est_count, est_flops, pair = routed[step]
-                gc = gateway_cost(float(est_flops))
-                gw_energy += gc["energy_mwh"]
-                gw_time += gc["time_ms"]
-            else:
-                if self.estimator is not None:
-                    if isinstance(self.estimator, OracleEstimator):
-                        self.estimator.true_count = scene.count
-                    est_count, est_flops = self.estimator.estimate(
-                        scene.image)
-                    gc = gateway_cost(est_flops)
-                    gw_energy += gc["energy_mwh"]
-                    gw_time += gc["time_ms"]
-                else:
-                    gc = gateway_cost(0.0)  # routing-table lookup only
-                    gw_energy += gc["energy_mwh"]
-                    gw_time += gc["time_ms"]
-                pair = self.router.route(estimated_count=est_count,
-                                         true_count=scene.count)
-                if (self.adapt and self.explore_every
-                        and step % self.explore_every
-                        == self.explore_every - 1):
-                    pairs = self.table.pairs()
-                    pair = pairs[(step // self.explore_every) % len(pairs)]
-            model, device = pair
-            hist[f"{model}@{device}"] = hist.get(f"{model}@{device}", 0) + 1
+        self.policy.reset()
+        reqs = [RouteRequest(uid=i, payload=s.image, true_complexity=s.count)
+                for i, s in enumerate(scenes)]
+        # batched estimate->route fast path: one decide_batch call for the
+        # whole stream when per-frame semantics (closed loop, feedback
+        # estimators) don't force the scalar loop
+        decisions = (self.policy.decide_batch(reqs)
+                     if self.policy.batchable and reqs else None)
+        for step, (scene, req) in enumerate(zip(scenes, reqs)):
+            d = (decisions[step] if decisions is not None
+                 else self.policy.decide(req))
+            gw_energy += d.gateway_energy_mwh
+            gw_time += d.gateway_time_ms
+            model, device = d.pair
+            hist[d.pair_name] = hist.get(d.pair_name, 0) + 1
             boxes, scores, classes = self._run(self.params[model],
                                                scene.image[None])[0]
             acc.add_image(boxes, scores, classes, scene.boxes, scene.classes)
@@ -183,21 +159,20 @@ class Gateway:
                 t_ms, e_mwh = dev.time_ms(flops), dev.energy_mwh(flops)
             be_energy += e_mwh
             be_time += t_ms
+            obs = Observation(pair=d.pair)
             if self.adapt:
-                measured_map = None
                 if self.adapt_map:
                     one = MAPAccumulator(NUM_CLASSES)
                     one.add_image(boxes, scores, classes, scene.boxes,
                                   scene.classes)
-                    measured_map = one.map()
-                group = group_of(scene.count,
-                                 getattr(self.router, "rules",
-                                         None) or DEFAULT_GROUP_RULES)
-                self.observe(pair, group, time_ms=t_ms, energy_mwh=e_mwh,
-                             map_pct=measured_map)
+                    obs.map_pct = one.map()
+                obs.group = self.policy.group_for(scene.count)
+                obs.time_ms, obs.energy_mwh = t_ms, e_mwh
             if self.estimator is not None:
                 # OB feedback: the count the BACKEND detected
-                self.estimator.observe(int((scores >= 0.5).sum()))
+                obs.detected_count = int((scores >= 0.5).sum())
+            if not obs.empty:
+                self.policy.observe(obs)
         return EpisodeStats(
             router=self.router.name,
             estimator=self.estimator.name if self.estimator else None,

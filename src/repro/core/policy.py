@@ -1,0 +1,286 @@
+"""Request-centric routing policies: ONE decision/observation plane.
+
+The paper's pipeline (Fig. 3) is estimate -> route -> dispatch -> observe.
+This module gives every face of the repo the same typed vocabulary for the
+first, second and fourth stages:
+
+  * ``RouteRequest``   — what arrives at the gateway (a camera frame or an
+                         LLM prompt, plus whatever complexity signal exists)
+  * ``RouteDecision``  — where it goes: the (model, device) pair, the group
+                         it was routed under, profiled costs, and the
+                         gateway-side estimation cost
+  * ``Observation``    — what came back: measured latency/energy/quality and
+                         the backend-detected count (OB estimator feedback)
+
+A ``RoutingPolicy`` turns requests into decisions (``decide`` /
+``decide_batch``) and folds observations back into its profile
+(``observe``).  Two implementations cover both faces of the repo:
+
+  * ``DetectionPolicy`` — estimator + router + explore/adapt closed loop
+    (the branchy core that used to live inline in ``Gateway.process_stream``)
+  * ``PoolPolicy``      — ``ServingPool`` over dry-run-profiled LLM backends
+
+so greedy/weighted/Pareto/baseline routers, the tensorized ``route_batch``
+fast path, and the EWMA latency/energy/mAP loops all sit behind one entry
+point; ``EcoreService`` (repro.serving.service) dispatches over any of them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import numpy as np
+
+from .energy import gateway_cost
+from .estimators import Estimator, OracleEstimator
+from .groups import DEFAULT_GROUP_RULES, group_of
+from .profiles import ProfileTable
+from .router import Router
+
+Pair = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class RouteRequest:
+    """One unit of work arriving at the gateway.
+
+    ``payload`` is whatever the backend consumes (a [H, W] frame for the
+    detection face, an int32 token prompt for the serving face).
+    ``complexity`` is the known complexity signal the router consumes
+    directly (the serving face's prompt length); the detection face instead
+    ESTIMATES complexity from the payload.  ``true_complexity`` is ground
+    truth (oracle routers, per-group quality observation)."""
+    uid: int
+    payload: Any = None
+    complexity: Optional[int] = None
+    true_complexity: Optional[int] = None
+    max_new_tokens: int = 8
+
+
+@dataclasses.dataclass
+class RouteDecision:
+    """Where one request goes, plus the costs known at decision time."""
+    uid: int
+    pair: Pair                               # (model/arch, device/mesh)
+    group: Optional[int] = None              # group/bucket routed under
+    est_complexity: Optional[int] = None     # estimator output (detection)
+    time_ms: Optional[float] = None          # profiled backend latency
+    energy_mwh: Optional[float] = None       # profiled backend energy
+    score: Optional[float] = None            # profiled mAP / capability
+    gateway_time_ms: float = 0.0             # estimation cost at the gateway
+    gateway_energy_mwh: float = 0.0
+    explored: bool = False                   # round-robin exploration pick
+
+    @property
+    def backend(self) -> str:
+        return self.pair[0]
+
+    @property
+    def pair_name(self) -> str:
+        return f"{self.pair[0]}@{self.pair[1]}"
+
+
+@dataclasses.dataclass
+class Observation:
+    """Measured runtime signals for one served request (the single observe
+    plane): latency/energy are pair-wide, quality is per-group.  ``group``
+    may be omitted when ``true_complexity`` is given — the policy derives
+    the group under its own rules."""
+    pair: Pair
+    group: Optional[int] = None
+    true_complexity: Optional[int] = None
+    time_ms: Optional[float] = None
+    energy_mwh: Optional[float] = None
+    map_pct: Optional[float] = None
+    detected_count: Optional[int] = None     # backend count (OB feedback)
+
+    @property
+    def empty(self) -> bool:
+        return (self.time_ms is None and self.energy_mwh is None
+                and self.map_pct is None and self.detected_count is None)
+
+
+@runtime_checkable
+class RoutingPolicy(Protocol):
+    """The one routing surface every face implements."""
+    #: True when decide_batch is a single tensorized call whose decisions
+    #: are independent of per-request feedback
+    batchable: bool
+
+    def decide(self, req: RouteRequest) -> RouteDecision: ...
+
+    def decide_batch(self, reqs: Sequence[RouteRequest]
+                     ) -> List[RouteDecision]: ...
+
+    def observe(self, obs: Observation) -> None: ...
+
+    def reset(self) -> None: ...
+
+
+class DetectionPolicy:
+    """Estimator + router + explore/adapt closed loop behind the policy API.
+
+    Subsumes the branchy core of the old ``Gateway.process_stream``: the
+    per-request estimate->route scalar path (with the round-robin
+    exploration override under ``adapt``), the batched estimate->route fast
+    path (one device launch + one XLA routing call for a whole stream), and
+    the EWMA observation plumbing for latency, energy and measured mAP."""
+
+    def __init__(self, router: Router, table: ProfileTable,
+                 estimator: Optional[Estimator] = None, *,
+                 adapt: bool = False, alpha: float = 0.1,
+                 explore_every: int = 0, adapt_map: bool = False,
+                 batch_routing: bool = True):
+        self.router = router
+        self.table = table
+        self.estimator = estimator
+        self.adapt = adapt
+        self.alpha = alpha
+        self.explore_every = explore_every
+        self.adapt_map = adapt_map
+        self.batch_routing = batch_routing
+        self._step = 0
+        if adapt and getattr(router, "table", None) is not table:
+            raise ValueError(
+                "adapt=True requires router.table to BE the policy's table "
+                "(same object): observe_pair updates would otherwise never "
+                "reach the router's decisions")
+        if adapt_map and not adapt:
+            raise ValueError("adapt_map=True requires adapt=True")
+
+    @property
+    def batchable(self) -> bool:
+        """True when a whole stream can be decided in one shot: open loop
+        (per-request observations never change later decisions) and both
+        estimator and router expose real batched implementations."""
+        return (self.batch_routing and not self.adapt
+                and self.estimator is not None and self.estimator.batchable
+                and self.router.batchable)
+
+    @property
+    def rules(self):
+        return getattr(self.router, "rules", None) or DEFAULT_GROUP_RULES
+
+    def group_for(self, true_count: int) -> int:
+        """The group an observation lands in — derived from the TRUE count
+        under the ROUTER's rules (custom labels must hit the right row)."""
+        return group_of(int(true_count), self.rules)
+
+    def decide(self, req: RouteRequest) -> RouteDecision:
+        step, self._step = self._step, self._step + 1
+        if self.estimator is not None:
+            if isinstance(self.estimator, OracleEstimator):
+                self.estimator.true_count = req.true_complexity
+            est_count, est_flops = self.estimator.estimate(req.payload)
+            gc = gateway_cost(est_flops)
+        else:
+            est_count = None
+            gc = gateway_cost(0.0)  # routing-table lookup only
+        pair = self.router.route(estimated_count=est_count,
+                                 true_count=req.true_complexity)
+        explored = False
+        if (self.adapt and self.explore_every
+                and step % self.explore_every == self.explore_every - 1):
+            pairs = self.table.pairs()
+            pair = pairs[(step // self.explore_every) % len(pairs)]
+            explored = True
+        return RouteDecision(
+            uid=req.uid, pair=pair,
+            est_complexity=None if est_count is None else int(est_count),
+            gateway_time_ms=gc["time_ms"],
+            gateway_energy_mwh=gc["energy_mwh"], explored=explored)
+
+    def decide_batch(self, reqs: Sequence[RouteRequest]
+                     ) -> List[RouteDecision]:
+        """One device launch (``estimate_batch``) + one XLA call
+        (``route_batch``) for the whole batch when ``batchable``; the
+        generic fallback loops ``decide`` so non-batchable faces (closed
+        loop, feedback estimators, stateful routers) expose the same API."""
+        reqs = list(reqs)
+        if not reqs:
+            return []
+        if not self.batchable:
+            return [self.decide(r) for r in reqs]
+        self._step += len(reqs)
+        images = np.stack([r.payload for r in reqs])
+        counts, flops = self.estimator.estimate_batch(images)
+        pairs = self.router.route_batch(
+            estimated_counts=counts,
+            true_counts=[r.true_complexity for r in reqs])
+        out = []
+        for req, count, fl, pair in zip(reqs, counts, flops, pairs):
+            gc = gateway_cost(float(fl))
+            out.append(RouteDecision(
+                uid=req.uid, pair=pair, est_complexity=int(count),
+                gateway_time_ms=gc["time_ms"],
+                gateway_energy_mwh=gc["energy_mwh"]))
+        return out
+
+    def observe(self, obs: Observation) -> None:
+        """Fold runtime measurements into the profile: latency/energy are
+        group-independent (every row of the pair moves), detection quality
+        is per-group; a backend-detected count feeds the estimator (OB)."""
+        if obs.detected_count is not None and self.estimator is not None:
+            self.estimator.observe(int(obs.detected_count))
+        if obs.time_ms is not None or obs.energy_mwh is not None:
+            self.table.observe_pair(obs.pair, time_ms=obs.time_ms,
+                                    energy_mwh=obs.energy_mwh,
+                                    alpha=self.alpha)
+        if obs.map_pct is not None:
+            group = obs.group
+            if group is None:
+                if obs.true_complexity is None:
+                    raise ValueError(
+                        "map_pct is per-group: pass group= or "
+                        "true_complexity= with the measurement")
+                group = self.group_for(obs.true_complexity)
+            self.table.observe(obs.pair, group, map_pct=obs.map_pct,
+                               alpha=self.alpha)
+
+    def reset(self) -> None:
+        self._step = 0
+        if self.estimator is not None:
+            self.estimator.reset()
+        self.router.reset()
+
+
+class PoolPolicy:
+    """The LLM serving face behind the policy API: wraps a ``ServingPool``
+    (Algorithm 1 over prompt-length buckets).  ``decide_batch`` is the
+    tensorized one-XLA-call path; ``observe`` EWMA-folds measured serving
+    signals through ``ServingPool.observe``."""
+
+    batchable = True  # decisions depend only on prompt length
+
+    def __init__(self, pool, alpha: float = 0.1):
+        self.pool = pool
+        self.alpha = alpha
+
+    def _decision(self, req: RouteRequest, d) -> RouteDecision:
+        return RouteDecision(uid=req.uid, pair=(d.arch, d.device),
+                             group=d.bucket, time_ms=d.time_ms,
+                             energy_mwh=d.energy_mwh, score=d.score)
+
+    def decide(self, req: RouteRequest) -> RouteDecision:
+        return self._decision(req, self.pool.route(int(req.complexity)))
+
+    def decide_batch(self, reqs: Sequence[RouteRequest]
+                     ) -> List[RouteDecision]:
+        reqs = list(reqs)
+        if not reqs:
+            return []
+        pool_decisions = self.pool.route_batch(
+            [int(r.complexity) for r in reqs])
+        return [self._decision(r, d) for r, d in zip(reqs, pool_decisions)]
+
+    def observe(self, obs: Observation) -> None:
+        bucket = obs.group
+        if bucket is None and obs.true_complexity is not None:
+            from repro.serving.pool import bucket_of  # lazy: no import cycle
+            bucket = bucket_of(int(obs.true_complexity))
+        self.pool.observe(obs.pair[0], time_ms=obs.time_ms,
+                          energy_mwh=obs.energy_mwh, map_pct=obs.map_pct,
+                          bucket=bucket, alpha=self.alpha)
+
+    def reset(self) -> None:
+        pass

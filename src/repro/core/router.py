@@ -239,11 +239,16 @@ class RandomRouter(Router):
 
     def __init__(self, *a, seed: int = 0, **kw):
         super().__init__(*a, **kw)
+        self._seed = seed
         self._rng = random.Random(seed)
         self._pairs = self.table.pairs()
 
     def route(self, **_) -> Pair:
         return self._rng.choice(self._pairs)
+
+    def reset(self):
+        # reseed so back-to-back episodes with one router are reproducible
+        self._rng = random.Random(self._seed)
 
 
 class LowestEnergyRouter(Router):
@@ -289,6 +294,10 @@ class WeightedRouter(Router):
     minimization of a fixed scalar score."""
     name = "Wgt"
     uses_estimate = True
+    # honest capability flag: the normalizers are recomputed per call from a
+    # possibly-mutated table, so batching goes through the generic
+    # route-per-item fallback (parity-tested in tests/test_batched_routing)
+    batchable = False
 
     def __init__(self, table: ProfileTable, delta_map: float = 5.0,
                  group_rules: Sequence = DEFAULT_GROUP_RULES,
@@ -314,6 +323,9 @@ class ParetoRouter(Router):
     objectives."""
     name = "Par"
     uses_estimate = True
+    # honest capability flag: the Pareto-front filter is not tensorized, so
+    # batching goes through the generic route-per-item fallback
+    batchable = False
 
     def route(self, *, estimated_count=None, true_count=None) -> Pair:
         feasible = feasible_for_count(int(estimated_count or 0), self.table,

@@ -1,4 +1,4 @@
-"""Serving driver: ECORE-routed batched inference over a backend pool.
+"""Serving driver: one EcoreService streams ECORE-routed requests.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 24 --delta 5
 
@@ -7,19 +7,22 @@ On this CPU container backends are REDUCED variants of the assigned archs
 production dry-run roofline (artifacts/dryrun.jsonl) when available, so the
 router makes the same decisions it would on the pod.
 
-Dispatch is BATCHED: each backend owns a request queue that flushes up to
-``--max-batch`` requests per ``serve_batch`` call, so N requests take far
-fewer than N engine calls, and ``--max-wait-ms`` bounds how long a partial
-batch waits for stragglers before being served anyway.  Routing is batched
-too: with a static profile the whole workload is routed in ONE tensorized
-``ServingPool.route_batch`` call (``--adapt`` forces per-request routing,
-since each observation changes the table the next decision reads).
-``--adapt`` closes the loop: each backend's
-measured per-request latency, relative to its OWN first measurement (local
-CPU ms and pod-profile ms are different scales, so only the relative
-slowdown transfers), rescales its profiled time AND energy via
-``ServingPool.observe`` — so the greedy argmin-energy routing reacts when a
-backend runs slower than its profile claims.
+The driver is a thin loop over ``EcoreService``: it builds a ``PoolPolicy``
+(Algorithm 1 over prompt-length buckets), submits ``RouteRequest``s, and
+handles ``Served`` completions — dispatch batching, per-backend queues and
+the ``--max-wait-ms`` deadline all live inside the service.  With a static
+profile the whole workload is routed in ONE tensorized ``decide_batch``
+call (``submit_batch``); ``--adapt`` submits per request, since each
+observation changes the table the next decision reads.  Deadline-expired
+partial batches are served by the service's background flusher thread — the
+driver never polls.
+
+``--adapt`` closes the loop: each backend's measured per-request latency,
+relative to its OWN first measurement (local CPU ms and pod-profile ms are
+different scales, so only the relative slowdown transfers), rescales its
+profiled time AND energy through the single ``Observation`` plane — so the
+greedy argmin-energy routing reacts when a backend runs slower than its
+profile claims.
 """
 from __future__ import annotations
 
@@ -30,11 +33,12 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.serving.engine import Backend, DispatchQueue, Request
-from repro.serving.pool import (ServingPool, bucket_of,
-                                pool_table_from_dryrun)
+from repro.core.policy import Observation, PoolPolicy, RouteRequest
 from repro.core.profiles import ProfileEntry, ProfileTable
-from repro.serving.pool import capability_score, LENGTH_BUCKETS
+from repro.serving.engine import Backend
+from repro.serving.pool import (LENGTH_BUCKETS, ServingPool,
+                                capability_score, pool_table_from_dryrun)
+from repro.serving.service import EcoreService
 
 DEFAULT_POOL = ("qwen2.5-3b", "llama3-8b", "mamba2-370m",
                 "granite-moe-1b-a400m", "recurrentgemma-2b")
@@ -47,14 +51,13 @@ PROMPT_CAP = 48
 def synthetic_pool_table(archs) -> ProfileTable:
     """Fallback profile when no dry-run artifact exists (analytic)."""
     entries = []
-    for a in archs:
-        cfg = get_config(a)
-        import math
+    for arch in archs:
+        cfg = get_config(arch)
         n = cfg.num_layers * cfg.d_model * cfg.d_model * 8  # rough
-        for _, _, b in LENGTH_BUCKETS:
+        for _, _, bucket in LENGTH_BUCKETS:
             entries.append(ProfileEntry(
-                model=a, device="pod-16x16", group=b,
-                map_pct=capability_score(n, cfg.is_subquadratic, b),
+                model=arch, device="pod-16x16", group=bucket,
+                map_pct=capability_score(n, cfg.is_subquadratic, bucket),
                 time_ms=n / 1e9, energy_mwh=n / 1e10))
     return ProfileTable(entries)
 
@@ -70,7 +73,8 @@ def main(argv=None):
     ap.add_argument("--max-wait-ms", type=float, default=None,
                     help="serve a partial batch once its oldest request "
                          "has waited this long (default: wait for a full "
-                         "batch)")
+                         "batch); honored by the service's background "
+                         "flusher thread")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--adapt", action="store_true",
                     help="EWMA-update the routing profile from measured "
@@ -88,8 +92,6 @@ def main(argv=None):
     pool = ServingPool(table, delta=args.delta)
     print(f"pool profile from {src}: {len(table.pairs())} backends")
 
-    queues = {}
-    decisions = {}
     # (arch, batch_size, prompt_len) -> fastest local_ms: keyed per jit
     # shape, so a recompile for a new batch shape (or the compile-heavy
     # first batch) never masquerades as backend drift
@@ -99,64 +101,74 @@ def main(argv=None):
     # them on live decisions would compound drift and stop the profile from
     # recovering once a backend returns to its healthy speed
     pristine = {}
-    for e in table.entries:
-        pristine.setdefault(e.model, (e.time_ms, e.energy_mwh))
-    rng = np.random.default_rng(args.seed)
-    routed_energy = routed_time = 0.0
+    for entry in table.entries:
+        pristine.setdefault(entry.model, (entry.time_ms, entry.energy_mwh))
+    totals = {"energy_mwh": 0.0, "time_ms": 0.0}
     t_start = time.time()
 
-    def handle(results):
+    def backend_factory(decision):
+        cfg = get_config(decision.backend).reduced()
+        return Backend(decision.backend, cfg, max_batch=args.max_batch,
+                       max_seq=96, seed=args.seed)
+
+    def handle(served):
         observed = set()  # one observation per serve_batch call, not result
-        for res in results:
-            d, plen = decisions[res.uid]
+        for s in served:
+            d, res, plen = s.decision, s.result, s.request.complexity
+            totals["energy_mwh"] += d.energy_mwh
+            totals["time_ms"] += d.time_ms
             local_ms = (res.prefill_s + res.decode_s) * 1e3 / res.batch_size
-            print(f"req {res.uid:3d} len={plen:6d} bucket={d.bucket} -> "
-                  f"{d.arch:22s} score={d.score:5.1f} "
+            print(f"req {res.uid:3d} len={plen:6d} bucket={d.group} -> "
+                  f"{d.backend:22s} score={d.score:5.1f} "
                   f"prof[t={d.time_ms:8.2f}ms e={d.energy_mwh:7.4f}mWh] "
                   f"local[{local_ms:6.1f}ms/req batch={res.batch_size}] "
                   f"tokens={res.tokens[:4]}")
-            key = (d.arch, res.batch_size, min(plen, PROMPT_CAP))
+            key = (d.backend, res.batch_size, min(plen, PROMPT_CAP))
             if args.adapt and key + (res.prefill_s,) not in observed:
                 observed.add(key + (res.prefill_s,))
                 base_ms = min(baselines.get(key, local_ms), local_ms)
                 baselines[key] = base_ms
                 slowdown = local_ms / max(base_ms, 1e-9)
-                prof_t, prof_e = pristine[d.arch]
-                pool.observe(d.arch, time_ms=prof_t * slowdown,
-                             energy_mwh=prof_e * slowdown)
+                prof_t, prof_e = pristine[d.backend]
+                service.observe(Observation(
+                    pair=d.pair, time_ms=prof_t * slowdown,
+                    energy_mwh=prof_e * slowdown))
 
+    rng = np.random.default_rng(args.seed)
     plens = [int(rng.choice([32, 128, 1024, 4096, 40_000],
                             p=[.3, .3, .2, .1, .1]))
              for _ in range(args.requests)]
-    # static profile: route the whole workload in one tensorized XLA call;
-    # --adapt routes per request because each observation mutates the table
-    # the next decision must read
-    batch_decisions = None if args.adapt else pool.route_batch(plens)
-    for uid, plen in enumerate(plens):
-        decision = (batch_decisions[uid] if batch_decisions is not None
-                    else pool.route(plen))
-        decisions[uid] = (decision, plen)
-        routed_energy += decision.energy_mwh
-        routed_time += decision.time_ms
-        if decision.arch not in queues:
-            cfg = get_config(decision.arch).reduced()
-            queues[decision.arch] = DispatchQueue(
-                Backend(decision.arch, cfg, max_batch=args.max_batch,
-                        max_seq=96, seed=uid),
-                max_wait_ms=args.max_wait_ms)
-        prompt = rng.integers(0, 1000, size=min(plen, PROMPT_CAP))
-        handle(queues[decision.arch].submit(
-            Request(uid=uid, prompt=prompt, max_new_tokens=args.max_new)))
-        for q in queues.values():  # deadline-bounded partial flushes
-            handle(q.poll())
-    for q in queues.values():
-        handle(q.flush())
+    reqs = [RouteRequest(uid=uid, complexity=plen,
+                         payload=rng.integers(0, 1000,
+                                              size=min(plen, PROMPT_CAP)),
+                         max_new_tokens=args.max_new)
+            for uid, plen in enumerate(plens)]
 
-    calls = sum(q.calls for q in queues.values())
+    service = EcoreService(PoolPolicy(pool), backend_factory,
+                           max_wait_ms=args.max_wait_ms)
+    try:
+        if args.adapt:
+            # closed loop: route per request — each observation mutates the
+            # table the next decision must read
+            for req in reqs:
+                service.submit(req)
+                handle(service.results())
+        else:
+            # static profile: route the whole workload in one tensorized
+            # XLA call
+            service.submit_batch(reqs)
+            handle(service.results())
+        handle(service.drain())
+        stats = service.stats()
+    finally:
+        service.close()
+
     print(f"\n{args.requests} requests in {time.time()-t_start:.1f}s via "
-          f"{calls} serve_batch calls over {len(queues)} backends "
-          f"(max_batch={args.max_batch}); "
-          f"profiled totals: {routed_time:.1f}ms, {routed_energy:.3f}mWh "
+          f"{stats['serve_calls']} serve_batch calls over "
+          f"{stats['backends']} backends (max_batch={args.max_batch}, "
+          f"deadline_flushes={stats['deadline_flushes']}); "
+          f"profiled totals: {totals['time_ms']:.1f}ms, "
+          f"{totals['energy_mwh']:.3f}mWh "
           f"(delta={args.delta}, adapt={args.adapt})")
     return 0
 

@@ -122,10 +122,24 @@ class DispatchQueue:
         self.pending: List[Request] = []
         self.calls = 0
         self.served = 0
+        #: partial batches served because the deadline expired — via submit,
+        #: poll, OR the service's background flusher (which bumps it before
+        #: flushing), so the metric is path-independent
+        self.deadline_flushes = 0
 
     def _deadline_passed(self) -> bool:
         return (self.max_wait_ms is not None and self._oldest is not None
                 and (self._clock() - self._oldest) * 1e3 >= self.max_wait_ms)
+
+    def next_deadline(self) -> Optional[float]:
+        """Absolute clock time (seconds, same units as ``clock``) when the
+        oldest pending request's wait bound expires; None when there is no
+        deadline or nothing is pending.  The threaded flusher
+        (``serving.service.EcoreService``) sleeps until the earliest of
+        these instead of cooperatively polling."""
+        if self.max_wait_ms is None or self._oldest is None or not self.pending:
+            return None
+        return self._oldest + self.max_wait_ms / 1e3
 
     def submit(self, req: Request) -> List[Result]:
         """Enqueue; returns flushed results when the batch fills (or the
@@ -133,8 +147,10 @@ class DispatchQueue:
         if not self.pending:
             self._oldest = self._clock()
         self.pending.append(req)
-        if (len(self.pending) >= self.backend.max_batch
-                or self._deadline_passed()):
+        if len(self.pending) >= self.backend.max_batch:
+            return self.flush()
+        if self._deadline_passed():
+            self.deadline_flushes += 1
             return self.flush()
         return []
 
@@ -142,6 +158,7 @@ class DispatchQueue:
         """Serve the pending partial batch if it has waited past
         ``max_wait_ms``; [] otherwise.  No-op without a deadline."""
         if self.pending and self._deadline_passed():
+            self.deadline_flushes += 1
             return self.flush()
         return []
 

@@ -90,6 +90,7 @@ class PoolDecision:
     time_ms: float
     energy_mwh: float
     score: float
+    device: str = "pod"   # mesh slice the profile row belongs to
 
 
 class ServingPool:
@@ -106,7 +107,8 @@ class ServingPool:
         feasible = feasible_set(bucket, self.table, self.delta)
         e = min(feasible, key=lambda e: e.energy_mwh)
         return PoolDecision(arch=e.model, bucket=bucket, time_ms=e.time_ms,
-                            energy_mwh=e.energy_mwh, score=e.map_pct)
+                            energy_mwh=e.energy_mwh, score=e.map_pct,
+                            device=e.device)
 
     def route_batch(self, prompt_lens: Sequence[int]) -> List[PoolDecision]:
         """Route a whole batch of requests in ONE XLA call: the tensorized
@@ -120,7 +122,7 @@ class ServingPool:
             out.append(PoolDecision(arch=e.model, bucket=e.group,
                                     time_ms=e.time_ms,
                                     energy_mwh=e.energy_mwh,
-                                    score=e.map_pct))
+                                    score=e.map_pct, device=e.device))
         return out
 
     def observe(self, arch: str, *, time_ms: Optional[float] = None,

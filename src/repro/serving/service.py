@@ -1,0 +1,285 @@
+"""EcoreService: ONE request-centric serving surface over any RoutingPolicy.
+
+Maps the paper's Fig. 3 pipeline onto four typed stages:
+
+  estimate + route  ``RoutingPolicy.decide`` / ``decide_batch`` turn a
+                    ``RouteRequest`` (frame or prompt + complexity signal)
+                    into a ``RouteDecision`` (the (model, device) pair, the
+                    group it was routed under, profiled costs);
+  dispatch          the service owns one ``DispatchQueue`` per routed
+                    (model, device) pair and lazily builds backends through
+                    ``backend_factory`` —
+                    ``submit`` enqueues and returns a ``Future[Served]``
+                    that resolves when the request's batch flushes;
+  observe           ``observe(Observation)`` is the single feedback plane:
+                    measured latency/energy/quality EWMA-fold into the
+                    policy's profile table, closing the routing loop.
+
+Flushing is genuinely async: a background flusher thread watches the oldest
+pending request of every queue and serves a PARTIAL batch the moment its
+``max_wait_ms`` deadline expires — no cooperative ``poll()`` calls from the
+driver, ever.  The clock is injectable: deterministic tests drive a manual
+clock and call ``wake()`` after advancing it (the flusher also re-checks on
+a small real-time tick, so a forgotten ``wake`` degrades to polling rather
+than deadlocking).
+
+``serve_batch`` runs under the service lock, so decisions, flushes and
+observations are serialized — batching, not intra-service parallelism, is
+the throughput lever (matching the paper's one-batch-at-a-time Locust loop).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.policy import (Observation, RouteDecision, RouteRequest,
+                               RoutingPolicy)
+from repro.serving.engine import DispatchQueue, Request, Result
+
+
+@dataclasses.dataclass
+class Served:
+    """One completed request: what was asked, where it went, what came back."""
+    request: RouteRequest
+    decision: RouteDecision
+    result: Result
+
+
+class EcoreService:
+    """Request-centric serving: ``submit -> Future``, ``results``,
+    ``drain``, ``close``, with deadline-bounded threaded flushing."""
+
+    #: real-time re-check tick for the flusher (safety net under fake clocks
+    #: and the wake granularity under the real one)
+    FLUSH_TICK_S = 0.05
+
+    def __init__(self, policy: RoutingPolicy,
+                 backend_factory: Callable[[RouteDecision], object], *,
+                 max_wait_ms: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 retain_results: bool = True):
+        self.policy = policy
+        self.max_wait_ms = max_wait_ms
+        self._factory = backend_factory
+        self._clock = clock
+        # completions are buffered for results()/drain(); a driver that only
+        # consumes futures should pass retain_results=False so a long-lived
+        # service doesn't grow per-request state
+        self._retain = retain_results
+        self._cond = threading.Condition()
+        #: one queue per ROUTED PAIR — the same model on two devices/meshes
+        #: must not collapse onto one backend
+        self._queues: Dict[Tuple[str, str], DispatchQueue] = {}
+        #: uid -> (request, decision, future, submit_time, queue key)
+        self._inflight: Dict[int, Tuple[RouteRequest, RouteDecision,
+                                        Future, float, Tuple[str, str]]] = {}
+        self._completed: List[Served] = []
+        # bounded: a long-lived service must not grow per-request state
+        self._queue_wait_ms: Deque[float] = collections.deque(maxlen=4096)
+        # backend errors caught in the flusher thread: futures carry them,
+        # but results()-driven drivers never look — re-raised at
+        # drain()/close() so a lost batch cannot pass silently
+        self._errors: Deque[Exception] = collections.deque(maxlen=16)
+        self.flusher_passes = 0     # loop iterations (test observability)
+        self._closed = False
+        self._flusher: Optional[threading.Thread] = None
+        if max_wait_ms is not None:
+            self._flusher = threading.Thread(target=self._flush_loop,
+                                             name="ecore-flusher",
+                                             daemon=True)
+            self._flusher.start()
+
+    # ------------------------------------------------------------ submit
+
+    def submit(self, req: RouteRequest) -> "Future[Served]":
+        """Route one request and enqueue it on its backend's dispatch queue.
+        The returned future resolves to a ``Served`` when the batch flushes
+        (full batch, deadline expiry, ``drain`` or ``close``)."""
+        with self._cond:
+            self._ensure_open()
+            fut = self._enqueue(req, self.policy.decide(req))
+            self._cond.notify_all()   # new deadline for the flusher
+            return fut
+
+    def submit_batch(self, reqs: Sequence[RouteRequest]
+                     ) -> List["Future[Served]"]:
+        """Route a whole workload in one ``decide_batch`` call (one XLA
+        launch for batchable policies) and enqueue every request."""
+        with self._cond:
+            self._ensure_open()
+            decisions = self.policy.decide_batch(list(reqs))
+            futs = [self._enqueue(r, d) for r, d in zip(reqs, decisions)]
+            self._cond.notify_all()
+            return futs
+
+    def observe(self, obs: Observation) -> None:
+        """The single feedback plane: fold measured signals into the
+        policy's profile (next decisions see them immediately)."""
+        with self._cond:
+            self.policy.observe(obs)
+
+    # ------------------------------------------------------------ results
+
+    def results(self) -> List[Served]:
+        """Completed requests since the last ``results``/``drain`` call."""
+        with self._cond:
+            out, self._completed = self._completed, []
+            return out
+
+    def drain(self) -> List[Served]:
+        """Flush every pending partial batch and return all unconsumed
+        completions.  Raises the first backend error the flusher thread
+        swallowed since the last drain — a results()-driven driver must not
+        lose requests silently."""
+        with self._cond:
+            self._flush_all()
+            if self._errors:
+                raise self._errors.popleft()
+            out, self._completed = self._completed, []
+            return out
+
+    def close(self) -> None:
+        """Flush whatever is pending (no future is left dangling: results
+        resolve, backend errors become future exceptions), stop the flusher
+        thread, then re-raise the first flush error.  Idempotent;
+        completions remain readable via ``results()``."""
+        exc = None
+        with self._cond:
+            if self._closed:
+                return
+            try:
+                self._flush_all()
+            except Exception as e:
+                exc = e
+            if exc is None and self._errors:
+                exc = self._errors.popleft()
+            self._closed = True
+            self._cond.notify_all()
+        if self._flusher is not None:
+            self._flusher.join(timeout=5.0)
+        if exc is not None:
+            raise exc
+
+    def __enter__(self) -> "EcoreService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def wake(self) -> None:
+        """Make the flusher re-check deadlines now (fake-clock tests call
+        this after advancing their clock)."""
+        with self._cond:
+            self._cond.notify_all()
+
+    @property
+    def deadline_flushes(self) -> int:
+        """Partial batches served because a deadline expired — counted on
+        the queues, so inline (submit-path) and flusher-thread deadline
+        flushes both register."""
+        return sum(q.deadline_flushes for q in self._queues.values())
+
+    def stats(self) -> Dict:
+        with self._cond:
+            return {
+                "backends": len(self._queues),
+                "serve_calls": sum(q.calls for q in self._queues.values()),
+                "served": sum(q.served for q in self._queues.values()),
+                "deadline_flushes": self.deadline_flushes,
+                "queue_wait_ms": list(self._queue_wait_ms),
+            }
+
+    # ----------------------------------------------------------- internals
+
+    def _ensure_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("EcoreService is closed")
+
+    def _enqueue(self, req: RouteRequest,
+                 decision: RouteDecision) -> "Future[Served]":
+        if req.uid in self._inflight:
+            raise ValueError(f"request uid {req.uid} is already in flight")
+        key = decision.pair
+        q = self._queues.get(key)
+        if q is None:
+            q = DispatchQueue(self._factory(decision),
+                              max_wait_ms=self.max_wait_ms,
+                              clock=self._clock)
+            self._queues[key] = q
+        fut: "Future[Served]" = Future()
+        self._inflight[req.uid] = (req, decision, fut, self._clock(), key)
+        self._dispatch(key, q, lambda: q.submit(
+            Request(uid=req.uid, prompt=req.payload,
+                    max_new_tokens=req.max_new_tokens,
+                    group=decision.group)))
+        return fut
+
+    def _dispatch(self, key: Tuple[str, str], q: DispatchQueue, fn) -> None:
+        """Run one queue operation that may serve a batch.  A backend error
+        must not kill the flusher thread or dangle futures: every inflight
+        future of the failing backend gets the exception (the flushed batch
+        was already popped, and any same-flush sub-batch results are lost
+        with it), then the error propagates to a direct caller."""
+        t_flush = self._clock()  # wait ends when serving STARTS
+        try:
+            self._complete(fn(), t_flush)
+        except Exception as exc:
+            for uid, (_, _, fut, _, k) in list(self._inflight.items()):
+                if k == key:
+                    del self._inflight[uid]
+                    fut.set_exception(exc)
+            raise
+
+    def _complete(self, results: List[Result],
+                  t_flush: Optional[float] = None) -> None:
+        if t_flush is None:
+            t_flush = self._clock()
+        for res in results:
+            req, decision, fut, t_submit, _ = self._inflight.pop(res.uid)
+            # time spent QUEUED for batching (not the serve itself)
+            self._queue_wait_ms.append((t_flush - t_submit) * 1e3)
+            served = Served(request=req, decision=decision, result=res)
+            if self._retain:
+                self._completed.append(served)
+            fut.set_result(served)
+
+    def _flush_all(self) -> None:
+        first_exc = None
+        for key, q in self._queues.items():
+            try:
+                self._dispatch(key, q, q.flush)
+            except Exception as exc:  # futures already carry it; drain the
+                first_exc = first_exc or exc        # healthy queues anyway
+        if first_exc is not None:
+            raise first_exc
+
+    def _flush_loop(self) -> None:
+        with self._cond:
+            while not self._closed:
+                self.flusher_passes += 1
+                deadlines = [d for q in self._queues.values()
+                             if (d := q.next_deadline()) is not None]
+                if not deadlines:
+                    # idle: submit()/close() notify, so no timed tick needed
+                    self._cond.wait()
+                    continue
+                wait_s = min(deadlines) - self._clock()
+                if wait_s > 0:
+                    self._cond.wait(min(wait_s, self.FLUSH_TICK_S))
+                    continue
+                now = self._clock()
+                for key, q in list(self._queues.items()):
+                    nd = q.next_deadline()
+                    if nd is not None and nd <= now:
+                        q.deadline_flushes += 1
+                        try:
+                            self._dispatch(key, q, q.flush)
+                        except Exception as exc:
+                            # futures carry the backend error and drain()/
+                            # close() re-raise it; the flusher must survive
+                            # to serve the other queues
+                            self._errors.append(exc)

@@ -98,6 +98,29 @@ def test_router_route_batch_faces(table):
         [orc.route(true_count=c) for c in counts]
 
 
+def test_non_batchable_routers_honest_flags_and_batch_parity(table):
+    """Every router without a tensorized route_batch must say so
+    (batchable=False) and still route correctly through the generic
+    per-item fallback: batch == the scalar loop, state reset in between
+    (stateful routers: RR advances an index, Rnd consumes an RNG)."""
+    from repro.core.router import (HighestMAPPerGroupRouter, HighestMAPRouter,
+                                   LowestEnergyRouter, LowestInferenceRouter,
+                                   ParetoRouter, RandomRouter,
+                                   RoundRobinRouter, WeightedRouter)
+
+    counts = [0, 3, 7, 1, 12, 2, 2, 5]
+    for cls in (RoundRobinRouter, RandomRouter, LowestEnergyRouter,
+                LowestInferenceRouter, HighestMAPRouter,
+                HighestMAPPerGroupRouter, WeightedRouter, ParetoRouter):
+        r = cls(table, 5.0)
+        assert r.batchable is False, cls.name
+        r.reset()
+        batch = r.route_batch(estimated_counts=counts, true_counts=counts)
+        r.reset()
+        scalar = [r.route(estimated_count=c, true_count=c) for c in counts]
+        assert batch == scalar, cls.name
+
+
 # ------------------------------------------------------ pool batched routing
 
 def _pool():
@@ -162,6 +185,75 @@ def test_gateway_batched_routing_identical_to_scalar(monkeypatch):
     assert len(batched.pair_histogram) == 2  # routing actually varied
 
 
+def test_process_stream_matches_handwritten_reference(monkeypatch):
+    """Acceptance (PR 3): process_stream rebuilt on DetectionPolicy produces
+    EpisodeStats IDENTICAL (mAP, energy, time, pair histogram — exact float
+    equality, same accumulation order) to the paper pipeline written out
+    longhand (what the pre-refactor loop inlined), on both the scalar and
+    the batched path, on a fixed-seed stream."""
+    from repro.core.energy import gateway_cost
+    from repro.core.estimators import EdgeDetectionEstimator
+    from repro.core.gateway import Gateway
+    from repro.core.metrics import MAPAccumulator
+    from repro.detection import train
+    from repro.detection.detectors import DETECTOR_CONFIGS
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=i % 6)
+              for i in range(24)]
+    params = {"ssd_v1": None, "yolov8_n": None}
+
+    # longhand: estimate -> route -> dispatch -> account, straight off Fig. 3
+    table = _grouped_table()
+    est = EdgeDetectionEstimator()
+    acc = MAPAccumulator(sc.NUM_CLASSES)
+    be_e = be_t = gw_e = gw_t = 0.0
+    hist = {}
+    for s in scenes:
+        count, est_flops = est.estimate(s.image)
+        gc = gateway_cost(est_flops)
+        gw_e += gc["energy_mwh"]
+        gw_t += gc["time_ms"]
+        m, d = greedy_route(int(count), table, 5.0).pair
+        hist[f"{m}@{d}"] = hist.get(f"{m}@{d}", 0) + 1
+        boxes, scores, classes = _fake_run_detector(None, s.image[None])[0]
+        acc.add_image(boxes, scores, classes, s.boxes, s.classes)
+        flops = DETECTOR_CONFIGS[m].flops
+        be_t += DEVICES[d].time_ms(flops)
+        be_e += DEVICES[d].energy_mwh(flops)
+
+    for batch_routing in (True, False):
+        table2 = _grouped_table()
+        gw = Gateway(GreedyEstimateRouter(table2, 5.0), table2, params,
+                     EdgeDetectionEstimator(), batch_routing=batch_routing)
+        stats = gw.process_stream(scenes)
+        assert stats.map_pct == acc.map()
+        assert stats.backend_energy_mwh == be_e
+        assert stats.backend_time_ms == be_t
+        assert stats.gateway_energy_mwh == gw_e
+        assert stats.gateway_time_ms == gw_t
+        assert stats.pair_histogram == hist
+
+
+def test_gateway_two_episodes_deterministic_with_random_router(monkeypatch):
+    """Back-to-back process_stream episodes on ONE RandomRouter must be
+    identical: reset() reseeds the RNG (used to be a silent no-op)."""
+    from repro.core.gateway import Gateway
+    from repro.core.router import RandomRouter
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    table = _grouped_table()
+    gw = Gateway(RandomRouter(table, seed=3), table,
+                 {"ssd_v1": None, "yolov8_n": None}, None)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=i % 6)
+              for i in range(30)]
+    first = gw.process_stream(scenes)
+    second = gw.process_stream(scenes)
+    assert first == second
+    assert len(first.pair_histogram) == 2  # the router actually randomized
+
+
 def test_gateway_adapt_forces_scalar_path(monkeypatch):
     """The closed loop mutates the table per request, so the batched
     single-shot routing must be bypassed when adapt=True."""
@@ -174,8 +266,7 @@ def test_gateway_adapt_forces_scalar_path(monkeypatch):
     gw = Gateway(GreedyEstimateRouter(table, 5.0), table,
                  {"ssd_v1": None, "yolov8_n": None},
                  EdgeDetectionEstimator(), adapt=True)
-    assert gw._route_all([sc.make_scene(np.random.default_rng(0),
-                                        count=1)]) is None
+    assert gw.policy.batchable is False
 
 
 # ------------------------------------------------------- mAP closed loop
@@ -257,9 +348,7 @@ def test_gateway_explore_without_adapt_keeps_batched_path(monkeypatch):
     gw = Gateway(GreedyEstimateRouter(table, 5.0), table,
                  {"ssd_v1": None, "yolov8_n": None},
                  EdgeDetectionEstimator(), explore_every=5)
-    scenes = [sc.make_scene(np.random.default_rng(i), count=1)
-              for i in range(3)]
-    assert gw._route_all(scenes) is not None
+    assert gw.policy.batchable is True
 
 
 def test_gateway_adapt_map_requires_adapt(table):

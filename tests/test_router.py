@@ -100,6 +100,17 @@ def test_greedy_optimality(entries, count, delta):
     assert all(pick.energy_mwh <= r.energy_mwh for r in feasible)
 
 
+def test_random_router_reset_reseeds(toy_table):
+    """Regression: reset() used to be a no-op, so back-to-back episodes with
+    one RandomRouter were not reproducible."""
+    rnd = RandomRouter(toy_table, seed=7)
+    first = [rnd.route() for _ in range(20)]
+    rnd.reset()
+    second = [rnd.route() for _ in range(20)]
+    assert first == second
+    assert len(set(first)) > 1  # the stream actually varies
+
+
 def test_baseline_routers(toy_table):
     assert LowestEnergyRouter(toy_table).route() == ("tiny", "devA")
     assert LowestInferenceRouter(toy_table).route() == ("tiny", "devA")
