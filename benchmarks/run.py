@@ -14,6 +14,8 @@ to artifacts/bench/.  Figure map (see DESIGN.md §7):
   overhead      — gateway-overhead metric (per estimator)
   serve         — end-to-end EcoreService throughput (req/s, flush counts,
                   p50/p95 queue wait under the threaded deadline flusher)
+  cluster       — sharded req/s scaling over EcoreCluster pods (1/2/4) +
+                  jitted shard-selection overhead vs the scalar reference
   kernels       — kernel timings (CPU oracle path; Pallas checked in tests)
   pool_routing  — framework-level: ECORE over the TPU dry-run pool
   roofline      — per (arch x shape x mesh) roofline terms from the dry-run
@@ -156,10 +158,8 @@ def bench_gateway_hotpath(quick=False):
     tensorized route_batch call, with a per-frame exact-match check."""
     import jax
     import jax.numpy as jnp
-    from repro.core.profiles import ProfileEntry, ProfileTable
     from repro.core.router import greedy_route, route_batch
-    from repro.detection.detectors import DETECTOR_CONFIGS
-    from repro.detection.devices import DEVICES, TESTBED_PAIRS
+    from repro.detection.devices import nominal_profile_table
     from repro.kernels.canny_fused import ref as canny_ref
     from repro.kernels.canny_fused.ops import canny_edge
 
@@ -188,16 +188,7 @@ def bench_gateway_hotpath(quick=False):
 
     # routing: nominal profile over the paper testbed (routing dynamics
     # only — no trained detectors needed)
-    nominal = {"ssd_v1": 52.0, "ssd_lite": 55.0, "yolov8_n": 57.0,
-               "yolov8_s": 60.0}
-    entries = []
-    for m, d in TESTBED_PAIRS:
-        flops = DETECTOR_CONFIGS[m].flops
-        for g in range(5):
-            entries.append(ProfileEntry(
-                m, d, g, nominal[m] - 1.5 * g,
-                DEVICES[d].time_ms(flops), DEVICES[d].energy_mwh(flops)))
-    table = ProfileTable(entries)
+    table = nominal_profile_table()
     nb = 1024 if quick else 4096
     counts = np.random.default_rng(0).integers(0, 9, size=nb)
     t0 = time.perf_counter()
@@ -391,6 +382,94 @@ def bench_serve(quick=False):
     return row
 
 
+# ------------------------------------------------- sharded cluster serving
+
+def bench_cluster(quick=False):
+    """EcoreCluster req/s scaling (1/2/4 pods) + shard-selection overhead.
+
+    Backends are DetectorBackends with ``realtime_scale=1``: serve_batch
+    OCCUPIES the wall clock for the modeled edge-device latency (sleep
+    releases the GIL), so pods genuinely overlap — what's measured is the
+    cluster plane's ability to shard and serve concurrently, with the
+    device model as the load generator.  Appended to BENCH_gateway.json."""
+    from repro.core.policy import DetectionPolicy, RouteRequest
+    from repro.core.router import OracleRouter
+    from repro.detection.devices import nominal_profile_table
+    from repro.serving.backend import make_backend, null_run
+    from repro.serving.cluster import (EcoreCluster, select_pods,
+                                       select_pods_reference)
+
+    n = 48 if quick else 128
+    rng = np.random.default_rng(0)
+    counts = rng.integers(0, 9, size=n)
+    frame = np.zeros((8, 8), np.float32)
+
+    def factory(decision):
+        return make_backend("detector", decision.pair[0], decision.pair[1],
+                            None, max_batch=4, run_fn=null_run,
+                            realtime_scale=1.0)
+
+    def episode(pods):
+        def policy_factory(i):
+            table = nominal_profile_table()
+            return DetectionPolicy(OracleRouter(table, 5.0), table)
+
+        with EcoreCluster(policy_factory, factory, pods=pods) as cluster:
+            reqs = [RouteRequest(uid=i, payload=frame,
+                                 true_complexity=int(c))
+                    for i, c in enumerate(counts)]
+            t0 = time.perf_counter()
+            futs = cluster.submit_batch(reqs)
+            cluster.drain()
+            served = [f.result(timeout=120) for f in futs]
+            wall = time.perf_counter() - t0
+            assert len(served) == n
+            shard_counts = cluster.stats()["shard_counts"]
+        return n / wall, shard_counts
+
+    print("\n== cluster (sharded EcoreService pods; modeled device load) ==")
+    print("pods,requests_per_s,shard_counts")
+    rps = {}
+    for pods in (1, 2, 4):
+        rps[pods], shard_counts = episode(pods)
+        print(f"{pods},{rps[pods]:.0f},{shard_counts}")
+    scaling = rps[4] / rps[1]
+    print(f"scaling_4pod_vs_1pod,{scaling:.2f}x")
+
+    # shard-selection overhead: one jitted XLA call for the whole batch vs
+    # the scalar reference loop, plus exact-parity check
+    nb = 2048
+    uids = np.random.default_rng(1).integers(0, 2**31, size=nb)
+    depths = np.zeros(4, np.int64)
+    overhead = {}
+    for mode in ("least_loaded", "rendezvous"):
+        select_pods(uids, depths, mode)  # warm the jit
+        t0 = time.perf_counter()
+        picks = select_pods(uids, depths, mode)
+        jit_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        ref_picks = select_pods_reference(uids, depths, mode)
+        ref_s = time.perf_counter() - t0
+        parity = bool(np.array_equal(picks, ref_picks))
+        overhead[mode] = {"jitted_us_per_req": jit_s / nb * 1e6,
+                          "scalar_us_per_req": ref_s / nb * 1e6,
+                          "parity": parity}
+        print(f"shard_{mode},jitted_us_per_req,"
+              f"{overhead[mode]['jitted_us_per_req']:.2f},"
+              f"scalar_us_per_req,{overhead[mode]['scalar_us_per_req']:.2f},"
+              f"parity,{parity}")
+
+    record = {"cluster": {
+        "requests": n,
+        "requests_per_s_by_pods": {str(p): v for p, v in rps.items()},
+        "scaling_4pod_vs_1pod": scaling,
+        "shard_selection": overhead,
+    }}
+    _append_gateway_bench(record)
+    _save("cluster", record)
+    return record
+
+
 # ------------------------------------------------- framework pool routing
 
 def bench_pool_routing(quick=False):
@@ -430,24 +509,11 @@ def bench_adaptive(quick=False):
     trained detectors so the bench isolates WHERE requests go, not how well
     the detector draws boxes.  Regret = actual energy paid minus what an
     oracle that always sees the true drifted costs would pay."""
-    from repro.core.profiles import ProfileEntry, ProfileTable
     from repro.core.router import feasible_for_count, greedy_route
     from repro.detection.detectors import DETECTOR_CONFIGS
-    from repro.detection.devices import (DEVICES, TESTBED_PAIRS,
-                                         drift_scenario)
+    from repro.detection.devices import drift_scenario, nominal_profile_table
 
-    NOMINAL_MAP = {"ssd_v1": 52.0, "ssd_lite": 55.0, "yolov8_n": 57.0,
-                   "yolov8_s": 60.0}
-
-    def base_table():
-        entries = []
-        for m, d in TESTBED_PAIRS:
-            flops = DETECTOR_CONFIGS[m].flops
-            for g in range(5):
-                entries.append(ProfileEntry(
-                    m, d, g, NOMINAL_MAP[m] - 1.5 * g,
-                    DEVICES[d].time_ms(flops), DEVICES[d].energy_mwh(flops)))
-        return ProfileTable(entries)
+    base_table = nominal_profile_table   # fresh table per episode
 
     steps = 150 if quick else 400
     delta, alpha = 5.0, 0.15
@@ -537,6 +603,7 @@ BENCHES = {
     "delta_sweep": bench_delta_sweep,
     "overhead": bench_overhead,
     "serve": bench_serve,
+    "cluster": bench_cluster,
     "kernels": bench_kernels,
     "pool_routing": bench_pool_routing,
     "roofline": bench_roofline,

@@ -1,0 +1,77 @@
+"""One execution plane, three drivers: sync service, asyncio facade,
+sharded cluster — all over the same policy + ExecutionBackend pair.
+
+  PYTHONPATH=src python examples/async_cluster.py
+
+Uses DetectorBackends over the edge-device models (no training needed: a
+stub detector stands in, the device energy/latency models are real), so
+the example runs in seconds on CPU.
+"""
+import asyncio
+
+import numpy as np
+
+from repro.core.policy import DetectionPolicy, Observation, RouteRequest
+from repro.core.router import OracleRouter
+from repro.detection.devices import nominal_profile_table
+from repro.serving.aio import AsyncEcoreService
+from repro.serving.backend import make_backend, null_run
+from repro.serving.cluster import EcoreCluster
+from repro.serving.service import EcoreService
+
+
+def policy_for(_pod: int) -> DetectionPolicy:
+    table = nominal_profile_table()
+    return DetectionPolicy(OracleRouter(table, 5.0), table)
+
+
+def factory(decision):
+    return make_backend("detector", decision.pair[0], decision.pair[1],
+                        None, max_batch=4, run_fn=null_run)
+
+
+def requests(n: int):
+    rng = np.random.default_rng(0)
+    frame = np.zeros((8, 8), np.float32)
+    return [RouteRequest(uid=i, payload=frame,
+                         true_complexity=int(rng.integers(0, 9)))
+            for i in range(n)]
+
+
+def main():
+    # 1) sync service: futures + drain
+    with EcoreService(policy_for(0), factory) as service:
+        futs = [service.submit(r) for r in requests(8)]
+        service.drain()
+        hist = {}
+        for f in futs:
+            hist[f.result().decision.pair_name] = \
+                hist.get(f.result().decision.pair_name, 0) + 1
+        print("sync service pairs:", hist)
+
+    # 2) asyncio facade: the same plane, awaitable
+    async def drive():
+        async with AsyncEcoreService(policy_for(0), factory) as svc:
+            futs = [svc.submit_nowait(r) for r in requests(8)]
+            await svc.drain()
+            served = await asyncio.gather(*futs)
+            # the single observation plane works here too
+            svc.observe(Observation(pair=served[0].decision.pair,
+                                    uid=served[0].request.uid,
+                                    time_ms=99.0))
+            return [s.decision.pair_name for s in served]
+
+    print("async served:", sorted(set(asyncio.run(drive()))))
+
+    # 3) cluster: shard one stream over 4 pods, aggregate stats
+    with EcoreCluster(policy_for, factory, pods=4) as cluster:
+        futs = cluster.submit_batch(requests(32))
+        cluster.drain()
+        assert all(f.done() for f in futs)
+        stats = cluster.stats()
+        print(f"cluster: {stats['served']} served over {stats['pods']} pods, "
+              f"shard_counts={stats['shard_counts']}")
+
+
+if __name__ == "__main__":
+    main()

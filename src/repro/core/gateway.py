@@ -8,10 +8,13 @@ overhead (estimator cost) is accounted separately, exactly like the paper's
 "Gateway Overhead" metric.
 
 Decision-making lives in ``core.policy.DetectionPolicy`` (estimate+route+
-explore/adapt behind the shared ``RoutingPolicy`` API); this class is the
-thin stream driver on top of it: it executes the chosen detector, charges
-fleet/device costs, accumulates ``EpisodeStats``, and feeds measurements
-back through the single ``Observation`` plane.
+explore/adapt behind the shared ``RoutingPolicy`` API); EXECUTION lives in
+``serving.backend.DetectorBackend`` behind the shared ``ExecutionBackend``
+protocol.  This class is the thin stream driver over ``EcoreService``: it
+submits the stream as ``RouteRequest``s, lets the service's per-pair
+``DispatchQueue``s batch the dispatch, accumulates ``EpisodeStats`` from the
+``Served`` completions, and feeds measurements back through the single
+``Observation`` plane — there is no detection-private serving loop.
 """
 from __future__ import annotations
 
@@ -23,8 +26,6 @@ from repro.core.metrics import MAPAccumulator
 from repro.core.policy import DetectionPolicy, Observation, RouteRequest
 from repro.core.profiles import ProfileTable
 from repro.core.router import Router
-from repro.detection.devices import DEVICES
-from repro.detection.detectors import DETECTOR_CONFIGS
 from repro.detection.scenes import NUM_CLASSES, Scene
 
 
@@ -49,7 +50,7 @@ class EpisodeStats:
 
 
 class Gateway:
-    """Routes a stream of scenes through detector backends.
+    """Routes a stream of scenes through detector backends via EcoreService.
 
     Closed loop (BEYOND-PAPER, §6 future work): with ``adapt=True`` every
     request's MEASURED backend latency/energy is EWMA-folded back into the
@@ -67,10 +68,13 @@ class Gateway:
 
     Batched hot path: when the policy is ``batchable`` (ED/SF estimator,
     greedy/oracle router, loop open), ``process_stream`` decides the WHOLE
-    stream in one ``DetectionPolicy.decide_batch`` call (one estimator
-    launch + one XLA routing call) instead of per-frame Python — decisions
+    stream in one ``EcoreService.submit_batch`` call (one estimator launch +
+    one XLA routing call) and the per-pair dispatch queues batch detector
+    execution up to ``max_batch`` frames per launch — decisions and stats
     are identical to the scalar path (tested).  Set ``batch_routing=False``
-    to force the scalar path.
+    to force the scalar path.  The closed loop (``adapt``, feedback
+    estimators) always serves one request at a time, since each observation
+    changes the table the next decision reads.
 
     mAP closed loop: ``adapt_map=True`` (requires ``adapt=True``) folds each
     request's MEASURED per-frame detection quality back into the served
@@ -82,15 +86,24 @@ class Gateway:
                  estimator: Optional[Estimator] = None, *,
                  fleet=None, adapt: bool = False, alpha: float = 0.1,
                  explore_every: int = 0, adapt_map: bool = False,
-                 batch_routing: bool = True):
-        from repro.detection.train import run_detector  # lazy: heavy import
+                 batch_routing: bool = True, max_batch: int = 1):
+        # lazy: heavy imports (detector training stack, serving engine)
+        from repro.detection.train import run_detector
+        from repro.serving.backend import DetectorBackend
+        from repro.serving.service import EcoreService
         self._run = run_detector
+        self._DetectorBackend = DetectorBackend
+        self._EcoreService = EcoreService
         self.policy = DetectionPolicy(router, table, estimator, adapt=adapt,
                                       alpha=alpha, explore_every=explore_every,
                                       adapt_map=adapt_map,
                                       batch_routing=batch_routing)
         self.params = detector_params
         self.fleet = fleet
+        #: frames per detector launch on the open-loop batched path (the
+        #: closed loop always serves frame-at-a-time); 1 = bit-exact with
+        #: per-frame execution
+        self.max_batch = max_batch
 
     # single source of truth for routing state is the policy — read-only
     # mirrors here, so a post-construction toggle can't drift the two apart
@@ -131,55 +144,78 @@ class Gateway:
     def process_stream(self, stream: Sequence[Scene]) -> EpisodeStats:
         scenes = list(stream)
         acc = MAPAccumulator(NUM_CLASSES)
-        be_energy = be_time = gw_energy = gw_time = 0.0
+        totals = {"be_e": 0.0, "be_t": 0.0, "gw_e": 0.0, "gw_t": 0.0}
         hist: Dict[str, int] = {}
         self.policy.reset()
+        # request uid = stream position: DetectorBackend uses it as the
+        # fleet timestep, so drifted costs are identical however dispatch
+        # batches the frames
         reqs = [RouteRequest(uid=i, payload=s.image, true_complexity=s.count)
                 for i, s in enumerate(scenes)]
-        # batched estimate->route fast path: one decide_batch call for the
-        # whole stream when per-frame semantics (closed loop, feedback
-        # estimators) don't force the scalar loop
-        decisions = (self.policy.decide_batch(reqs)
-                     if self.policy.batchable and reqs else None)
-        for step, (scene, req) in enumerate(zip(scenes, reqs)):
-            d = (decisions[step] if decisions is not None
-                 else self.policy.decide(req))
-            gw_energy += d.gateway_energy_mwh
-            gw_time += d.gateway_time_ms
-            model, device = d.pair
-            hist[d.pair_name] = hist.get(d.pair_name, 0) + 1
-            boxes, scores, classes = self._run(self.params[model],
-                                               scene.image[None])[0]
-            acc.add_image(boxes, scores, classes, scene.boxes, scene.classes)
-            flops = DETECTOR_CONFIGS[model].flops
-            if self.fleet is not None:
-                t_ms, e_mwh = self.fleet.cost(device, flops, step)
+        batchable = self.policy.batchable
+        # the closed loop serves frame-at-a-time: each observation mutates
+        # the table the next decision must read
+        max_batch = self.max_batch if batchable else 1
+
+        def factory(decision):
+            model, device = decision.pair
+            return self._DetectorBackend(model, device, self.params[model],
+                                         max_batch=max_batch,
+                                         fleet=self.fleet, run_fn=self._run)
+
+        def handle(service, served_batch):
+            # uid order = stream order: accumulation is identical to the
+            # longhand per-frame loop however the dispatch queues batched
+            for served in sorted(served_batch, key=lambda s: s.request.uid):
+                d, res = served.decision, served.result
+                scene = scenes[served.request.uid]
+                totals["gw_e"] += d.gateway_energy_mwh
+                totals["gw_t"] += d.gateway_time_ms
+                hist[d.pair_name] = hist.get(d.pair_name, 0) + 1
+                boxes, scores, classes = res.detections
+                acc.add_image(boxes, scores, classes, scene.boxes,
+                              scene.classes)
+                totals["be_e"] += res.energy_mwh
+                totals["be_t"] += res.time_ms
+                obs = Observation(pair=d.pair, uid=served.request.uid)
+                if self.adapt:
+                    if self.adapt_map:
+                        one = MAPAccumulator(NUM_CLASSES)
+                        one.add_image(boxes, scores, classes, scene.boxes,
+                                      scene.classes)
+                        obs.map_pct = one.map()
+                    obs.group = self.policy.group_for(scene.count)
+                    obs.time_ms, obs.energy_mwh = res.time_ms, res.energy_mwh
+                if self.estimator is not None:
+                    # OB feedback: the count the BACKEND detected
+                    obs.detected_count = int((scores >= 0.5).sum())
+                if not obs.empty:
+                    service.observe(obs)
+
+        service = self._EcoreService(self.policy, factory)
+        try:
+            if batchable and reqs:
+                # one decide_batch for the whole stream, batched dispatch;
+                # open loop, so deferring the (estimator-feedback-only)
+                # observations to completion order is semantics-preserving
+                service.submit_batch(reqs)
+                handle(service, service.results() + service.drain())
             else:
-                dev = DEVICES[device]
-                t_ms, e_mwh = dev.time_ms(flops), dev.energy_mwh(flops)
-            be_energy += e_mwh
-            be_time += t_ms
-            obs = Observation(pair=d.pair)
-            if self.adapt:
-                if self.adapt_map:
-                    one = MAPAccumulator(NUM_CLASSES)
-                    one.add_image(boxes, scores, classes, scene.boxes,
-                                  scene.classes)
-                    obs.map_pct = one.map()
-                obs.group = self.policy.group_for(scene.count)
-                obs.time_ms, obs.energy_mwh = t_ms, e_mwh
-            if self.estimator is not None:
-                # OB feedback: the count the BACKEND detected
-                obs.detected_count = int((scores >= 0.5).sum())
-            if not obs.empty:
-                self.policy.observe(obs)
+                for req in reqs:
+                    # max_batch=1: the request is served inline, so the
+                    # observation lands before the next decision
+                    service.submit(req)
+                    handle(service, service.results())
+                handle(service, service.drain())
+        finally:
+            service.close()
         return EpisodeStats(
             router=self.router.name,
             estimator=self.estimator.name if self.estimator else None,
             map_pct=acc.map(),
-            backend_energy_mwh=be_energy,
-            backend_time_ms=be_time,
-            gateway_energy_mwh=gw_energy,
-            gateway_time_ms=gw_time,
+            backend_energy_mwh=totals["be_e"],
+            backend_time_ms=totals["be_t"],
+            gateway_energy_mwh=totals["gw_e"],
+            gateway_time_ms=totals["gw_t"],
             pair_histogram=hist,
         )

@@ -85,8 +85,11 @@ class Observation:
     """Measured runtime signals for one served request (the single observe
     plane): latency/energy are pair-wide, quality is per-group.  ``group``
     may be omitted when ``true_complexity`` is given — the policy derives
-    the group under its own rules."""
+    the group under its own rules.  ``uid`` (optional) names the request
+    that produced the measurement — ``EcoreCluster.observe`` uses it to
+    fold the observation into the OWNING pod's policy."""
     pair: Pair
+    uid: Optional[int] = None
     group: Optional[int] = None
     true_complexity: Optional[int] = None
     time_ms: Optional[float] = None

@@ -54,6 +54,32 @@ TESTBED_PAIRS: Tuple[Tuple[str, str], ...] = (
 )
 
 
+# ------------------------------------------------------- nominal profiling
+# Routing-dynamics fixtures (benches, examples, tests) need a profile with
+# the testbed's SHAPE but no trained detectors: nominal per-model mAPs that
+# degrade mildly with the group, device costs from the real energy models.
+
+NOMINAL_MAP: Dict[str, float] = {"ssd_v1": 52.0, "ssd_lite": 55.0,
+                                 "yolov8_n": 57.0, "yolov8_s": 60.0}
+
+
+def nominal_profile_table(pairs: Sequence[Tuple[str, str]] = TESTBED_PAIRS,
+                          groups: int = 5):
+    """Fresh ProfileTable over ``pairs`` with nominal mAPs and modeled
+    device costs — isolates WHERE requests go from how well boxes are
+    drawn.  Callers that EWMA-adapt get their own instance per call."""
+    from repro.core.profiles import ProfileEntry, ProfileTable
+    from repro.detection.detectors import DETECTOR_CONFIGS
+    entries = []
+    for m, d in pairs:
+        flops = DETECTOR_CONFIGS[m].flops
+        for g in range(groups):
+            entries.append(ProfileEntry(
+                m, d, g, NOMINAL_MAP[m] - 1.5 * g,
+                DEVICES[d].time_ms(flops), DEVICES[d].energy_mwh(flops)))
+    return ProfileTable(entries)
+
+
 # --------------------------------------------------------------- drift model
 # BEYOND-PAPER (paper §6 / AyE-Edge 2408.05363): the offline profile goes
 # stale at runtime — devices throttle, share CPU with other tenants, or drop

@@ -57,6 +57,14 @@ from .ref import HYSTERESIS_ITERS
 #: rows of neighbour context one output row depends on (see module docstring)
 HALO = 2 + 1 + 1 + HYSTERESIS_ITERS
 
+#: widest frame the row-tiled kernel accepts: the working set is ~5
+#: f32-equivalent [tile_rows + 2*HALO, W] buffers, so at the minimum
+#: tile_rows=HALO a 4096-column frame is ~3 MB of VMEM — comfortably inside
+#: the ~16 MB/core budget; wider frames need lane-dim (width) tiling, which
+#: this kernel does not implement (ROADMAP: "lane-dim (width) tiling for
+#: frames wider than ~4k columns" is an open item)
+MAX_WIDTH = 4096
+
 
 def _canny_kernel(prev_ref, cur_ref, next_ref, out_ref, *,
                   h: int, tile: int, lo: float, hi: float):
@@ -144,6 +152,14 @@ def canny_edge_pallas(img, *, lo: float = 0.6, hi: float = 1.0,
     128 rows); any frame height works, including non-multiples of the tile.
     """
     b, h, w = img.shape
+    if w > MAX_WIDTH:
+        raise ValueError(
+            f"frame width {w} exceeds the fused kernel's column limit "
+            f"({MAX_WIDTH}): the row-tiled megakernel keeps whole rows in "
+            f"VMEM and only tiles the HEIGHT; frames this wide need "
+            f"lane-dim (width) tiling — an open ROADMAP item ('lane-dim "
+            f"(width) tiling for frames wider than ~4k columns').  Use "
+            f"impl='xla' (the staged oracle) for now.")
     tile = tile_rows if tile_rows is not None else min(max(h, HALO), 128)
     if tile < HALO:
         raise ValueError(

@@ -1,6 +1,8 @@
-"""Serving driver: one EcoreService streams ECORE-routed requests.
+"""Serving driver: one request plane streams ECORE-routed requests.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 24 --delta 5
+  PYTHONPATH=src python -m repro.launch.serve --requests 24 --pods 4
+  PYTHONPATH=src python -m repro.launch.serve --requests 24 --async
 
 On this CPU container backends are REDUCED variants of the assigned archs
 (real prefill+decode runs, batched); the routing profile comes from the
@@ -23,6 +25,11 @@ different scales, so only the relative slowdown transfers), rescales its
 profiled time AND energy through the single ``Observation`` plane — so the
 greedy argmin-energy routing reacts when a backend runs slower than its
 profile claims.
+
+``--pods N`` shards the stream over an ``EcoreCluster`` of N service pods
+(each with its OWN PoolPolicy over a copy of the profile, so ``--adapt``
+observations fold into the owning pod); ``--async`` drives a single pod
+through the ``AsyncEcoreService`` asyncio facade instead of the sync API.
 """
 from __future__ import annotations
 
@@ -79,7 +86,19 @@ def main(argv=None):
     ap.add_argument("--adapt", action="store_true",
                     help="EWMA-update the routing profile from measured "
                          "per-request latency (closed loop)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="shard the stream over an EcoreCluster of N "
+                         "service pods (each pod: own policy over a copy "
+                         "of the profile, own queues and backends)")
+    ap.add_argument("--shard", default="least_loaded",
+                    choices=["least_loaded", "rendezvous"],
+                    help="cluster shard-selection policy (with --pods > 1)")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="drive one pod through the AsyncEcoreService "
+                         "asyncio facade (incompatible with --pods > 1)")
     args = ap.parse_args(argv)
+    if args.use_async and args.pods > 1:
+        ap.error("--async drives a single pod; use --pods 1 with it")
 
     if os.path.exists(args.dryrun_artifact):
         table = pool_table_from_dryrun(args.dryrun_artifact)
@@ -130,8 +149,10 @@ def main(argv=None):
                 baselines[key] = base_ms
                 slowdown = local_ms / max(base_ms, 1e-9)
                 prof_t, prof_e = pristine[d.backend]
+                # uid lets a cluster fold the observation into the pod
+                # that actually made (and will remake) this decision
                 service.observe(Observation(
-                    pair=d.pair, time_ms=prof_t * slowdown,
+                    pair=d.pair, uid=res.uid, time_ms=prof_t * slowdown,
                     energy_mwh=prof_e * slowdown))
 
     rng = np.random.default_rng(args.seed)
@@ -144,28 +165,76 @@ def main(argv=None):
                          max_new_tokens=args.max_new)
             for uid, plen in enumerate(plens)]
 
-    service = EcoreService(PoolPolicy(pool), backend_factory,
-                           max_wait_ms=args.max_wait_ms)
-    try:
-        if args.adapt:
-            # closed loop: route per request — each observation mutates the
-            # table the next decision must read
-            for req in reqs:
-                service.submit(req)
+    if args.use_async:
+        # asyncio facade: awaitable futures are the consumption plane
+        import asyncio
+
+        from repro.serving.aio import AsyncEcoreService
+
+        async def drive_async():
+            nonlocal service
+            service = AsyncEcoreService(PoolPolicy(pool), backend_factory,
+                                        max_wait_ms=args.max_wait_ms)
+            try:
+                if args.adapt:
+                    # closed loop, same cadence as the sync driver: fold
+                    # each batch's observations in as soon as it completes,
+                    # BEFORE later requests are routed
+                    pending = []
+                    for req in reqs:
+                        pending.append(service.submit_nowait(req))
+                        await asyncio.sleep(0)  # let inline flushes land
+                        done = [f for f in pending if f.done()]
+                        pending = [f for f in pending if not f.done()]
+                        handle([f.result() for f in done])
+                    await service.drain()
+                    handle(await asyncio.gather(*pending))
+                else:
+                    futs = service.submit_batch_nowait(reqs)
+                    await service.drain()   # flush partials -> all resolve
+                    handle(await asyncio.gather(*futs))
+                return service.stats()
+            finally:
+                await service.close()
+
+        service = None
+        stats = asyncio.run(drive_async())
+        plane = "async service"
+    elif args.pods > 1:
+        # sharded: each pod adapts its OWN copy of the profile
+        from repro.serving.cluster import EcoreCluster
+        service = EcoreCluster(
+            lambda i: PoolPolicy(ServingPool(table.copy(), delta=args.delta)),
+            backend_factory, pods=args.pods, shard=args.shard,
+            max_wait_ms=args.max_wait_ms)
+        plane = f"{args.pods}-pod cluster ({args.shard})"
+    else:
+        service = EcoreService(PoolPolicy(pool), backend_factory,
+                               max_wait_ms=args.max_wait_ms)
+        plane = "service"
+
+    if not args.use_async:
+        try:
+            if args.adapt:
+                # closed loop: route per request — each observation mutates
+                # the table the next decision must read
+                for req in reqs:
+                    service.submit(req)
+                    handle(service.results())
+            else:
+                # static profile: route the whole workload in one tensorized
+                # XLA call (per pod, under a cluster)
+                service.submit_batch(reqs)
                 handle(service.results())
-        else:
-            # static profile: route the whole workload in one tensorized
-            # XLA call
-            service.submit_batch(reqs)
-            handle(service.results())
-        handle(service.drain())
-        stats = service.stats()
-    finally:
-        service.close()
+            handle(service.drain())
+            stats = service.stats()
+        finally:
+            service.close()
 
     print(f"\n{args.requests} requests in {time.time()-t_start:.1f}s via "
           f"{stats['serve_calls']} serve_batch calls over "
-          f"{stats['backends']} backends (max_batch={args.max_batch}, "
+          f"{stats['backends']} backends [{plane}] "
+          f"(max_batch={args.max_batch}, "
           f"deadline_flushes={stats['deadline_flushes']}); "
           f"profiled totals: {totals['time_ms']:.1f}ms, "
           f"{totals['energy_mwh']:.3f}mWh "

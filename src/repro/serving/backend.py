@@ -1,0 +1,181 @@
+"""ExecutionBackend: ONE execution protocol for every workload.
+
+ECORE's premise is a single router in front of *heterogeneous*
+(model, device) pairs, so the execution layer must expose exactly one
+dispatch surface no matter what the backend computes.  A backend is
+anything with:
+
+  * ``name``        — identifies the (model, device/mesh) pair it serves
+  * ``max_batch``   — dispatch capacity per ``serve_batch`` call (the
+                      ``DispatchQueue`` batches up to this)
+  * ``serve_batch`` — consumes the queued form of ``RouteRequest``s
+                      (``engine.Request``: uid + payload in ``prompt`` +
+                      routed ``group``) and returns one ``engine.Result``
+                      per request
+  * ``profile_row`` — the offline-profile facts routing consumed to pick
+                      this backend (model, device, nominal cost columns)
+
+``EcoreService`` dispatches over any of them through its per-pair
+``DispatchQueue``s; a new workload implements this protocol (and registers
+a factory) instead of forking another serving loop.  Two faces ship here:
+
+  * the LLM ``engine.Backend`` (prefill+decode over a model config) —
+    registered as ``"llm"``
+  * ``DetectorBackend`` — the detection fleet face: runs a detector over a
+    batch of frames and charges the profiled edge-device cost (optionally
+    through a ``DriftingFleet``, using each request's ``uid`` as the fleet
+    timestep) — registered as ``"detector"``
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.serving.engine import Backend, Request, Result
+
+
+@runtime_checkable
+class ExecutionBackend(Protocol):
+    """The one execution surface every workload implements."""
+    name: str
+    #: dispatch capacity: DispatchQueue flushes at this batch size
+    max_batch: int
+
+    def serve_batch(self, requests: List[Request]) -> List[Result]: ...
+
+    def profile_row(self) -> Dict[str, object]: ...
+
+
+#: kind -> factory.  ``make_backend`` validates what the factory builds, so
+#: a registered workload cannot silently miss part of the protocol.
+_REGISTRY: Dict[str, Callable[..., ExecutionBackend]] = {}
+
+
+def register_backend(kind: str, factory: Optional[Callable] = None):
+    """Register a backend factory under ``kind`` (usable as a decorator)."""
+    def _register(f):
+        if kind in _REGISTRY and _REGISTRY[kind] is not f:
+            raise ValueError(f"backend kind {kind!r} is already registered")
+        _REGISTRY[kind] = f
+        return f
+    return _register(factory) if factory is not None else _register
+
+
+def backend_kinds() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def ensure_backend(obj) -> ExecutionBackend:
+    """Raise a TypeError naming every missing protocol member."""
+    missing = [m for m in ("name", "max_batch", "serve_batch", "profile_row")
+               if not hasattr(obj, m)]
+    if missing:
+        raise TypeError(
+            f"{type(obj).__name__} does not implement ExecutionBackend: "
+            f"missing {', '.join(missing)}")
+    return obj
+
+
+def make_backend(kind: str, *args, **kwargs) -> ExecutionBackend:
+    """Build a registered backend and validate it against the protocol."""
+    try:
+        factory = _REGISTRY[kind]
+    except KeyError:
+        raise KeyError(f"unknown backend kind {kind!r}; registered: "
+                       f"{backend_kinds()}") from None
+    return ensure_backend(factory(*args, **kwargs))
+
+
+register_backend("llm", Backend)
+
+
+def null_run(params, images) -> List[tuple]:
+    """Detector stub (real shapes, zero detections) for load benches and
+    examples that exercise routing/dispatch dynamics without trained
+    detectors — pass as ``DetectorBackend(run_fn=null_run)``."""
+    none = np.zeros((0, 4), np.float32)
+    return [(none, np.zeros(0, np.float32), np.zeros(0, np.int32))
+            for _ in range(len(images))]
+
+
+class DetectorBackend:
+    """One (detector model, edge device) pair behind the execution protocol.
+
+    Adapts the detection fleet (``detection/devices.py``) to
+    ``ExecutionBackend`` so the Gateway's per-frame traffic flows through
+    ``EcoreService``'s dispatch queues instead of a workload-private loop:
+    ``serve_batch`` stacks the queued frames, runs the detector ONCE for the
+    whole batch, and charges each request the profiled device cost — through
+    a ``DriftingFleet`` when one is given, with the request ``uid`` as the
+    fleet timestep (the Gateway numbers requests by stream position, so
+    fleet costs are identical no matter how dispatch batches or reorders).
+
+    ``run_fn`` defaults to the trained-detector path
+    (``detection.train.run_detector``); tests and benches inject stubs.
+    ``realtime_scale`` > 0 makes ``serve_batch`` occupy wall-clock time for
+    the modeled device latency (``scale`` seconds per modeled second) — the
+    cluster bench uses it to turn the analytic fleet into real concurrent
+    load."""
+
+    def __init__(self, model: str, device: str, params=None, *,
+                 max_batch: int = 1, fleet=None,
+                 run_fn: Optional[Callable] = None,
+                 realtime_scale: float = 0.0):
+        from repro.detection.detectors import DETECTOR_CONFIGS
+        from repro.detection.devices import DEVICES
+        self.name = f"{model}@{device}"
+        self.model = model
+        self.device = device
+        self.params = params
+        self.max_batch = max_batch
+        self.fleet = fleet
+        self.realtime_scale = realtime_scale
+        self._device = DEVICES[device]
+        self._flops = DETECTOR_CONFIGS[model].flops
+        if run_fn is None:
+            from repro.detection.train import run_detector
+            run_fn = run_detector
+        self._run = run_fn
+
+    def cost(self, step: int):
+        """(time_ms, energy_mwh) one request pays at fleet timestep ``step``
+        (the offline profile when no fleet is attached)."""
+        if self.fleet is not None:
+            return self.fleet.cost(self.device, self._flops, step)
+        return (self._device.time_ms(self._flops),
+                self._device.energy_mwh(self._flops))
+
+    def serve_batch(self, requests: List[Request]) -> List[Result]:
+        assert requests
+        imgs = np.stack([r.prompt for r in requests])
+        t0 = time.perf_counter()
+        detections = self._run(self.params, imgs)
+        wall_s = time.perf_counter() - t0
+        results = []
+        total_modeled_ms = 0.0
+        for r, dets in zip(requests, detections):
+            t_ms, e_mwh = self.cost(r.uid)
+            total_modeled_ms += t_ms
+            results.append(Result(
+                uid=r.uid, tokens=np.zeros(0, np.int32),
+                prefill_s=wall_s, decode_s=0.0, backend=self.name,
+                batch_size=len(requests), detections=dets,
+                time_ms=t_ms, energy_mwh=e_mwh))
+        if self.realtime_scale > 0.0:
+            # an edge device serves its batch sequentially: occupy the wall
+            # clock for the modeled busy time (scaled), so pods genuinely
+            # contend/overlap in cluster benches
+            time.sleep(total_modeled_ms / 1e3 * self.realtime_scale)
+        return results
+
+    def profile_row(self) -> Dict[str, object]:
+        t_ms, e_mwh = self.cost(0)
+        return {"kind": "detector", "model": self.model,
+                "device": self.device, "flops": self._flops,
+                "time_ms": t_ms, "energy_mwh": e_mwh,
+                "max_batch": self.max_batch}
+
+
+register_backend("detector", DetectorBackend)

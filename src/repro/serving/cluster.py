@@ -1,0 +1,344 @@
+"""EcoreCluster: N EcoreService pods behind ONE request plane.
+
+Scaling ECORE out means standing up many (policy + dispatch queues +
+backends) pods and sharding the request stream across them — the serving
+analog of the paper's multi-gateway deployment and AyE-Edge's
+deployment-space search.  The cluster owns:
+
+  * shard selection — a JITTED, tensorized step over the per-pod
+    queue-depth array (one XLA call assigns a whole batch), with an
+    exact-parity scalar reference (``select_pods_reference``) used on the
+    per-request path and in tests.  Two policies:
+
+      - ``least_loaded``: sequential greedy argmin over live depths
+        (a ``lax.scan`` — each assignment sees the depths the previous
+        ones produced, exactly like the scalar loop);
+      - ``rendezvous``: highest-random-weight hashing of (uid, pod) via a
+        splitmix-style 32-bit avalanche — stable request->pod affinity
+        that survives pod count changes with minimal reshuffling.
+
+  * observe() fan-in — an ``Observation`` carrying the request ``uid`` is
+    folded into the OWNING pod's policy (the pod whose decision produced
+    the measurement); without a uid it is a pair-wide signal and broadcasts
+    to every pod.
+
+  * per-pod ``stats()`` aggregation and concurrent ``drain``/``close``.
+
+Pods are fully independent (own policy, own queues, own backends, own
+lock), so ``submit_batch`` fans each pod's shard out on a small thread
+pool: pods serve concurrently — XLA releases the GIL during backend
+execution — which is where the multi-pod throughput scaling comes from
+(``benchmarks/run.py --only cluster``).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.policy import (Observation, RouteDecision, RouteRequest,
+                               RoutingPolicy)
+from repro.serving.service import EcoreService, Served
+
+SHARD_MODES = ("least_loaded", "rendezvous")
+
+#: bound on the uid -> owning-pod map (a long-lived cluster must not grow
+#: per-request state; observations normally arrive right after completion)
+OWNER_LIMIT = 8192
+
+
+# ------------------------------------------------------- shard selection
+
+def _mix32(x, xp):
+    """splitmix32-style avalanche on uint32 arrays; ``xp`` is numpy or
+    jax.numpy — SAME integer ops in both, so the jitted kernel and the
+    scalar reference agree bit for bit."""
+    x = x ^ (x >> 16)
+    x = x * xp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * xp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+_kernels = None
+
+
+def _shard_kernels():
+    global _kernels
+    if _kernels is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def rendezvous(uids_u32, pod_ids_u32):
+            # highest-random-weight: score every (request, pod), argmax rows
+            scores = _mix32(uids_u32[:, None] ^ _mix32(pod_ids_u32, jnp)[None, :],
+                            jnp)
+            return jnp.argmax(scores, axis=1)
+
+        @jax.jit
+        def least_loaded(uids_u32, depths_i32):
+            # sequential greedy: each pick sees the depths the previous
+            # picks produced (ties -> lowest pod index, like np.argmin)
+            def step(depth, _):
+                p = jnp.argmin(depth)
+                return depth.at[p].add(1), p
+            _, picks = jax.lax.scan(step, depths_i32, uids_u32)
+            return picks
+
+        _kernels = {"rendezvous": rendezvous, "least_loaded": least_loaded}
+    return _kernels
+
+
+def select_pods(uids: Sequence[int], depths: Sequence[int],
+                mode: str = "least_loaded") -> np.ndarray:
+    """Assign a batch of request uids to pods in ONE jitted XLA call.
+
+    ``depths`` is the live per-pod queue depth (least-loaded consumes it;
+    rendezvous ignores it).  Exactly matches ``select_pods_reference``
+    (tested): pure uint32/int32 arithmetic on both paths."""
+    if mode not in SHARD_MODES:
+        raise ValueError(f"unknown shard mode {mode!r}; one of {SHARD_MODES}")
+    import jax.numpy as jnp
+    uids_u32 = jnp.asarray(np.asarray(uids, np.uint32))
+    k = _shard_kernels()[mode]
+    if mode == "rendezvous":
+        pod_ids = jnp.asarray(np.arange(len(depths), dtype=np.uint32))
+        return np.asarray(k(uids_u32, pod_ids))
+    return np.asarray(k(uids_u32, jnp.asarray(np.asarray(depths, np.int32))))
+
+
+def select_pods_reference(uids: Sequence[int], depths: Sequence[int],
+                          mode: str = "least_loaded") -> np.ndarray:
+    """Scalar reference: one request at a time, plain numpy.  The jitted
+    ``select_pods`` must match this exactly."""
+    if mode not in SHARD_MODES:
+        raise ValueError(f"unknown shard mode {mode!r}; one of {SHARD_MODES}")
+    uids = list(uids)   # materialize ONCE: a generator must not be exhausted
+    depths = np.asarray(depths, np.int32).copy()
+    pod_ids = np.arange(len(depths), dtype=np.uint32)
+    picks = np.zeros(len(uids), np.int64)
+    for i, uid in enumerate(uids):
+        if mode == "least_loaded":
+            p = int(np.argmin(depths))
+            depths[p] += 1
+        else:
+            u = np.asarray([uid], np.uint32)  # arrays: silent uint32 wrap
+            p = int(np.argmax(_mix32(u ^ _mix32(pod_ids, np), np)))
+        picks[i] = p
+    return picks
+
+
+# --------------------------------------------------------------- cluster
+
+class EcoreCluster:
+    """Shard one request stream over N independent ``EcoreService`` pods.
+
+    ``policy_factory(pod_index)`` builds each pod's OWN policy (adaptive
+    state must not be shared — observations fold into the owning pod);
+    ``backend_factory`` is per-decision, as in ``EcoreService``.  Requests
+    need cluster-unique uids (the owner map and each pod's inflight check
+    key on them)."""
+
+    def __init__(self, policy_factory: Callable[[int], RoutingPolicy],
+                 backend_factory: Callable[[RouteDecision], object], *,
+                 pods: int = 2, shard: str = "least_loaded",
+                 max_wait_ms: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 retain_results: bool = True):
+        if pods < 1:
+            raise ValueError(f"pods={pods}: need at least one pod")
+        if shard not in SHARD_MODES:
+            raise ValueError(
+                f"unknown shard mode {shard!r}; one of {SHARD_MODES}")
+        self.shard = shard
+        self.pods: List[EcoreService] = [
+            EcoreService(policy_factory(i), backend_factory,
+                         max_wait_ms=max_wait_ms, clock=clock,
+                         retain_results=retain_results)
+            for i in range(pods)]
+        self._lock = threading.Lock()
+        #: live queue depth per pod (in-flight requests; shard input)
+        self._depth = np.zeros(pods, np.int64)
+        #: total requests ever assigned per pod (stats)
+        self.shard_counts = np.zeros(pods, np.int64)
+        self._owner: Dict[int, int] = {}
+        self._owner_order: collections.deque = collections.deque()
+        #: uid-keyed observations dropped because the owner was unknown
+        self.stale_observations = 0
+        self._exec = ThreadPoolExecutor(max_workers=pods,
+                                        thread_name_prefix="ecore-pod")
+        self._closed = False
+
+    # ------------------------------------------------------------ submit
+
+    def _assign(self, uids: Sequence[int], batched: bool) -> np.ndarray:
+        with self._lock:
+            picks = (select_pods if batched else select_pods_reference)(
+                uids, self._depth, self.shard)
+            np.add.at(self._depth, picks, 1)
+            np.add.at(self.shard_counts, picks, 1)
+            for uid, p in zip(uids, picks):
+                if uid not in self._owner:
+                    self._owner_order.append(uid)
+                self._owner[uid] = int(p)
+            while len(self._owner_order) > OWNER_LIMIT:
+                self._owner.pop(self._owner_order.popleft(), None)
+        return picks
+
+    def _release(self, pod: int) -> None:
+        with self._lock:
+            self._depth[pod] -= 1
+
+    def _watch(self, fut: "Future[Served]", pod: int) -> "Future[Served]":
+        fut.add_done_callback(lambda _f: self._release(pod))
+        return fut
+
+    def submit(self, req: RouteRequest) -> "Future[Served]":
+        """Shard one request (scalar reference path) and submit it to its
+        pod; the pod routes, queues and batches as usual.  If the pod's
+        submit raises (inline-flush backend error, routing error), the
+        request is un-counted from the depth accounting before the error
+        propagates — same invariant as ``submit_batch``'s error path."""
+        pod = int(self._assign([req.uid], batched=False)[0])
+        try:
+            fut = self.pods[pod].submit(req)
+        except Exception:
+            with self._lock:
+                self._depth[pod] -= 1
+            raise
+        return self._watch(fut, pod)
+
+    def submit_batch(self, reqs: Sequence[RouteRequest]
+                     ) -> List["Future[Served]"]:
+        """One jitted shard-selection call for the whole batch, then each
+        pod's shard is submitted CONCURRENTLY (thread pool) — pods route
+        and serve in parallel.  Futures return in request order.
+
+        Error semantics mirror ``EcoreService.submit_batch``: if a pod's
+        inline flush raises, the error re-raises here AFTER every healthy
+        pod's futures have their depth watchers attached and the failing
+        pod's shard is released from the depth accounting (its service
+        already failed the affected futures) — a blown backend must not
+        skew least-loaded sharding for the cluster's lifetime."""
+        reqs = list(reqs)
+        if not reqs:
+            return []
+        picks = self._assign([r.uid for r in reqs], batched=True)
+        shards: Dict[int, List[int]] = {}
+        for i, p in enumerate(picks):
+            shards.setdefault(int(p), []).append(i)
+        pending = {
+            pod: self._exec.submit(self.pods[pod].submit_batch,
+                                   [reqs[i] for i in idxs])
+            for pod, idxs in shards.items()}
+        out: List[Optional[Future]] = [None] * len(reqs)
+        first_exc = None
+        for pod, idxs in shards.items():
+            try:
+                futs = pending[pod].result()
+            except Exception as exc:
+                first_exc = first_exc or exc
+                # nothing watchable came back, so un-count the whole shard.
+                # This is an APPROXIMATION: requests the pod had already
+                # enqueued on healthy queues before the flush blew up are
+                # still in flight but no longer counted (they resolve at
+                # drain without a watcher, so no double-decrement) — depth
+                # errs toward routing TOWARD a blown pod until drain, never
+                # permanently away from it.
+                with self._lock:
+                    self._depth[pod] -= len(idxs)
+                continue
+            for i, fut in zip(idxs, futs):
+                out[i] = self._watch(fut, pod)
+        if first_exc is not None:
+            raise first_exc
+        return out  # type: ignore[return-value]
+
+    # ----------------------------------------------------------- observe
+
+    def observe(self, obs: Observation) -> None:
+        """Fold a measurement into the OWNING pod's policy (by ``obs.uid``);
+        an observation without a uid is pair-wide evidence and broadcasts
+        to every pod.  A uid-keyed observation whose owner is UNKNOWN
+        (evicted past ``OWNER_LIMIT``, or never routed here) is DROPPED and
+        counted in ``stats()["stale_observations"]`` — pod-specific
+        evidence must not be smeared across every pod's profile."""
+        if obs.uid is not None:
+            with self._lock:
+                pod = self._owner.get(obs.uid)
+                if pod is None:
+                    self.stale_observations += 1
+                    return
+            self.pods[pod].observe(obs)
+        else:
+            for p in self.pods:
+                p.observe(obs)
+
+    # ----------------------------------------------------------- results
+
+    def results(self) -> List[Served]:
+        out: List[Served] = []
+        for p in self.pods:
+            out += p.results()
+        return out
+
+    def drain(self) -> List[Served]:
+        """Drain every pod CONCURRENTLY; completions are merged.  The first
+        pod error re-raises after all pods finished draining."""
+        futs = [self._exec.submit(p.drain) for p in self.pods]
+        out: List[Served] = []
+        first_exc = None
+        for f in futs:
+            try:
+                out += f.result()
+            except Exception as exc:
+                first_exc = first_exc or exc
+        if first_exc is not None:
+            raise first_exc
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        first_exc = None
+        for f in [self._exec.submit(p.close) for p in self.pods]:
+            try:
+                f.result()
+            except Exception as exc:
+                first_exc = first_exc or exc
+        self._closed = True
+        self._exec.shutdown(wait=True)
+        if first_exc is not None:
+            raise first_exc
+
+    def __enter__(self) -> "EcoreCluster":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def wake(self) -> None:
+        for p in self.pods:
+            p.wake()
+
+    # ------------------------------------------------------------- stats
+
+    def stats(self) -> Dict:
+        per_pod = [p.stats() for p in self.pods]
+        return {
+            "pods": len(self.pods),
+            "shard_mode": self.shard,
+            "shard_counts": self.shard_counts.tolist(),
+            "backends": sum(s["backends"] for s in per_pod),
+            "serve_calls": sum(s["serve_calls"] for s in per_pod),
+            "served": sum(s["served"] for s in per_pod),
+            "deadline_flushes": sum(s["deadline_flushes"] for s in per_pod),
+            "stale_observations": self.stale_observations,
+            "per_pod": per_pod,
+        }

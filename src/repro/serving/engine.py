@@ -37,10 +37,19 @@ class Result:
     decode_s: float             # wall time of the WHOLE batch's decode
     backend: str
     batch_size: int = 1         # divide the times by this for per-request cost
+    # workload-specific extras (the detection face fills these; LLM serving
+    # leaves them None): per-request (boxes, scores, classes) plus the
+    # modeled device cost actually charged
+    detections: Optional[tuple] = None
+    time_ms: Optional[float] = None
+    energy_mwh: Optional[float] = None
 
 
 class Backend:
-    """One (model x placement) pair exposing an inference API."""
+    """One (model x placement) pair exposing an inference API.
+
+    Implements the ``ExecutionBackend`` protocol (serving/backend.py);
+    registered under kind ``"llm"``."""
 
     def __init__(self, name: str, cfg: ModelConfig, params=None, *,
                  max_batch: int = 8, max_seq: int = 256, seed: int = 0):
@@ -92,6 +101,11 @@ class Backend:
         return [Result(uid=r.uid, tokens=gen[i], prefill_s=t1 - t0,
                        decode_s=t2 - t1, backend=self.name, batch_size=b)
                 for i, r in enumerate(requests)]
+
+    def profile_row(self) -> Dict[str, object]:
+        return {"kind": "llm", "model": self.name,
+                "num_layers": self.cfg.num_layers, "d_model": self.cfg.d_model,
+                "max_batch": self.max_batch, "max_seq": self.max_seq}
 
 
 class DispatchQueue:

@@ -61,7 +61,8 @@ class EcoreService:
                  backend_factory: Callable[[RouteDecision], object], *,
                  max_wait_ms: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 retain_results: bool = True):
+                 retain_results: bool = True,
+                 buffer_errors: bool = True):
         self.policy = policy
         self.max_wait_ms = max_wait_ms
         self._factory = backend_factory
@@ -70,6 +71,12 @@ class EcoreService:
         # consumes futures should pass retain_results=False so a long-lived
         # service doesn't grow per-request state
         self._retain = retain_results
+        # flusher-thread backend errors re-raise at drain()/close() so a
+        # results()-driven driver can't lose a batch silently; a driver whose
+        # ONLY consumption plane is futures (AsyncEcoreService) passes
+        # buffer_errors=False — the futures already carry every error, and
+        # re-raising at close would double-report it
+        self._buffer_errors = buffer_errors
         self._cond = threading.Condition()
         #: one queue per ROUTED PAIR — the same model on two devices/meshes
         #: must not collapse onto one backend
@@ -282,4 +289,5 @@ class EcoreService:
                             # futures carry the backend error and drain()/
                             # close() re-raise it; the flusher must survive
                             # to serve the other queues
-                            self._errors.append(exc)
+                            if self._buffer_errors:
+                                self._errors.append(exc)

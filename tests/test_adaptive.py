@@ -348,6 +348,40 @@ def test_serve_adapt_observes_energy_scaled_by_slowdown(monkeypatch):
     assert max(energies) > min(energies) > 0
 
 
+def test_serve_async_adapt_closes_the_loop_between_submissions(monkeypatch):
+    """--async --adapt must interleave observations with routing (a batch's
+    measurements fold in BEFORE later requests are decided), not defer every
+    observe until the stream has been fully routed."""
+    from repro.launch import serve
+
+    events = []
+    real_observe = serve.ServingPool.observe
+    real_route = serve.ServingPool.route
+
+    def spy_observe(self, arch, **kw):
+        events.append("observe")
+        return real_observe(self, arch, **kw)
+
+    def spy_route(self, plen):
+        events.append("route")
+        return real_route(self, plen)
+
+    monkeypatch.setattr(serve.ServingPool, "observe", spy_observe)
+    monkeypatch.setattr(serve.ServingPool, "route", spy_route)
+    monkeypatch.setattr(
+        serve, "Backend",
+        lambda name, cfg, *, max_batch=8, max_seq=256, seed=0:
+        _StubBackend(name, max_batch))
+    assert serve.main(["--requests", "8", "--max-batch", "2",
+                       "--archs", "qwen2.5-3b",
+                       "--dryrun-artifact", "/nonexistent",
+                       "--adapt", "--async"]) == 0
+    assert "observe" in events
+    # closed loop: at least one observation lands before the final route
+    assert events.index("observe") < len(events) - 1 - \
+        events[::-1].index("route")
+
+
 def test_serve_batch_equivalent_to_single_requests():
     """Batched serve_batch returns the same tokens as serving each request
     alone (equal-length prompts: no padding divergence)."""

@@ -1,0 +1,227 @@
+"""AsyncEcoreService: awaitable serving over the same policies/queues.
+
+No pytest-asyncio in the container: each test drives a real event loop via
+``asyncio.run`` (marker ``asyncio`` groups them)."""
+import asyncio
+
+import numpy as np
+import pytest
+
+from repro.core.policy import Observation, PoolPolicy, RouteRequest
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.serving.aio import AsyncEcoreService
+from repro.serving.engine import Result
+from repro.serving.pool import LENGTH_BUCKETS, ServingPool
+from repro.serving.service import EcoreService
+
+
+def _pool(delta=5.0):
+    entries = [ProfileEntry(a, "pod", b, score - drop * b, 1.0, energy)
+               for a, score, drop, energy in (("small", 80.0, 3.0, 1.0),
+                                              ("big", 84.0, 1.0, 5.0))
+               for _, _, b in LENGTH_BUCKETS]
+    return ServingPool(ProfileTable(entries), delta=delta)
+
+
+class _StubBackend:
+    def __init__(self, name="stub", max_batch=4):
+        self.name = name
+        self.max_batch = max_batch
+        self.batch_sizes = []
+
+    def serve_batch(self, requests):
+        self.batch_sizes.append(len(requests))
+        return [Result(uid=r.uid, tokens=np.asarray([r.uid], np.int32),
+                       prefill_s=.01, decode_s=.01, backend=self.name,
+                       batch_size=len(requests)) for r in requests]
+
+    def profile_row(self):
+        return {"kind": "stub", "model": self.name,
+                "max_batch": self.max_batch}
+
+
+class _FailingBackend(_StubBackend):
+    def serve_batch(self, requests):
+        raise RuntimeError("backend exploded")
+
+
+class ManualClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+    def advance_ms(self, ms):
+        self.t += ms / 1e3
+
+
+def _req(uid, plen):
+    return RouteRequest(uid=uid, complexity=plen, payload=np.arange(8),
+                        max_new_tokens=4)
+
+
+# ---------------------------------------------------------------- parity
+
+@pytest.mark.asyncio
+def test_async_submit_await_parity_with_sync_submit():
+    """submit -> await must produce the same Served (same decisions, same
+    backend results) the sync service produces for the same stream."""
+    reqs = [_req(i, plen) for i, plen in enumerate(
+        [1, 100, 2049, 600_000, 64, 8193])]
+
+    sync_svc = EcoreService(PoolPolicy(_pool()),
+                            lambda d: _StubBackend(d.backend, 2))
+    with sync_svc:
+        sync_futs = [sync_svc.submit(r) for r in reqs]
+        sync_svc.drain()
+        want = [f.result() for f in sync_futs]
+
+    async def drive():
+        async with AsyncEcoreService(
+                PoolPolicy(_pool()),
+                lambda d: _StubBackend(d.backend, 2)) as svc:
+            futs = [svc.submit_nowait(r) for r in reqs]
+            await svc.drain()
+            return await asyncio.gather(*futs)
+
+    got = asyncio.run(drive())
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.request.uid == w.request.uid
+        assert g.decision.pair == w.decision.pair
+        assert g.decision.group == w.decision.group
+        assert g.result.backend == w.result.backend
+        assert g.result.batch_size == w.result.batch_size
+        np.testing.assert_array_equal(g.result.tokens, w.result.tokens)
+
+
+@pytest.mark.asyncio
+def test_async_submit_batch_is_one_decide_batch_call(monkeypatch):
+    scalar_decides = []
+    orig = PoolPolicy.decide
+    monkeypatch.setattr(PoolPolicy, "decide",
+                        lambda self, r: scalar_decides.append(r.uid)
+                        or orig(self, r))
+
+    async def drive():
+        async with AsyncEcoreService(
+                PoolPolicy(_pool()),
+                lambda d: _StubBackend(d.backend, 4)) as svc:
+            served = await svc.submit_batch([_req(i, 64) for i in range(4)])
+            return served, svc.stats()
+
+    served, stats = asyncio.run(drive())
+    assert [s.result.uid for s in served] == [0, 1, 2, 3]
+    assert scalar_decides == []            # tensorized path only
+    assert stats["serve_calls"] == 1
+
+
+# ----------------------------------------------------- deadline flush wakes
+
+@pytest.mark.asyncio
+@pytest.mark.threads
+def test_deadline_flush_wakes_awaiting_tasks():
+    """An await on a partial batch must resolve the moment the flusher
+    thread serves the deadline-expired batch — the bridge crosses the
+    thread boundary via call_soon_threadsafe, no polling anywhere."""
+    clock = ManualClock()
+    be = _StubBackend(max_batch=4)
+
+    async def drive():
+        svc = AsyncEcoreService(PoolPolicy(_pool()), lambda d: be,
+                                max_wait_ms=50.0, clock=clock)
+        try:
+            futs = [svc.submit_nowait(_req(i, 64)) for i in range(2)]
+            await asyncio.sleep(0)              # let any completions land
+            assert not any(f.done() for f in futs)   # 2/4, deadline pending
+            clock.advance_ms(50.1)              # oldest waited past 50 ms
+            svc.wake()
+            served = await asyncio.wait_for(asyncio.gather(*futs),
+                                            timeout=5.0)
+            assert [s.result.uid for s in served] == [0, 1]
+            assert be.batch_sizes == [2]        # ONE partial deadline flush
+            assert svc.deadline_flushes == 1
+        finally:
+            await svc.close()
+
+    asyncio.run(drive())
+
+
+# ------------------------------------------------------------ error plane
+
+@pytest.mark.asyncio
+@pytest.mark.threads
+def test_backend_error_fails_awaited_future_not_the_loop():
+    """A backend blowing up during a deadline flush must surface on exactly
+    the awaited futures of that batch; the loop, the flusher and the other
+    backends keep serving, and close() does not re-raise what the awaiter
+    already consumed."""
+    clock = ManualClock()
+
+    def factory(decision):
+        cls = _FailingBackend if decision.backend == "small" else _StubBackend
+        return cls(decision.backend, max_batch=4)
+
+    async def drive():
+        svc = AsyncEcoreService(PoolPolicy(_pool()), factory,
+                                max_wait_ms=50.0, clock=clock)
+        bad = svc.submit_nowait(_req(0, 64))          # -> failing 'small'
+        good = svc.submit_nowait(_req(1, 600_000))    # -> healthy 'big'
+        clock.advance_ms(51)
+        svc.wake()
+        with pytest.raises(RuntimeError, match="backend exploded"):
+            await asyncio.wait_for(bad, timeout=5.0)
+        served = await asyncio.wait_for(good, timeout=5.0)
+        assert served.result.uid == 1
+        # the loop survived: more work to the healthy backend still serves
+        fut2 = svc.submit_nowait(_req(2, 600_000))
+        clock.advance_ms(51)              # manual clock: arm the deadline
+        svc.wake()
+        again = await asyncio.wait_for(fut2, timeout=5.0)
+        assert again.result.uid == 2
+        await svc.close()      # buffer_errors=False: no double-report
+
+    asyncio.run(drive())
+
+
+@pytest.mark.asyncio
+def test_inline_flush_backend_error_comes_back_as_failed_future():
+    """The futures-only contract also covers the INLINE path: when a submit
+    fills the batch and the backend blows up during the inline flush, the
+    error must come back on the returned future — never as a synchronous
+    throw into the submitting coroutine."""
+    async def drive():
+        async with AsyncEcoreService(
+                PoolPolicy(_pool()),
+                lambda d: _FailingBackend(d.backend, max_batch=2)) as svc:
+            f0 = svc.submit_nowait(_req(0, 64))
+            f1 = svc.submit_nowait(_req(1, 64))   # fills batch -> inline boom
+            with pytest.raises(RuntimeError, match="backend exploded"):
+                await asyncio.wait_for(f1, timeout=5.0)
+            with pytest.raises(RuntimeError, match="backend exploded"):
+                await asyncio.wait_for(f0, timeout=5.0)
+
+    asyncio.run(drive())
+
+
+@pytest.mark.asyncio
+def test_async_observe_closes_the_loop():
+    entries = [ProfileEntry(a, "pod", b, 80.0, 1.0, energy)
+               for a, energy in (("small", 1.0), ("big", 5.0))
+               for _, _, b in LENGTH_BUCKETS]
+    pool = ServingPool(ProfileTable(entries), delta=5.0)
+
+    async def drive():
+        async with AsyncEcoreService(
+                PoolPolicy(pool, alpha=0.3),
+                lambda d: _StubBackend(d.backend, 1)) as svc:
+            first = await svc.submit(_req(0, 100))
+            assert first.decision.backend == "small"
+            for _ in range(30):    # 'small' measured far costlier
+                svc.observe(Observation(pair=("small", "pod"),
+                                        energy_mwh=50.0))
+            second = await svc.submit(_req(1, 100))
+            assert second.decision.backend == "big"
+
+    asyncio.run(drive())

@@ -1,0 +1,200 @@
+"""ExecutionBackend protocol + registry, DetectorBackend, and the
+cross-face guarantee: detection served through EcoreService's dispatch
+queues is stats-identical to the gateway's longhand stream loop."""
+import numpy as np
+import pytest
+
+from repro.core.energy import gateway_cost
+from repro.core.estimators import EdgeDetectionEstimator
+from repro.core.metrics import MAPAccumulator
+from repro.core.policy import DetectionPolicy, RouteRequest
+from repro.core.profiles import ProfileEntry, ProfileTable
+from repro.core.router import GreedyEstimateRouter, greedy_route
+from repro.detection import scenes as sc
+from repro.detection.devices import DEVICES, DriftingFleet, DriftEvent
+from repro.detection.detectors import DETECTOR_CONFIGS
+from repro.serving.backend import (DetectorBackend, ExecutionBackend,
+                                   backend_kinds, ensure_backend,
+                                   make_backend, register_backend)
+from repro.serving.engine import Request
+from repro.serving.service import EcoreService
+
+
+def _fake_run(params, images):
+    none = np.zeros((0, 4), np.float32)
+    return [(none, np.zeros(0, np.float32), np.zeros(0, np.int32))
+            for _ in range(len(images))]
+
+
+def _table():
+    rows = []
+    for g in range(5):  # cheap pair falls out of the feasible set as g grows
+        for m, d, mp in (("ssd_v1", "orin_nano", 60.0 - 3 * g),
+                         ("yolov8_n", "pi5", 60.0)):
+            flops = DETECTOR_CONFIGS[m].flops
+            rows.append(ProfileEntry(m, d, g, mp, DEVICES[d].time_ms(flops),
+                                     DEVICES[d].energy_mwh(flops)))
+    return ProfileTable(rows)
+
+
+# ------------------------------------------------------- protocol + registry
+
+def test_registry_has_both_faces():
+    assert {"llm", "detector"} <= set(backend_kinds())
+
+
+def test_make_backend_unknown_kind_is_a_clear_error():
+    with pytest.raises(KeyError, match="unknown backend kind"):
+        make_backend("nope")
+
+
+def test_register_backend_rejects_conflicting_kind():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("detector", lambda: None)
+
+
+def test_ensure_backend_names_every_missing_member():
+    class Half:
+        name = "h"
+        max_batch = 1
+    with pytest.raises(TypeError, match="serve_batch, profile_row"):
+        ensure_backend(Half())
+
+
+def test_detector_backend_implements_protocol():
+    be = make_backend("detector", "ssd_v1", "orin_nano", run_fn=_fake_run)
+    assert isinstance(be, ExecutionBackend)
+    row = be.profile_row()
+    assert row["model"] == "ssd_v1" and row["device"] == "orin_nano"
+    assert row["time_ms"] > 0 and row["energy_mwh"] > 0
+
+
+def test_detector_backend_charges_profiled_device_cost():
+    be = DetectorBackend("ssd_v1", "orin_nano", run_fn=_fake_run, max_batch=4)
+    flops = DETECTOR_CONFIGS["ssd_v1"].flops
+    frames = [Request(uid=i, prompt=np.zeros((8, 8), np.float32))
+              for i in range(3)]
+    results = be.serve_batch(frames)
+    assert [r.uid for r in results] == [0, 1, 2]
+    for r in results:
+        assert r.batch_size == 3 and r.backend == "ssd_v1@orin_nano"
+        assert r.time_ms == DEVICES["orin_nano"].time_ms(flops)
+        assert r.energy_mwh == DEVICES["orin_nano"].energy_mwh(flops)
+        boxes, scores, classes = r.detections
+        assert boxes.shape == (0, 4)
+
+
+def test_detector_backend_fleet_cost_keyed_on_request_uid():
+    """The request uid IS the fleet timestep, so drifted costs are
+    identical however dispatch batches or reorders the frames."""
+    fleet = DriftingFleet([DriftEvent("pi5", "dropout", start=2, end=3,
+                                      severity=10.0)])
+    be = DetectorBackend("yolov8_n", "pi5", fleet=fleet, run_fn=_fake_run,
+                         max_batch=8)
+    flops = DETECTOR_CONFIGS["yolov8_n"].flops
+    # uids 3,1,2 served in ONE batch, out of stream order
+    results = be.serve_batch([Request(uid=u, prompt=np.zeros((8, 8)))
+                              for u in (3, 1, 2)])
+    by_uid = {r.uid: r for r in results}
+    base = DEVICES["pi5"].time_ms(flops)
+    assert by_uid[1].time_ms == base
+    assert by_uid[3].time_ms == base
+    assert by_uid[2].time_ms == pytest.approx(10.0 * base)  # dropout step
+
+
+# -------------------------------------------------- cross-face parity test
+
+def _longhand_episode(scenes, table):
+    """The paper pipeline written out longhand (estimate -> route ->
+    dispatch -> account), straight off Fig. 3 — the pre-service loop."""
+    est = EdgeDetectionEstimator()
+    acc = MAPAccumulator(sc.NUM_CLASSES)
+    be_e = be_t = gw_e = gw_t = 0.0
+    hist = {}
+    for s in scenes:
+        count, est_flops = est.estimate(s.image)
+        gc = gateway_cost(est_flops)
+        gw_e += gc["energy_mwh"]
+        gw_t += gc["time_ms"]
+        m, d = greedy_route(int(count), table, 5.0).pair
+        hist[f"{m}@{d}"] = hist.get(f"{m}@{d}", 0) + 1
+        boxes, scores, classes = _fake_run(None, s.image[None])[0]
+        acc.add_image(boxes, scores, classes, s.boxes, s.classes)
+        flops = DETECTOR_CONFIGS[m].flops
+        be_t += DEVICES[d].time_ms(flops)
+        be_e += DEVICES[d].energy_mwh(flops)
+    return acc.map(), be_e, be_t, gw_e, gw_t, hist
+
+
+@pytest.mark.parametrize("max_batch", [1, 4])
+def test_detector_backend_via_service_matches_longhand_gateway(max_batch):
+    """Acceptance: a DetectorBackend dispatched through EcoreService's
+    queues (including genuinely BATCHED detector execution) produces stats
+    identical to the gateway's longhand stream loop — exact float equality,
+    same accumulation order."""
+    scenes = [sc.make_scene(np.random.default_rng(i), count=i % 6)
+              for i in range(24)]
+    ref_map, be_e, be_t, gw_e, gw_t, hist = _longhand_episode(
+        scenes, _table())
+
+    table = _table()
+    policy = DetectionPolicy(GreedyEstimateRouter(table, 5.0), table,
+                             EdgeDetectionEstimator())
+    service = EcoreService(
+        policy,
+        lambda d: DetectorBackend(d.pair[0], d.pair[1], None,
+                                  max_batch=max_batch, run_fn=_fake_run))
+    reqs = [RouteRequest(uid=i, payload=s.image, true_complexity=s.count)
+            for i, s in enumerate(scenes)]
+    with service:
+        service.submit_batch(reqs)
+        served = service.results() + service.drain()
+
+    acc = MAPAccumulator(sc.NUM_CLASSES)
+    got_be_e = got_be_t = got_gw_e = got_gw_t = 0.0
+    got_hist = {}
+    for s in sorted(served, key=lambda s: s.request.uid):
+        scene = scenes[s.request.uid]
+        boxes, scores, classes = s.result.detections
+        acc.add_image(boxes, scores, classes, scene.boxes, scene.classes)
+        got_be_e += s.result.energy_mwh
+        got_be_t += s.result.time_ms
+        got_gw_e += s.decision.gateway_energy_mwh
+        got_gw_t += s.decision.gateway_time_ms
+        got_hist[s.decision.pair_name] = got_hist.get(s.decision.pair_name,
+                                                      0) + 1
+    assert acc.map() == ref_map
+    assert got_be_e == be_e and got_be_t == be_t
+    assert got_gw_e == gw_e and got_gw_t == gw_t
+    assert got_hist == hist
+    if max_batch > 1:
+        # the dispatch queues actually batched detector execution
+        assert any(s.result.batch_size > 1 for s in served)
+
+
+def test_gateway_process_stream_is_service_backed(monkeypatch):
+    """No workload-private serving loop: the Gateway's stream must flow
+    through EcoreService dispatch (every detector launch happens inside a
+    DetectorBackend.serve_batch call)."""
+    from repro.core.gateway import Gateway
+    from repro.detection import train
+
+    monkeypatch.setattr(train, "run_detector", _fake_run)
+    calls = []
+    orig = DetectorBackend.serve_batch
+
+    def spy(self, requests):
+        calls.append(len(requests))
+        return orig(self, requests)
+
+    monkeypatch.setattr(DetectorBackend, "serve_batch", spy)
+    table = _table()
+    gw = Gateway(GreedyEstimateRouter(table, 5.0), table,
+                 {"ssd_v1": None, "yolov8_n": None},
+                 EdgeDetectionEstimator(), max_batch=4)
+    scenes = [sc.make_scene(np.random.default_rng(i), count=i % 6)
+              for i in range(12)]
+    stats = gw.process_stream(scenes)
+    assert sum(calls) == 12                  # every frame went through it
+    assert max(calls) > 1                    # and dispatch really batched
+    assert stats.map_pct >= 0

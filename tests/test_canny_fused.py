@@ -9,7 +9,8 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.kernels.canny_fused import ref
-from repro.kernels.canny_fused.canny_fused import HALO, canny_edge_pallas
+from repro.kernels.canny_fused.canny_fused import (HALO, MAX_WIDTH,
+                                                   canny_edge_pallas)
 from repro.kernels.canny_fused.ops import canny_edge
 
 pytestmark = pytest.mark.pallas
@@ -50,6 +51,17 @@ def test_tile_smaller_than_halo_is_an_error():
     with pytest.raises(ValueError, match="HALO"):
         canny_edge_pallas(_rand((1, 32, 32)), tile_rows=HALO - 1,
                           interpret=True)
+
+
+def test_frame_wider_than_column_limit_is_a_clear_error():
+    """The row-tiled kernel keeps whole rows in VMEM; frames wider than the
+    column limit must fail with a pointer at the ROADMAP's lane-tiling
+    item, not opaquely inside pallas_call."""
+    wide = jnp.zeros((1, 16, MAX_WIDTH + 128), jnp.float32)
+    with pytest.raises(ValueError, match="lane-dim \\(width\\) tiling"):
+        canny_edge_pallas(wide, tile_rows=16, interpret=True)
+    # the staged oracle remains the documented wide-frame fallback
+    assert np.asarray(canny_edge(wide, impl="xla")).shape == wide.shape
 
 
 def test_ops_dispatch():
