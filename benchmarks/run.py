@@ -505,10 +505,15 @@ def bench_pool_routing(quick=False):
 
 def bench_adaptive(quick=False):
     """Static profile vs closed-loop (EWMA-adapted) routing while a device
-    drifts.  Pure routing dynamics — nominal per-model mAPs stand in for
-    trained detectors so the bench isolates WHERE requests go, not how well
-    the detector draws boxes.  Regret = actual energy paid minus what an
-    oracle that always sees the true drifted costs would pay."""
+    drifts, and the SCANNED closed loop (one jitted lax.scan over
+    ProfileState) vs the scalar Python loop it replaces.  Pure routing
+    dynamics — nominal per-model mAPs stand in for trained detectors so the
+    bench isolates WHERE requests go, not how well the detector draws
+    boxes.  Regret = actual energy paid minus what an oracle that always
+    sees the true drifted costs would pay; the scanned loop must land on
+    the SAME decisions and regret as the scalar loop (drift-recovery
+    parity), only faster.  Appended to BENCH_gateway.json."""
+    from repro.core.closed_loop import measurements_from_fleet, scan_stream
     from repro.core.router import feasible_for_count, greedy_route
     from repro.detection.detectors import DETECTOR_CONFIGS
     from repro.detection.devices import drift_scenario, nominal_profile_table
@@ -531,8 +536,10 @@ def bench_adaptive(quick=False):
     def episode(adapt: bool):
         table = base_table()
         energy = time_ms = 0.0
+        picks = []
         for t, count in enumerate(counts):
             e = greedy_route(int(count), table, delta)
+            picks.append(e.pair)
             flops = DETECTOR_CONFIGS[e.model].flops
             t_ms, e_mwh = fleet.cost(e.device, flops, t)
             energy += e_mwh
@@ -540,7 +547,7 @@ def bench_adaptive(quick=False):
             if adapt:
                 table.observe_pair(e.pair, time_ms=t_ms, energy_mwh=e_mwh,
                                    alpha=alpha)
-        return energy, time_ms
+        return energy, time_ms, picks
 
     def oracle_episode():
         table = base_table()  # mAP feasibility unaffected by drift
@@ -555,19 +562,59 @@ def bench_adaptive(quick=False):
             time_ms += t_ms
         return energy, time_ms
 
-    e_static, t_static = episode(adapt=False)
-    e_adapt, t_adapt = episode(adapt=True)
+    e_static, t_static, _ = episode(adapt=False)
+    t0 = time.perf_counter()
+    e_adapt, t_adapt, scalar_picks = episode(adapt=True)
+    scalar_s = time.perf_counter() - t0
     e_oracle, t_oracle = oracle_episode()
+
+    # scanned closed loop: precompute the decision-independent per-step,
+    # per-pair drifted costs, then run estimate->route->observe as ONE
+    # jitted lax.scan over the ProfileState pytree.  The timed region is
+    # END-TO-END (measurement precompute + scan) — what Gateway(adapt=True)
+    # actually pays per episode — with one warm pass to exclude the
+    # one-time jit compile.
+    arrays = base_table().as_arrays()
+
+    def scanned_episode():
+        meas = measurements_from_fleet(arrays.pairs, steps, fleet)
+        return meas, scan_stream(arrays.state, counts, meas, arrays=arrays,
+                                 delta=delta, alpha=alpha)[1]
+    scanned_episode()  # warm the jit
+    t0 = time.perf_counter()
+    meas, trace = scanned_episode()
+    scanned_s = time.perf_counter() - t0
+    e_scan = float(meas.energy_mwh[np.arange(steps), trace.pair_idx].sum())
+    t_scan = float(meas.time_ms[np.arange(steps), trace.pair_idx].sum())
+    decisions_match = [arrays.pairs[j] for j in trace.pair_idx] == scalar_picks
+
     print("policy,total_energy_mwh,total_time_ms,energy_regret_mwh")
     rows = {}
     for name, (e, t) in (("static", (e_static, t_static)),
                          ("closed_loop", (e_adapt, t_adapt)),
+                         ("scanned_closed_loop", (e_scan, t_scan)),
                          ("oracle", (e_oracle, t_oracle))):
         rows[name] = {"energy_mwh": e, "time_ms": t,
                       "energy_regret_mwh": e - e_oracle}
         print(f"{name},{e:.4f},{t:.1f},{e - e_oracle:.4f}")
     saved = 1 - (e_adapt - e_oracle) / max(e_static - e_oracle, 1e-12)
     print(f"closed_loop_regret_reduction: {100 * saved:.1f}%")
+    print("loop,impl,requests_per_s")
+    print(f"closed_loop,scalar_python,{steps / scalar_s:.0f}")
+    print(f"closed_loop,scanned_lax_scan,{steps / scanned_s:.0f}")
+    print(f"scanned_decisions_match_scalar,{decisions_match}")
+    print(f"scanned_regret_matches_scalar,"
+          f"{np.isclose(e_scan, e_adapt, rtol=1e-5)}")
+    rows["throughput"] = {
+        "steps": steps,
+        "scalar_requests_per_s": steps / scalar_s,
+        "scanned_requests_per_s": steps / scanned_s,
+        "speedup": scalar_s / scanned_s,
+        "decisions_match_scalar": decisions_match,
+        "regret_matches_scalar": bool(np.isclose(e_scan, e_adapt,
+                                                 rtol=1e-5)),
+    }
+    _append_gateway_bench({"adaptive": rows})
     _save("adaptive", rows)
     return rows
 

@@ -1,11 +1,15 @@
-"""ECORE core: profiling table, routing algorithms, estimators, gateway."""
+"""ECORE core: profile state/table, routing algorithms, estimators,
+the fused closed loop, gateway."""
 from .groups import DEFAULT_GROUP_RULES, group_of
-from .profiles import ProfileArrays, ProfileEntry, ProfileTable
+from .profiles import (ProfileArrays, ProfileEntry, ProfileState,
+                       ProfileTable, observe_state)
 from .router import (BASELINE_ROUTERS, GreedyEstimateRouter,
                      HighestMAPPerGroupRouter, HighestMAPRouter,
                      LowestEnergyRouter, LowestInferenceRouter, OracleRouter,
-                     RandomRouter, RoundRobinRouter, feasible_for_count,
-                     feasible_set, greedy_route, pareto_front, route_batch)
+                     RandomRouter, RoundRobinRouter, decide_state,
+                     feasible_for_count, feasible_set, greedy_route,
+                     pareto_front, route_batch)
+from .closed_loop import ScanDecisions, StreamMeasurements, scan_stream
 from .estimators import (EdgeDetectionEstimator, OracleEstimator,
                          OutputBasedEstimator, SSDFrontEndEstimator)
 from .policy import (DetectionPolicy, Observation, PoolPolicy, RouteDecision,

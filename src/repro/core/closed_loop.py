@@ -1,0 +1,188 @@
+"""The fused closed loop: estimate->route->observe as ONE jitted lax.scan.
+
+The repo's adaptive path was its last scalar-Python hot loop: under
+``adapt=True`` every frame ran a Python ``greedy_route`` followed by a
+Python ``ProfileTable.observe_pair`` dict mutation, because each observation
+changes the table the NEXT decision reads — a loop-carried dependency the
+open-loop batched router could not express.  ``ProfileState`` removes the
+obstacle: profile state is a pytree VALUE, so the whole sequential loop
+compiles to one ``lax.scan`` XLA program whose carry is the state —
+``decide_state`` (Algorithm-1 masked argmin) then ``observe_state`` (EWMA
+fold) per step, with zero host round-trips between frames.
+
+The contract that makes this possible: per-step measurements must be
+DECISION-INDEPENDENT.  A ``DriftingFleet``'s cost at step t depends only on
+(device, step), never on which pair was routed, so the caller precomputes
+``measurements[t, j]`` — what pair j WOULD have cost at step t — and the
+scan gathers the routed pair's column.  (Measured per-frame mAP is
+decision-dependent — the served detector draws the boxes — which is exactly
+why ``adapt_map`` stays on the scalar path.)
+
+Exact parity with the scalar loop is the design invariant, not an
+aspiration: same routed pairs, same EWMA folds in the same order
+(``tests/test_closed_loop.py`` asserts decision equality and
+``assert_allclose`` on the final state against ``DetectionPolicy``'s scalar
+loop under drift; the only divergence is f32-vs-float64 rounding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from .groups import DEFAULT_GROUP_RULES, group_of
+from .profiles import ProfileArrays, ProfileState, observe_state
+from .router import decide_state, rules_arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamMeasurements:
+    """Decision-independent per-step, per-pair runtime measurements.
+
+    ``time_ms``/``energy_mwh`` are [T, n_pairs] float arrays aligned to the
+    snapshot's ``pairs`` order: row t holds what EACH pair would have
+    measured serving step t (a drifting fleet's cost is a function of
+    (device, step) only).  ``map_pct`` is optional ([T, n_pairs] or None);
+    NaN cells mean "no measurement" — the scan's observe skips them.
+    """
+    time_ms: np.ndarray
+    energy_mwh: np.ndarray
+    map_pct: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanDecisions:
+    """One closed-loop scan's routing trace, mapped back to table identity:
+    ``pair_idx[t]`` indexes the snapshot's ``pairs``, ``group_row[t]`` the
+    state rows, ``entry_idx[t]`` the table's ``entries`` (-1 when an
+    explored pair has no row for that step's group), ``explored[t]`` marks
+    round-robin exploration overrides."""
+    pair_idx: np.ndarray    # [T] int32 into arrays.pairs
+    group_row: np.ndarray   # [T] int32 state row
+    entry_idx: np.ndarray   # [T] int32 into table.entries; -1 = no row
+    explored: np.ndarray    # [T] bool
+
+
+def measurements_from_fleet(pairs, n_steps: int,
+                            fleet=None) -> StreamMeasurements:
+    """THE builder of the scan's measurement matrices — the one place the
+    decision-independence contract is turned into arrays.
+
+    For each (model, device) pair, the cost at step t is
+    ``fleet.cost(device, model_flops, t)`` (vectorized via
+    ``DriftingFleet.cost_profile``) — a function of (device, step) only,
+    exactly what ``DetectorBackend`` charges request uid t however dispatch
+    batches.  Without a fleet, measurements equal the offline device model
+    (adaptation is a fixed point, like the scalar loop).  ``pairs`` must be
+    the snapshot's ``arrays.pairs`` order.  Gateway, benches and tests all
+    build through here, so the matrices cannot silently drift apart.
+    """
+    import numpy as np
+    from repro.detection.detectors import DETECTOR_CONFIGS  # lazy: keeps
+    from repro.detection.devices import DEVICES              # core importable
+    t = np.empty((n_steps, len(pairs)))
+    e = np.empty((n_steps, len(pairs)))
+    for j, (model, device) in enumerate(pairs):
+        flops = DETECTOR_CONFIGS[model].flops
+        if fleet is not None:
+            t[:, j], e[:, j] = fleet.cost_profile(device, flops, n_steps)
+        else:
+            t[:, j] = DEVICES[device].time_ms(flops)
+            e[:, j] = DEVICES[device].energy_mwh(flops)
+    return StreamMeasurements(time_ms=t, energy_mwh=e)
+
+
+_scan_kernel = None
+
+
+def _scan_jit():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def kernel(state, counts, t_meas, e_meas, m_meas, explore,
+               lo, hi, rule_rows, col_of_pair, delta, alpha):
+        def step(st, xs):
+            count, t_row, e_row, m_row, expl = xs
+            g, col, _ = decide_state(st, count, delta, lo, hi, rule_rows)
+            pair = st.pair_id[g, col]
+            # round-robin exploration override (expl = -1: router's pick);
+            # the explored pair's column within this group row maps the
+            # decision back to an entry (-1 when the pair has no row here)
+            pair = jnp.where(expl >= 0, expl, pair)
+            col = jnp.where(expl >= 0, col_of_pair[g, pair], col)
+            st = observe_state(st, pair, g,
+                               time_ms=t_row[pair], energy_mwh=e_row[pair],
+                               map_pct=m_row[pair], alpha=alpha)
+            return st, (g, col, pair)
+        return jax.lax.scan(step, state,
+                            (counts, t_meas, e_meas, m_meas, explore))
+
+    return kernel
+
+
+def scan_stream(state: ProfileState, counts, measurements: StreamMeasurements,
+                *, arrays: ProfileArrays, delta: float, alpha: float = 0.1,
+                group_rules: Sequence = DEFAULT_GROUP_RULES,
+                explore_pairs=None) -> Tuple[ProfileState, ScanDecisions]:
+    """Run estimate->route->observe for a whole frame sequence inside one
+    jitted ``lax.scan``; returns the final state and the routing trace.
+
+    Per step t: Algorithm 1 routes ``counts[t]`` against the CURRENT state
+    (``decide_state``), the routed pair's decision-independent measurement
+    ``measurements[t, pair]`` is gathered, and ``observe_state`` EWMA-folds
+    it before step t+1 decides — bit-for-bit the scalar closed loop's
+    order of operations, minus T Python iterations and T dict mutations.
+
+    ``arrays`` is the snapshot ``state`` was exported from (identity:
+    ``row_of`` for the group rules, ``pairs``/``col_of_pair``/
+    ``entry_index`` to map the trace back).  ``explore_pairs`` (optional
+    [T] int32, -1 = no override) serves step t on that pair index instead
+    of the router's pick — the deterministic round-robin schedule
+    ``DetectionPolicy`` uses for post-transient recovery.
+
+    Raises the scalar path's ``ValueError`` when any count lands in an
+    unprofiled group (checked eagerly — a jitted program cannot raise).
+    """
+    import jax.numpy as jnp
+    global _scan_kernel
+    if _scan_kernel is None:
+        _scan_kernel = _scan_jit()
+    counts = np.asarray(counts, np.int32)
+    T = len(counts)
+    for c in counts:
+        group = group_of(int(c), group_rules)
+        if group not in arrays.row_of:
+            raise ValueError(
+                f"no profile rows for group {group} (table covers groups "
+                f"{sorted(arrays.groups)}); profile every group the router "
+                f"can be asked for")
+    n_pairs = len(arrays.pairs)
+    t_meas = np.asarray(measurements.time_ms, np.float32)
+    e_meas = np.asarray(measurements.energy_mwh, np.float32)
+    m_meas = (np.full((T, n_pairs), np.nan, np.float32)
+              if measurements.map_pct is None
+              else np.asarray(measurements.map_pct, np.float32))
+    for name, arr in (("time_ms", t_meas), ("energy_mwh", e_meas),
+                      ("map_pct", m_meas)):
+        if arr.shape != (T, n_pairs):
+            raise ValueError(
+                f"measurements.{name} has shape {arr.shape}, expected "
+                f"({T}, {n_pairs}) — one row per step, one column per "
+                f"profiled pair in arrays.pairs order")
+    explore = (np.full(T, -1, np.int32) if explore_pairs is None
+               else np.asarray(explore_pairs, np.int32))
+    lo, hi, rule_rows = rules_arrays(group_rules, arrays.row_of)
+    state, (g, col, pair) = _scan_kernel(
+        state, jnp.asarray(counts), jnp.asarray(t_meas), jnp.asarray(e_meas),
+        jnp.asarray(m_meas), jnp.asarray(explore), jnp.asarray(lo),
+        jnp.asarray(hi), jnp.asarray(rule_rows),
+        jnp.asarray(arrays.col_of_pair), jnp.float32(delta),
+        jnp.float32(alpha))
+    g, col, pair = np.asarray(g), np.asarray(col), np.asarray(pair)
+    entry_idx = np.where(col >= 0, arrays.entry_index[g, np.maximum(col, 0)],
+                         -1).astype(np.int32)
+    return state, ScanDecisions(pair_idx=pair, group_row=g,
+                                entry_idx=entry_idx,
+                                explored=np.asarray(explore) >= 0)

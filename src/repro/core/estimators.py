@@ -35,6 +35,13 @@ class Estimator:
     def observe(self, detected_count: int) -> None:
         """Feedback from the backend's detection result (used by OB)."""
 
+    def observe_batch(self, detected_counts) -> None:
+        """Fold a whole stream's backend feedback in completion order.  The
+        generic fallback loops ``observe``; estimators whose fold telescopes
+        (OB keeps only the LAST count) override with one assignment."""
+        for c in detected_counts:
+            self.observe(int(c))
+
     def reset(self) -> None:
         pass
 
@@ -92,6 +99,11 @@ class OutputBasedEstimator(Estimator):
 
     def observe(self, detected_count: int) -> None:
         self._last = int(detected_count)
+
+    def observe_batch(self, detected_counts) -> None:
+        # the EWMA-free fold telescopes: only the last count survives
+        if len(detected_counts):
+            self._last = int(detected_counts[-1])
 
     def reset(self) -> None:
         self._last = None

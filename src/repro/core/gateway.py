@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.core.closed_loop import measurements_from_fleet
 from repro.core.estimators import Estimator
 from repro.core.metrics import MAPAccumulator
 from repro.core.policy import DetectionPolicy, Observation, RouteRequest
@@ -72,9 +73,21 @@ class Gateway:
     one XLA routing call) and the per-pair dispatch queues batch detector
     execution up to ``max_batch`` frames per launch — decisions and stats
     are identical to the scalar path (tested).  Set ``batch_routing=False``
-    to force the scalar path.  The closed loop (``adapt``, feedback
-    estimators) always serves one request at a time, since each observation
-    changes the table the next decision reads.
+    to force the scalar path.
+
+    Scanned closed loop: when the policy is ``scannable`` (adapt on, greedy
+    routing, batchable/oracle estimator, no ``adapt_map``), the per-frame
+    estimate->route->observe dependency chain runs as ONE jitted
+    ``lax.scan`` over the profile's ``ProfileState``
+    (``DetectionPolicy.decide_scan``): the fleet's drifted costs are
+    decision-independent, so the gateway precomputes every pair's would-be
+    measurement per step and the scan gathers + EWMA-folds the routed
+    pair's column between decisions.  Decisions, adapted profile and
+    EpisodeStats are identical to the scalar closed loop (tested), and
+    dispatch batches detector execution up to ``max_batch`` — the closed
+    loop no longer forces frame-at-a-time serving.  Feedback estimators
+    (OB) and ``adapt_map`` still serve one request at a time, since their
+    inputs depend on each frame's served result.
 
     mAP closed loop: ``adapt_map=True`` (requires ``adapt=True``) folds each
     request's MEASURED per-frame detection quality back into the served
@@ -100,8 +113,8 @@ class Gateway:
                                       batch_routing=batch_routing)
         self.params = detector_params
         self.fleet = fleet
-        #: frames per detector launch on the open-loop batched path (the
-        #: closed loop always serves frame-at-a-time); 1 = bit-exact with
+        #: frames per detector launch on the batched paths (open-loop
+        #: decide_batch and the scanned closed loop); 1 = bit-exact with
         #: per-frame execution
         self.max_batch = max_batch
 
@@ -153,19 +166,30 @@ class Gateway:
         reqs = [RouteRequest(uid=i, payload=s.image, true_complexity=s.count)
                 for i, s in enumerate(scenes)]
         batchable = self.policy.batchable
-        # the closed loop serves frame-at-a-time: each observation mutates
-        # the table the next decision must read
-        max_batch = self.max_batch if batchable else 1
+        scannable = not batchable and self.policy.scannable
+        # the remaining scalar closed loops (OB feedback, adapt_map) serve
+        # frame-at-a-time: each observation mutates the table the next
+        # decision must read
+        max_batch = self.max_batch if (batchable or scannable) else 1
 
         def factory(decision):
             model, device = decision.pair
             return self._DetectorBackend(model, device, self.params[model],
                                          max_batch=max_batch,
-                                         fleet=self.fleet, run_fn=self._run)
+                                         fleet=self.fleet, run_fn=self._run,
+                                         table=self.table)
 
-        def handle(service, served_batch):
+        # does the estimator CONSUME backend feedback?  Today's scannable
+        # estimators (ED/SF/oracle/None) all inherit the no-op observe, so
+        # the scanned path skips computing per-frame detected counts
+        wants_feedback = (self.estimator is not None
+                          and type(self.estimator).observe
+                          is not Estimator.observe)
+
+        def handle(service, served_batch, folded=False):
             # uid order = stream order: accumulation is identical to the
             # longhand per-frame loop however the dispatch queues batched
+            detected = []
             for served in sorted(served_batch, key=lambda s: s.request.uid):
                 d, res = served.decision, served.result
                 scene = scenes[served.request.uid]
@@ -177,6 +201,13 @@ class Gateway:
                               scene.classes)
                 totals["be_e"] += res.energy_mwh
                 totals["be_t"] += res.time_ms
+                if folded:
+                    # the scan already EWMA-folded every cost observation;
+                    # backend-detected counts only matter to an estimator
+                    # that actually consumes feedback
+                    if wants_feedback:
+                        detected.append(int((scores >= 0.5).sum()))
+                    continue
                 obs = Observation(pair=d.pair, uid=served.request.uid)
                 if self.adapt:
                     if self.adapt_map:
@@ -191,6 +222,8 @@ class Gateway:
                     obs.detected_count = int((scores >= 0.5).sum())
                 if not obs.empty:
                     service.observe(obs)
+            if folded and detected and self.estimator is not None:
+                self.estimator.observe_batch(detected)
 
         service = self._EcoreService(self.policy, factory)
         try:
@@ -200,6 +233,18 @@ class Gateway:
                 # observations to completion order is semantics-preserving
                 service.submit_batch(reqs)
                 handle(service, service.results() + service.drain())
+            elif scannable and reqs:
+                # closed loop as ONE jitted lax.scan: decisions and EWMA
+                # folds happen inside decide_scan, so dispatch receives
+                # pre-routed requests and batches execution freely; the
+                # fleet's per-step costs are decision-independent, which is
+                # what lets them be precomputed
+                measurements = measurements_from_fleet(
+                    self.table.as_arrays().pairs, len(reqs), self.fleet)
+                decisions = self.policy.decide_scan(reqs, measurements)
+                service.submit_batch(reqs, decisions=decisions)
+                handle(service, service.results() + service.drain(),
+                       folded=True)
             else:
                 for req in reqs:
                     # max_batch=1: the request is served inline, so the

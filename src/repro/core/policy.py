@@ -31,6 +31,7 @@ from typing import Any, List, Optional, Protocol, Sequence, Tuple, runtime_check
 
 import numpy as np
 
+from .closed_loop import StreamMeasurements, scan_stream
 from .energy import gateway_cost
 from .estimators import Estimator, OracleEstimator
 from .groups import DEFAULT_GROUP_RULES, group_of
@@ -159,6 +160,90 @@ class DetectionPolicy:
         return (self.batch_routing and not self.adapt
                 and self.estimator is not None and self.estimator.batchable
                 and self.router.batchable)
+
+    @property
+    def scannable(self) -> bool:
+        """True when the CLOSED loop can run as one jitted ``lax.scan``
+        (``decide_scan``): adapt on, the router's decision rule is the
+        tensorized Algorithm-1 argmin (``batchable`` routers), the counts
+        are computable up front (batchable/oracle/no estimator — OB's
+        feedback counts depend on each frame's served result), and no
+        quality feedback (measured mAP depends on which detector served the
+        frame, so ``adapt_map`` is decision-dependent and stays scalar)."""
+        return (self.batch_routing and self.adapt and not self.adapt_map
+                and self.router.batchable
+                and (self.estimator is None or self.estimator.batchable
+                     or isinstance(self.estimator, OracleEstimator)))
+
+    def _scan_inputs(self, reqs: Sequence[RouteRequest]):
+        """(est_counts, routing_counts, gateway_flops) for ``decide_scan``
+        — the estimate stage, hoisted out of the loop: one batched device
+        launch (or a ground-truth passthrough) for the whole stream."""
+        if self.estimator is None:
+            est = None
+            flops = np.zeros(len(reqs))
+        elif isinstance(self.estimator, OracleEstimator):
+            est = np.asarray([int(r.true_complexity) for r in reqs])
+            flops = np.zeros(len(reqs))
+        else:
+            images = np.stack([r.payload for r in reqs])
+            est, flops = self.estimator.estimate_batch(images)
+        if self.router.uses_ground_truth:
+            routing = np.asarray([int(r.true_complexity) for r in reqs])
+        elif est is None:
+            # no estimator: the scalar route sees estimated_count=None -> 0
+            routing = np.zeros(len(reqs), np.int32)
+        else:
+            routing = np.asarray([int(c or 0) for c in est])
+        return est, routing, flops
+
+    def decide_scan(self, reqs: Sequence[RouteRequest],
+                    measurements: StreamMeasurements
+                    ) -> List[RouteDecision]:
+        """The closed-loop fast path: decide AND observe a whole stream in
+        one jitted ``lax.scan`` over the profile's ``ProfileState``.
+
+        ``measurements`` carries the decision-independent per-step, per-pair
+        runtime signals (``closed_loop.StreamMeasurements``, columns in
+        ``table.pairs()`` order); each step's routed column is gathered and
+        EWMA-folded before the next step decides — the exact scalar
+        ``decide``/``observe`` interleaving, compiled.  The final state is
+        folded back into the table (``load_state``), so subsequent scalar
+        decisions and ``profile_row`` reads see the adapted values.  The
+        round-robin exploration schedule (``explore_every``) is precomputed
+        — it depends only on the step counter — and honored inside the scan.
+        """
+        reqs = list(reqs)
+        if not self.scannable:
+            raise ValueError("decide_scan requires a scannable policy "
+                             "(adapt=True, batchable router/estimator, "
+                             "no adapt_map)")
+        if not reqs:
+            return []
+        est, routing, flops = self._scan_inputs(reqs)
+        arrays = self.table.as_arrays()
+        T, E = len(reqs), self.explore_every
+        explore = np.full(T, -1, np.int32)
+        if E:
+            steps = self._step + np.arange(T)
+            fire = steps % E == E - 1
+            explore[fire] = (steps[fire] // E) % len(arrays.pairs)
+        self._step += T
+        state, trace = scan_stream(
+            arrays.state, routing, measurements, arrays=arrays,
+            delta=self.router.delta, alpha=self.alpha,
+            group_rules=self.rules, explore_pairs=explore)
+        self.table.load_state(state)
+        out = []
+        for t, req in enumerate(reqs):
+            gc = gateway_cost(float(flops[t]))
+            out.append(RouteDecision(
+                uid=req.uid, pair=arrays.pairs[trace.pair_idx[t]],
+                est_complexity=None if est is None else int(est[t]),
+                gateway_time_ms=gc["time_ms"],
+                gateway_energy_mwh=gc["energy_mwh"],
+                explored=bool(trace.explored[t])))
+        return out
 
     @property
     def rules(self):

@@ -1,14 +1,28 @@
-"""Offline profiling table: the data structure Algorithm 1 consumes.
+"""Profile plane: ProfileState (the canonical device-resident arrays) and
+ProfileTable (the Python-facing facade Algorithm 1's scalar faces consume).
 
 Each row profiles one (model, device) pair for one object-count group:
 mAP (per group — accuracy depends on scene complexity), inference time and
 energy (group-independent in the paper's testbed, replicated per group).
+
+Ownership is inverted relative to the seed: the adaptation plane's state of
+record is ``ProfileState`` — an immutable pytree of padded per-group jnp
+arrays that PURE functions thread (``observe_state`` EWMA-folds a runtime
+measurement and returns a NEW state; ``core.router.decide_state`` is the
+jit-safe Algorithm-1 argmin over it; ``core.closed_loop.scan_stream`` runs
+the whole estimate->route->observe loop inside one ``lax.scan``).
+``ProfileTable`` remains as the compatibility facade every scalar face
+(greedy_route, Weighted/Pareto, the serving pool, json io) keeps using:
+``as_state()`` exports the pytree, ``load_state()`` folds an updated pytree
+back into the entries, and the mutating ``observe``/``observe_pair`` methods
+are the scalar mirrors of ``observe_state``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (Dict, Iterable, List, NamedTuple, Optional, Sequence,
+                    Tuple)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,27 +43,99 @@ class ProfileEntry:
         return f"{self.model}@{self.device}"
 
 
+class ProfileState(NamedTuple):
+    """The adaptation plane's device-resident state: one [G, P] array per
+    profile column, padded to the widest group (pads carry -inf mAP /
+    +inf cost, ``valid=False``, ``pair_id=-1``).
+
+    A NamedTuple of jnp arrays is a pytree, so a ProfileState flows through
+    ``jax.jit``/``lax.scan`` unchanged: jitted programs THREAD it as a value
+    instead of mutating a Python object.  Within a row, entries keep the
+    originating table's order, so a masked argmin breaks ties exactly like
+    the scalar ``min`` over ``for_group``.  ``pair_id[g, p]`` indexes the
+    table's ``pairs()`` list — the mask ``observe_state`` uses to update
+    every group row of one (model, device) pair at once.
+
+    Static identity (group labels, entry names, the entry_index map back
+    into ``ProfileTable.entries``) lives on the ``ProfileArrays`` snapshot,
+    NOT here: state is pure numbers, metadata never enters the jit.
+    """
+    map_pct: object      # jnp [G, P] f32
+    time_ms: object      # jnp [G, P] f32
+    energy_mwh: object   # jnp [G, P] f32
+    valid: object        # jnp [G, P] bool
+    pair_id: object      # jnp [G, P] int32; -1 on pads
+
+
+def observe_state(state: ProfileState, pair_idx, group_row, *,
+                  time_ms=None, energy_mwh=None, map_pct=None,
+                  alpha=0.1) -> ProfileState:
+    """Pure EWMA fold of one runtime measurement — the jit/scan-safe mirror
+    of ``ProfileTable.observe_pair`` + ``observe``.
+
+    Latency/energy are group-independent (the table replicates them per
+    group), so they update EVERY row of ``pair_idx``; measured quality is
+    per-group, so ``map_pct`` only touches the (``group_row``, pair) cell.
+    Any measurement may be None (skipped statically) or NaN (skipped inside
+    the jit — the traced no-measurement sentinel ``scan_stream`` relies on).
+    """
+    import jax
+    import jax.numpy as jnp
+    pair_mask = state.pair_id == jnp.int32(pair_idx)
+    rows = jax.lax.broadcasted_iota(jnp.int32, state.map_pct.shape, 0)
+    cell_mask = pair_mask & (rows == jnp.int32(group_row))
+
+    def fold(old, new, mask):
+        if new is None:
+            return old
+        new = jnp.float32(new)
+        upd = (1.0 - alpha) * old + alpha * new
+        return jnp.where(mask & ~jnp.isnan(new), upd, old)
+
+    return state._replace(
+        time_ms=fold(state.time_ms, time_ms, pair_mask),
+        energy_mwh=fold(state.energy_mwh, energy_mwh, pair_mask),
+        map_pct=fold(state.map_pct, map_pct, cell_mask))
+
+
 @dataclasses.dataclass(frozen=True)
 class ProfileArrays:
-    """Array-backed view of a ProfileTable for tensorized routing.
+    """Snapshot view binding a ``ProfileState`` to one table's identity.
 
-    One row per group, padded to the widest group: within a row, entries
-    keep the TABLE's order (so a masked argmin breaks ties exactly like the
-    scalar ``min`` over ``for_group``).  Pads carry -inf mAP / +inf cost and
-    ``valid=False``.  ``entry_index[g, p]`` maps back into
-    ``ProfileTable.entries``; ``row_of`` maps a group label to its row.
+    ``state`` holds the numbers; this object holds what jitted code must
+    never see: group labels, the ``row_of`` group->row map, ``pairs`` (the
+    ``pair_id`` index space, in ``ProfileTable.pairs()`` order),
+    ``col_of_pair[g, j]`` (the column of pair j inside group row g; -1 when
+    the pair has no row for that group) and ``entry_index[g, p]`` back into
+    ``ProfileTable.entries``.
 
     Snapshot semantics: built for one table ``version`` and cached until an
     ``observe`` bumps it (see ``ProfileTable.as_arrays``).
     """
     groups: Tuple[int, ...]
     row_of: Dict[int, int]
-    map_pct: object      # jnp [G, P] f32
-    energy_mwh: object   # jnp [G, P] f32
-    time_ms: object      # jnp [G, P] f32
-    valid: object        # jnp [G, P] bool
+    pairs: Tuple[Tuple[str, str], ...]
+    state: ProfileState
     entry_index: object  # np  [G, P] int32
+    col_of_pair: object  # np  [G, n_pairs] int32; -1 = pair absent in group
     version: int
+
+    # compat: the seed exposed the columns directly on the snapshot
+    @property
+    def map_pct(self):
+        return self.state.map_pct
+
+    @property
+    def energy_mwh(self):
+        return self.state.energy_mwh
+
+    @property
+    def time_ms(self):
+        return self.state.time_ms
+
+    @property
+    def valid(self):
+        return self.state.valid
 
 
 class ProfileTable:
@@ -57,7 +143,7 @@ class ProfileTable:
         self.entries: List[ProfileEntry] = list(entries)
         if not self.entries:
             raise ValueError("empty profiling table")
-        #: bumped on every observe(); invalidates the as_arrays() cache
+        #: bumped on every observe()/load_state(); invalidates as_arrays()
         self.version = 0
         self._arrays: Optional[ProfileArrays] = None
 
@@ -83,14 +169,17 @@ class ProfileTable:
         return sum(rows) / len(rows)
 
     def as_arrays(self) -> ProfileArrays:
-        """Padded per-group arrays for the tensorized router (cached; rebuilt
-        lazily after an ``observe`` bumps ``version``)."""
+        """Padded per-group snapshot for the tensorized faces (cached;
+        rebuilt lazily after an ``observe``/``load_state`` bumps
+        ``version``)."""
         if self._arrays is not None and self._arrays.version == self.version:
             return self._arrays
         import numpy as np
         import jax.numpy as jnp
         groups = sorted({e.group for e in self.entries})
         row_of = {g: i for i, g in enumerate(groups)}
+        pairs = tuple(self.pairs())
+        pair_col = {p: j for j, p in enumerate(pairs)}
         per_row = [[i for i, e in enumerate(self.entries) if e.group == g]
                    for g in groups]
         G, P = len(groups), max(len(r) for r in per_row)
@@ -98,7 +187,9 @@ class ProfileTable:
         energy = np.full((G, P), np.inf, np.float32)
         time_ms = np.full((G, P), np.inf, np.float32)
         valid = np.zeros((G, P), bool)
+        pair_id = np.full((G, P), -1, np.int32)
         entry_index = np.zeros((G, P), np.int32)
+        col_of_pair = np.full((G, len(pairs)), -1, np.int32)
         for r, idxs in enumerate(per_row):
             for p, i in enumerate(idxs):
                 e = self.entries[i]
@@ -106,13 +197,58 @@ class ProfileTable:
                 energy[r, p] = e.energy_mwh
                 time_ms[r, p] = e.time_ms
                 valid[r, p] = True
+                pair_id[r, p] = pair_col[e.pair]
                 entry_index[r, p] = i
+                col_of_pair[r, pair_col[e.pair]] = p
+        state = ProfileState(
+            map_pct=jnp.asarray(map_pct), time_ms=jnp.asarray(time_ms),
+            energy_mwh=jnp.asarray(energy), valid=jnp.asarray(valid),
+            pair_id=jnp.asarray(pair_id))
         self._arrays = ProfileArrays(
-            groups=tuple(groups), row_of=row_of,
-            map_pct=jnp.asarray(map_pct), energy_mwh=jnp.asarray(energy),
-            time_ms=jnp.asarray(time_ms), valid=jnp.asarray(valid),
-            entry_index=entry_index, version=self.version)
+            groups=tuple(groups), row_of=row_of, pairs=pairs, state=state,
+            entry_index=entry_index, col_of_pair=col_of_pair,
+            version=self.version)
         return self._arrays
+
+    # ------------------------------------------------ state plane round trip
+
+    def as_state(self) -> ProfileState:
+        """Export the device-resident pytree (see ``as_arrays`` for the
+        snapshot carrying its identity metadata)."""
+        return self.as_arrays().state
+
+    def load_state(self, state: ProfileState) -> None:
+        """Fold a (scan-updated) ``ProfileState`` back into the entries.
+
+        The state must have been derived from THIS table at its current
+        version (``as_state`` -> jitted updates -> ``load_state``): the
+        cell->entry mapping is the snapshot's ``entry_index``.  Bumps
+        ``version`` so every cached view rebuilds from the folded values.
+        """
+        import numpy as np
+        arrays = self.as_arrays()
+        if np.asarray(state.valid).shape != arrays.entry_index.shape:
+            raise ValueError(
+                f"state shape {np.asarray(state.valid).shape} does not match "
+                f"this table's layout {arrays.entry_index.shape}; load_state "
+                f"expects a state derived from this table's as_state()")
+        m = np.asarray(state.map_pct)
+        t = np.asarray(state.time_ms)
+        e = np.asarray(state.energy_mwh)
+        valid = np.asarray(arrays.state.valid)
+        for g, p in zip(*np.nonzero(valid)):
+            i = int(arrays.entry_index[g, p])
+            self.entries[i] = dataclasses.replace(
+                self.entries[i], map_pct=float(m[g, p]),
+                time_ms=float(t[g, p]), energy_mwh=float(e[g, p]))
+        self.version += 1
+
+    def with_state(self, state: ProfileState) -> "ProfileTable":
+        """Independent table with ``state``'s values folded in — the
+        non-mutating half of the state<->table round trip."""
+        out = ProfileTable(self.entries)
+        out.load_state(state)
+        return out
 
     # ----------------------------------------------------- dynamic profiling
     def observe(self, pair: Tuple[str, str], group: int, *,
@@ -122,7 +258,8 @@ class ProfileTable:
                 alpha: float = 0.1) -> None:
         """BEYOND-PAPER (paper §6 future work): EWMA-update a profile row
         from runtime observations, so the router tracks drift (thermal
-        throttling, background load, battery state)."""
+        throttling, background load, battery state).  Scalar mirror of the
+        ``map_pct`` leg of ``observe_state``."""
         import dataclasses as _dc
         for i, e in enumerate(self.entries):
             if e.pair == pair and e.group == group:
@@ -149,7 +286,8 @@ class ProfileTable:
         table replicates them per group), so a runtime measurement taken
         while serving one group is evidence for all of them — updating only
         the observed group's row would leave the others stale and let the
-        router keep picking a drifted backend for other groups."""
+        router keep picking a drifted backend for other groups.  Scalar
+        mirror of the latency/energy leg of ``observe_state``."""
         groups = [e.group for e in self.entries if e.pair == pair]
         if not groups:
             raise KeyError(pair)

@@ -19,7 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .groups import DEFAULT_GROUP_RULES, group_of
-from .profiles import ProfileEntry, ProfileTable
+from .profiles import ProfileArrays, ProfileEntry, ProfileState, ProfileTable
 
 Pair = Tuple[str, str]
 
@@ -71,32 +71,53 @@ def greedy_route(number_of_objects: int, profiling_data: ProfileTable,
 
 # ------------------------------------------------------- tensorized routing
 
-def _route_batch_jit():
-    """Build (once) the jitted Algorithm-1-over-arrays kernel.
+def decide_state(state: ProfileState, count, delta, lo, hi, rule_rows):
+    """Algorithm 1 for ONE count against a ``ProfileState`` — pure and
+    jit/scan-safe, the routing step ``core.closed_loop.scan_stream`` folds
+    into its ``lax.scan`` body (and, vmapped, the whole ``route_batch``
+    kernel).
 
-    Lines 1-7 become a vectorized rule lookup, lines 8-13 a per-row max +
-    threshold mask, lines 14-15 a masked argmin — one XLA call for the whole
-    batch instead of B Python loops.  Returns (group_row, pick, ok): the
-    arrays row each count landed in (-1 = unprofiled group), the argmin
-    column, and whether the feasible set was non-empty.
+    ``lo``/``hi``/``rule_rows`` are the group rules in array form (see
+    ``rules_arrays``).  Returns ``(group_row, col, ok)``: the state row the
+    count landed in (-1 = unprofiled group), the masked-argmin column
+    (lines 14-15; ties break like the scalar ``min`` because rows keep
+    table order), and whether the feasible set was non-empty.
     """
-    import jax
     import jax.numpy as jnp
+    m = (count >= lo) & (count <= hi)                       # lines 1-7
+    rule = jnp.where(m.any(), jnp.argmax(m), lo.shape[0] - 1)
+    g = rule_rows[rule]                                     # lines 8-9
+    g_safe = jnp.maximum(g, 0)
+    gm = state.map_pct[g_safe]                              # [P]
+    max_map = jnp.max(gm)                                   # line 10 (pads=-inf)
+    feasible = state.valid[g_safe] & (gm >= max_map - delta)  # lines 11-13
+    e = jnp.where(feasible, state.energy_mwh[g_safe], jnp.inf)
+    col = jnp.argmin(e)                                     # lines 14-15
+    return g, col, feasible.any()
+
+
+def rules_arrays(group_rules: Sequence, row_of) -> Tuple[np.ndarray, ...]:
+    """Group rules as (lo, hi, rule_rows) int32 arrays for the jitted faces
+    (``decide_state``, ``route_batch``, ``scan_stream``)."""
+    lo = np.asarray([r[0] for r in group_rules], np.int32)
+    hi = np.asarray([r[1] if r[1] is not None else np.iinfo(np.int32).max
+                     for r in group_rules], np.int32)
+    rule_rows = np.asarray([row_of.get(label, -1)
+                            for _, _, label in group_rules], np.int32)
+    return lo, hi, rule_rows
+
+
+def _route_batch_jit():
+    """Build (once) the jitted Algorithm-1-over-state kernel: one
+    ``decide_state`` vmapped over the batch — one XLA call for the whole
+    batch instead of B Python loops."""
+    import jax
 
     @jax.jit
-    def kernel(counts, lo, hi, rule_rows, map_pct, energy, valid, delta):
-        c = counts[:, None]
-        m = (c >= lo[None, :]) & (c <= hi[None, :])         # lines 1-7
-        rule = jnp.where(m.any(axis=1), jnp.argmax(m, axis=1),
-                         lo.shape[0] - 1)                   # group_of fallback
-        g = rule_rows[rule]                                 # lines 8-9
-        g_safe = jnp.maximum(g, 0)
-        gm = map_pct[g_safe]                                # [B, P]
-        max_map = jnp.max(gm, axis=1, keepdims=True)        # line 10 (pads=-inf)
-        feasible = valid[g_safe] & (gm >= max_map - delta)  # lines 11-13
-        e = jnp.where(feasible, energy[g_safe], jnp.inf)
-        pick = jnp.argmin(e, axis=1)                        # lines 14-15
-        return g, pick, feasible.any(axis=1)
+    def kernel(state, counts, lo, hi, rule_rows, delta):
+        return jax.vmap(
+            lambda c: decide_state(state, c, delta, lo, hi, rule_rows)
+        )(counts)
 
     return kernel
 
@@ -104,17 +125,19 @@ def _route_batch_jit():
 _route_batch_kernel = None
 
 
-def route_batch(counts, profiling_data: ProfileTable, delta_map: float,
+def route_batch(counts, profiling_data, delta_map: float,
                 group_rules: Sequence = DEFAULT_GROUP_RULES) -> np.ndarray:
     """Algorithm 1 lines 1-15 over a whole batch of counts in one XLA call.
 
-    Returns indices into ``profiling_data.entries`` — one per count, exactly
-    the entry scalar ``greedy_route`` would pick (ties break identically:
-    arrays keep table order and argmin takes the first minimum; property-
-    tested in tests/test_batched_routing.py).  The comparisons run in f32,
-    so mAP/energy values that only differ beyond f32 precision could in
-    principle diverge from the float64 scalar path — real profiles are far
-    coarser than that.
+    ``profiling_data`` is either a ``ProfileTable`` or a ``ProfileArrays``
+    snapshot (the state face): both resolve to the same ``ProfileState``
+    the kernel consumes.  Returns indices into the table's ``entries`` —
+    one per count, exactly the entry scalar ``greedy_route`` would pick
+    (ties break identically: state rows keep table order and argmin takes
+    the first minimum; property-tested in tests/test_batched_routing.py).
+    The comparisons run in f32, so mAP/energy values that only differ
+    beyond f32 precision could in principle diverge from the float64 scalar
+    path — real profiles are far coarser than that.
 
     Raises the same ``ValueError`` as the scalar path when any count lands
     in an unprofiled group.
@@ -123,21 +146,17 @@ def route_batch(counts, profiling_data: ProfileTable, delta_map: float,
     global _route_batch_kernel
     if _route_batch_kernel is None:
         _route_batch_kernel = _route_batch_jit()
-    arrays = profiling_data.as_arrays()
-    lo = np.asarray([r[0] for r in group_rules], np.int32)
-    hi = np.asarray([r[1] if r[1] is not None else np.iinfo(np.int32).max
-                     for r in group_rules], np.int32)
-    rule_rows = np.asarray([arrays.row_of.get(label, -1)
-                            for _, _, label in group_rules], np.int32)
+    arrays = (profiling_data if isinstance(profiling_data, ProfileArrays)
+              else profiling_data.as_arrays())
+    lo, hi, rule_rows = rules_arrays(group_rules, arrays.row_of)
     counts = np.asarray(counts, np.int32)
     g, pick, ok = _route_batch_kernel(
-        jnp.asarray(counts), jnp.asarray(lo), jnp.asarray(hi),
-        jnp.asarray(rule_rows), arrays.map_pct, arrays.energy_mwh,
-        arrays.valid, jnp.float32(delta_map))
+        arrays.state, jnp.asarray(counts), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(rule_rows), jnp.float32(delta_map))
     g, pick, ok = np.asarray(g), np.asarray(pick), np.asarray(ok)
     if (bad := ~(ok & (g >= 0))).any():
         group = group_of(int(counts[np.argmax(bad)]), group_rules)
-        known = sorted({e.group for e in profiling_data.entries})
+        known = sorted(arrays.groups)
         raise ValueError(
             f"no profile rows for group {group} (table covers groups "
             f"{known}); profile every group the router can be asked for")

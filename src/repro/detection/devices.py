@@ -122,6 +122,27 @@ class DriftEvent:
             return self.severity
         raise ValueError(f"unknown drift kind {self.kind!r}")
 
+    def multipliers(self, steps: int):
+        """``multiplier(t)`` for every t in [0, steps) in one shot — the
+        vectorized face the scanned closed loop's measurement precompute
+        uses (exact-parity with the scalar method, tested)."""
+        import numpy as np
+        t = np.arange(steps)
+        if self.kind == "thermal":
+            frac = np.minimum((t - self.start) / max(self.ramp, 1), 1.0)
+            m = 1.0 + (self.severity - 1.0) * frac
+        elif self.kind == "background":
+            phase = ((t - self.start) % self.period) / self.period
+            m = np.where(phase < 0.5, self.severity, 1.0)
+        elif self.kind == "dropout":
+            m = np.full(steps, self.severity)
+        else:
+            raise ValueError(f"unknown drift kind {self.kind!r}")
+        active = t >= self.start
+        if self.end is not None:
+            active &= t < self.end
+        return np.where(active, m, 1.0)
+
 
 class DriftingFleet:
     """Time-varying device fleet: actual per-request cost at step t is the
@@ -145,6 +166,18 @@ class DriftingFleet:
         in busy time, so both scale by the same multiplier."""
         dev = self.devices[device]
         m = self.multiplier(device, step)
+        return dev.time_ms(flops) * m, dev.energy_mwh(flops) * m
+
+    def cost_profile(self, device: str, flops: float, steps: int):
+        """``cost(device, flops, t)`` for every t in [0, steps) as two [T]
+        arrays — the vectorized precompute for the scanned closed loop
+        (one numpy pass instead of T Python calls per pair)."""
+        import numpy as np
+        m = np.ones(steps)
+        for ev in self.events:
+            if ev.device == device:
+                m = m * ev.multipliers(steps)
+        dev = self.devices[device]
         return dev.time_ms(flops) * m, dev.energy_mwh(flops) * m
 
 

@@ -10,11 +10,18 @@ def canny_edge(img, lo: float = 0.6, hi: float = 1.0, *,
                impl: str = "auto", tile_rows: int | None = None):
     """img [B,H,W] f32 -> edge map [B,H,W] bool.
 
-    impl: 'auto' (pallas on TPU, xla oracle elsewhere) | 'xla' |
-    'pallas' (TPU megakernel) | 'interpret' (CPU parity check).
+    impl: 'auto' (pallas on TPU, xla oracle elsewhere; frames wider than
+    the row-tiled kernel's ``MAX_WIDTH`` column limit fall back to the xla
+    oracle) | 'xla' | 'pallas' (TPU megakernel; fails fast on wide frames)
+    | 'interpret' (CPU parity check).
     """
     if impl == "auto":
+        from .canny_fused import MAX_WIDTH
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+        if img.shape[-1] > MAX_WIDTH:
+            # auto picks the implementation that can serve the frame;
+            # explicit impl='pallas' keeps the fail-fast ValueError
+            impl = "xla"
     if impl == "xla":
         return ref.canny_edge(img, lo, hi)
     from .canny_fused import canny_edge_pallas

@@ -30,6 +30,12 @@ profile claims.
 (each with its OWN PoolPolicy over a copy of the profile, so ``--adapt``
 observations fold into the owning pod); ``--async`` drives a single pod
 through the ``AsyncEcoreService`` asyncio facade instead of the sync API.
+
+``--profile-out PATH`` persists the (possibly EWMA-adapted) routing profile
+as json after the run — the same ``ProfileTable`` facade the
+``ProfileState`` scan plane round-trips through, so a warm profile from one
+session seeds the next (``pool_table_from_dryrun`` -> adapt -> json ->
+``ProfileTable.from_json``).
 """
 from __future__ import annotations
 
@@ -96,6 +102,12 @@ def main(argv=None):
     ap.add_argument("--async", dest="use_async", action="store_true",
                     help="drive one pod through the AsyncEcoreService "
                          "asyncio facade (incompatible with --pods > 1)")
+    ap.add_argument("--profile-out", default=None,
+                    help="write the routing profile (with any --adapt "
+                         "updates folded in) to this json path after the "
+                         "run, to warm-start a later session; under "
+                         "--pods each pod adapts a PRIVATE copy, so the "
+                         "shared source profile is written unadapted")
     args = ap.parse_args(argv)
     if args.use_async and args.pods > 1:
         ap.error("--async drives a single pod; use --pods 1 with it")
@@ -231,6 +243,9 @@ def main(argv=None):
         finally:
             service.close()
 
+    if args.profile_out:
+        pool.table.to_json(args.profile_out)
+        print(f"wrote adapted routing profile to {args.profile_out}")
     print(f"\n{args.requests} requests in {time.time()-t_start:.1f}s via "
           f"{stats['serve_calls']} serve_batch calls over "
           f"{stats['backends']} backends [{plane}] "

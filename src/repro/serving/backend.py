@@ -117,12 +117,16 @@ class DetectorBackend:
     ``realtime_scale`` > 0 makes ``serve_batch`` occupy wall-clock time for
     the modeled device latency (``scale`` seconds per modeled second) — the
     cluster bench uses it to turn the analytic fleet into real concurrent
-    load."""
+    load.  ``table`` (optional) is the routing profile this backend was
+    picked from: ``profile_row`` then reports the LIVE adapted cost columns
+    (what routing actually consults — kept fresh by ``observe``/the scanned
+    closed loop's ``ProfileState`` folds) instead of the static device
+    model."""
 
     def __init__(self, model: str, device: str, params=None, *,
                  max_batch: int = 1, fleet=None,
                  run_fn: Optional[Callable] = None,
-                 realtime_scale: float = 0.0):
+                 realtime_scale: float = 0.0, table=None):
         from repro.detection.detectors import DETECTOR_CONFIGS
         from repro.detection.devices import DEVICES
         self.name = f"{model}@{device}"
@@ -132,6 +136,7 @@ class DetectorBackend:
         self.max_batch = max_batch
         self.fleet = fleet
         self.realtime_scale = realtime_scale
+        self.table = table
         self._device = DEVICES[device]
         self._flops = DETECTOR_CONFIGS[model].flops
         if run_fn is None:
@@ -171,7 +176,15 @@ class DetectorBackend:
         return results
 
     def profile_row(self) -> Dict[str, object]:
-        t_ms, e_mwh = self.cost(0)
+        # prefer the LIVE adapted row (latency/energy are group-replicated,
+        # so any group row of the pair carries the pair-wide EWMA value)
+        entry = None if self.table is None else next(
+            (e for e in self.table.entries
+             if e.pair == (self.model, self.device)), None)
+        if entry is not None:
+            t_ms, e_mwh = entry.time_ms, entry.energy_mwh
+        else:
+            t_ms, e_mwh = self.cost(0)
         return {"kind": "detector", "model": self.model,
                 "device": self.device, "flops": self._flops,
                 "time_ms": t_ms, "energy_mwh": e_mwh,

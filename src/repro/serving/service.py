@@ -13,7 +13,10 @@ Maps the paper's Fig. 3 pipeline onto four typed stages:
                     that resolves when the request's batch flushes;
   observe           ``observe(Observation)`` is the single feedback plane:
                     measured latency/energy/quality EWMA-fold into the
-                    policy's profile table, closing the routing loop.
+                    policy's profile (the ``ProfileState``-backed table
+                    facade), closing the routing loop.  The scanned closed
+                    loop folds its observations inside ``decide_scan``
+                    instead and hands ``submit_batch`` pre-routed decisions.
 
 Flushing is genuinely async: a background flusher thread watches the oldest
 pending request of every queue and serves a PARTIAL batch the moment its
@@ -112,13 +115,25 @@ class EcoreService:
             self._cond.notify_all()   # new deadline for the flusher
             return fut
 
-    def submit_batch(self, reqs: Sequence[RouteRequest]
+    def submit_batch(self, reqs: Sequence[RouteRequest],
+                     decisions: Optional[Sequence[RouteDecision]] = None
                      ) -> List["Future[Served]"]:
         """Route a whole workload in one ``decide_batch`` call (one XLA
-        launch for batchable policies) and enqueue every request."""
+        launch for batchable policies) and enqueue every request.
+
+        ``decisions`` (optional, one per request) enqueues PRE-ROUTED
+        requests instead: the scanned closed loop decides — and folds its
+        observations — inside one jitted ``lax.scan``
+        (``DetectionPolicy.decide_scan``), so the service must dispatch
+        exactly those decisions rather than re-deciding against the
+        already-updated profile."""
         with self._cond:
             self._ensure_open()
-            decisions = self.policy.decide_batch(list(reqs))
+            if decisions is None:
+                decisions = self.policy.decide_batch(list(reqs))
+            elif len(decisions) != len(reqs):
+                raise ValueError(
+                    f"{len(decisions)} decisions for {len(reqs)} requests")
             futs = [self._enqueue(r, d) for r, d in zip(reqs, decisions)]
             self._cond.notify_all()
             return futs

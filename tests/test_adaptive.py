@@ -382,6 +382,38 @@ def test_serve_async_adapt_closes_the_loop_between_submissions(monkeypatch):
         events[::-1].index("route")
 
 
+def test_serve_profile_out_persists_adapted_profile(monkeypatch, tmp_path):
+    """--profile-out writes the (adapted) routing profile as json, and the
+    written file round-trips through ProfileTable.from_json."""
+    from repro.core.profiles import ProfileTable
+    from repro.launch import serve
+
+    class SlowingBackend(_StubBackend):
+        def serve_batch(self, requests):
+            results = super().serve_batch(requests)
+            slow = 0.005 * len(self.batch_sizes)
+            return [Result(uid=r.uid, tokens=r.tokens, prefill_s=slow,
+                           decode_s=0.01, backend=r.backend,
+                           batch_size=r.batch_size) for r in results]
+
+    monkeypatch.setattr(
+        serve, "Backend",
+        lambda name, cfg, *, max_batch=8, max_seq=256, seed=0:
+        SlowingBackend(name, max_batch))
+    out = str(tmp_path / "profile.json")
+    assert serve.main(["--requests", "8", "--max-batch", "2",
+                       "--archs", "qwen2.5-3b",
+                       "--dryrun-artifact", "/nonexistent",
+                       "--adapt", "--profile-out", out]) == 0
+    reloaded = ProfileTable.from_json(out)
+    pristine = serve.synthetic_pool_table(["qwen2.5-3b"])
+    assert {e.pair for e in reloaded.entries} == \
+        {e.pair for e in pristine.entries}
+    # the slowdown observations actually reached the persisted profile
+    assert any(r.energy_mwh != p.energy_mwh
+               for r, p in zip(reloaded.entries, pristine.entries))
+
+
 def test_serve_batch_equivalent_to_single_requests():
     """Batched serve_batch returns the same tokens as serving each request
     alone (equal-length prompts: no padding divergence)."""

@@ -64,6 +64,18 @@ def test_frame_wider_than_column_limit_is_a_clear_error():
     assert np.asarray(canny_edge(wide, impl="xla")).shape == wide.shape
 
 
+def test_auto_dispatches_wide_frames_to_xla_fallback():
+    """impl='auto' must SERVE a wide frame (xla fallback) instead of
+    surfacing the Pallas kernel's column-limit ValueError; the fail-fast
+    behavior stays with explicit impl='pallas'."""
+    wide = _rand((1, 16, MAX_WIDTH + 128), seed=2)
+    got = canny_edge(wide, impl="auto")
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.canny_edge(wide)))
+    with pytest.raises(ValueError, match="lane-dim \\(width\\) tiling"):
+        canny_edge(wide, impl="pallas")
+
+
 def test_ops_dispatch():
     img = _rand((2, 32, 32), seed=3)
     want = np.asarray(ref.canny_edge(img))

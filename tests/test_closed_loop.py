@@ -1,0 +1,390 @@
+"""ProfileState plane + the fused closed loop: state<->table round trip,
+pure-op mirrors, and exact scan-vs-scalar parity under drift."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.closed_loop import (StreamMeasurements,
+                                    measurements_from_fleet, scan_stream)
+from repro.core.estimators import (EdgeDetectionEstimator,
+                                   OutputBasedEstimator)
+from repro.core.gateway import Gateway
+from repro.core.policy import DetectionPolicy, Observation, RouteRequest
+from repro.core.profiles import (ProfileEntry, ProfileTable, observe_state)
+from repro.core.router import (GreedyEstimateRouter, OracleRouter,
+                               greedy_route, route_batch)
+from repro.detection import scenes as sc
+from repro.detection.detectors import DETECTOR_CONFIGS
+from repro.detection.devices import (DriftEvent, DriftingFleet,
+                                     TESTBED_PAIRS, drift_scenario,
+                                     nominal_profile_table)
+
+
+def f32(x):
+    return float(np.float32(x))
+
+
+# ------------------------------------------------- state <-> table round trip
+
+def test_state_table_round_trip():
+    table = nominal_profile_table()
+    state = table.as_state()
+    back = table.copy()
+    back.load_state(state)
+    # load_state rounds through f32 (the state dtype) but nothing else
+    for a, b in zip(table.entries, back.entries):
+        assert (a.model, a.device, a.group) == (b.model, b.device, b.group)
+        assert b.map_pct == f32(a.map_pct)
+        assert b.time_ms == f32(a.time_ms)
+        assert b.energy_mwh == f32(a.energy_mwh)
+    # a second export is a fixed point: f32 values survive exactly
+    again = back.with_state(back.as_state())
+    assert again.entries == back.entries
+
+
+def test_state_round_trip_through_json(tmp_path):
+    table = nominal_profile_table()
+    state = table.as_state()
+    # fold a runtime observation into the state, persist, reload
+    state = observe_state(state, 0, 2, time_ms=99.0, energy_mwh=7.0,
+                          map_pct=41.0, alpha=0.5)
+    adapted = table.with_state(state)
+    path = os.path.join(tmp_path, "profile.json")
+    adapted.to_json(path)
+    reloaded = ProfileTable.from_json(path)
+    assert reloaded.entries == adapted.entries
+    np.testing.assert_array_equal(np.asarray(reloaded.as_state().map_pct),
+                                  np.asarray(state.map_pct))
+
+
+def test_load_state_rejects_foreign_layout():
+    table = nominal_profile_table()
+    other = ProfileTable([ProfileEntry("m", "d", 0, 50.0, 1.0, 1.0)])
+    with pytest.raises(ValueError, match="as_state"):
+        table.load_state(other.as_state())
+
+
+def test_load_state_invalidates_cached_views():
+    table = nominal_profile_table()
+    arrays = table.as_arrays()
+    before = route_batch([1], table, 5.0)[0]
+    favorite = arrays.pairs.index(table.entries[before].pair)
+    state = observe_state(arrays.state, favorite, 0, energy_mwh=1e6,
+                          alpha=1.0)
+    table.load_state(state)
+    after = route_batch([1], table, 5.0)[0]
+    assert table.entries[after] is greedy_route(1, table, 5.0)
+    assert after != before  # the poisoned favorite lost the argmin
+
+
+def test_route_batch_accepts_state_snapshot():
+    """Routers consume either face: the table or its ProfileArrays/state."""
+    table = nominal_profile_table()
+    counts = [0, 2, 5, 7, 1]
+    np.testing.assert_array_equal(route_batch(counts, table, 5.0),
+                                  route_batch(counts, table.as_arrays(), 5.0))
+
+
+# ----------------------------------------------------- observe_state mirrors
+
+def test_observe_state_mirrors_observe_pair():
+    table = nominal_profile_table()
+    arrays = table.as_arrays()
+    pair = arrays.pairs[3]
+    state = observe_state(arrays.state, 3, 0, time_ms=123.0, energy_mwh=9.0,
+                          alpha=0.3)
+    table.observe_pair(pair, time_ms=123.0, energy_mwh=9.0, alpha=0.3)
+    want = table.as_arrays().state
+    np.testing.assert_allclose(np.asarray(state.time_ms),
+                               np.asarray(want.time_ms), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(state.energy_mwh),
+                               np.asarray(want.energy_mwh), rtol=1e-6)
+    # map untouched by a latency/energy observation
+    np.testing.assert_array_equal(np.asarray(state.map_pct),
+                                  np.asarray(arrays.state.map_pct))
+
+
+def test_observe_state_map_touches_one_cell():
+    table = nominal_profile_table()
+    arrays = table.as_arrays()
+    state = observe_state(arrays.state, 2, 4, map_pct=10.0, alpha=0.5)
+    diff = np.asarray(state.map_pct) != np.asarray(arrays.state.map_pct)
+    assert diff.sum() == 1
+    g, p = map(int, np.argwhere(diff)[0])
+    assert g == 4 and int(np.asarray(arrays.state.pair_id)[g, p]) == 2
+
+
+def test_observe_state_nan_is_the_traced_no_op():
+    table = nominal_profile_table()
+    state = table.as_state()
+    same = observe_state(state, 0, 0, time_ms=np.nan, energy_mwh=np.nan,
+                         map_pct=np.nan, alpha=0.9)
+    for a, b in zip(state, same):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------ scan_stream ≡ scalar loop
+
+def _drift_measurements(fleet, pairs, steps):
+    """Scalar reference builder: one fleet.cost call per (step, pair) —
+    what measurements_from_fleet must reproduce vectorized."""
+    t = np.empty((steps, len(pairs)))
+    e = np.empty((steps, len(pairs)))
+    for j, (m, d) in enumerate(pairs):
+        flops = DETECTOR_CONFIGS[m].flops
+        for step in range(steps):
+            t[step, j], e[step, j] = fleet.cost(d, flops, step)
+    return StreamMeasurements(time_ms=t, energy_mwh=e)
+
+
+@pytest.mark.parametrize("scenario", ["thermal", "background", "dropout"])
+def test_measurements_from_fleet_matches_scalar_costs(scenario):
+    """The ONE shared measurement builder (gateway + bench use it) equals
+    the per-step scalar fleet.cost for every drift kind, and composed
+    events; without a fleet it equals the offline device model."""
+    pairs = nominal_profile_table().as_arrays().pairs
+    fleet = drift_scenario(scenario, device="pi5_tpu", start=7)
+    got = measurements_from_fleet(pairs, 60, fleet)
+    want = _drift_measurements(fleet, pairs, 60)
+    np.testing.assert_allclose(got.time_ms, want.time_ms, rtol=1e-12)
+    np.testing.assert_allclose(got.energy_mwh, want.energy_mwh, rtol=1e-12)
+    composed = DriftingFleet([
+        DriftEvent("pi5_tpu", "background", severity=3.0, period=10),
+        DriftEvent("pi5_tpu", "dropout", start=5, end=20, severity=4.0)])
+    got = measurements_from_fleet(pairs, 40, composed)
+    want = _drift_measurements(composed, pairs, 40)
+    np.testing.assert_allclose(got.energy_mwh, want.energy_mwh, rtol=1e-12)
+    static = measurements_from_fleet(pairs, 3)
+    want = _drift_measurements(DriftingFleet([]), pairs, 3)
+    np.testing.assert_allclose(static.energy_mwh, want.energy_mwh,
+                               rtol=1e-12)
+
+
+def _scalar_closed_loop(table, counts, meas, delta, alpha):
+    """The longhand scalar reference: greedy_route -> observe_pair, exactly
+    what DetectionPolicy runs frame-at-a-time under adapt=True."""
+    pairs = table.pairs()
+    picks = []
+    for t, c in enumerate(counts):
+        entry = greedy_route(int(c), table, delta)
+        picks.append(entry.pair)
+        j = pairs.index(entry.pair)
+        table.observe_pair(entry.pair, time_ms=meas.time_ms[t, j],
+                           energy_mwh=meas.energy_mwh[t, j], alpha=alpha)
+    return picks
+
+
+@pytest.mark.parametrize("scenario", ["thermal", "background", "dropout"])
+def test_scan_stream_exact_parity_under_drift(scenario):
+    """Acceptance: on a drifting 200-frame stream the scanned closed loop
+    routes the SAME pairs and lands on the same profile state (allclose —
+    f32 vs float64 EWMA rounding) as the scalar loop, for every DriftEvent
+    kind."""
+    steps, delta, alpha = 200, 5.0, 0.15
+    rng = np.random.default_rng(11)
+    counts = rng.choice(len(sc.COUNT_PROBS), p=sc.COUNT_PROBS, size=steps)
+    table = nominal_profile_table()
+    favorite = greedy_route(int(np.argmax(np.bincount(counts))), table,
+                            delta).device
+    fleet = drift_scenario(scenario, device=favorite, start=steps // 4)
+    arrays = table.as_arrays()
+    meas = _drift_measurements(fleet, arrays.pairs, steps)
+
+    ref_table = table.copy()
+    scalar_picks = _scalar_closed_loop(ref_table, counts, meas, delta, alpha)
+
+    state, trace = scan_stream(arrays.state, counts, meas, arrays=arrays,
+                               delta=delta, alpha=alpha)
+    scan_picks = [arrays.pairs[j] for j in trace.pair_idx]
+    assert scan_picks == scalar_picks
+    assert len(set(scan_picks)) > 1  # the drift actually forced a reroute
+    want = ref_table.as_arrays().state
+    np.testing.assert_allclose(np.asarray(state.energy_mwh),
+                               np.asarray(want.energy_mwh), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.time_ms),
+                               np.asarray(want.time_ms), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(state.map_pct),
+                               np.asarray(want.map_pct), rtol=1e-5)
+    # the trace maps back into table identity
+    for t, (g, i) in enumerate(zip(trace.group_row, trace.entry_idx)):
+        assert table.entries[i].pair == scan_picks[t]
+        assert arrays.groups[g] == table.entries[i].group
+
+
+def test_scan_stream_unprofiled_group_raises_eagerly():
+    table = ProfileTable([ProfileEntry("m", "d", 0, 50.0, 1.0, 1.0)])
+    arrays = table.as_arrays()
+    meas = StreamMeasurements(time_ms=np.ones((2, 1)),
+                              energy_mwh=np.ones((2, 1)))
+    with pytest.raises(ValueError, match="no profile rows for group 4"):
+        scan_stream(arrays.state, [0, 7], meas, arrays=arrays, delta=5.0)
+
+
+def test_scan_stream_rejects_misshapen_measurements():
+    table = nominal_profile_table()
+    arrays = table.as_arrays()
+    meas = StreamMeasurements(time_ms=np.ones((3, 2)),
+                              energy_mwh=np.ones((3, 2)))
+    with pytest.raises(ValueError, match="one row per step"):
+        scan_stream(arrays.state, [1, 1, 1], meas, arrays=arrays, delta=5.0)
+
+
+# -------------------------------------------- decide_scan ≡ scalar decide
+
+def _policy(table, *, explore_every=0, est=True):
+    router = (GreedyEstimateRouter if est else OracleRouter)(table, 5.0)
+    return DetectionPolicy(router, table,
+                           EdgeDetectionEstimator() if est else None,
+                           adapt=True, alpha=0.2,
+                           explore_every=explore_every)
+
+
+@pytest.mark.parametrize("explore_every,est", [(0, True), (4, True),
+                                               (0, False), (4, False)])
+def test_decide_scan_matches_scalar_decide_observe_loop(explore_every, est):
+    """decide_scan returns the SAME RouteDecisions (pair, est_complexity,
+    gateway cost, explored flag) and leaves the SAME adapted table as the
+    scalar decide/observe interleave it compiles."""
+    steps = 60
+    scenes = sc.drifting_dataset(n=steps, seed=3)
+    reqs = [RouteRequest(uid=i, payload=s.image, true_complexity=s.count)
+            for i, s in enumerate(scenes)]
+    table = nominal_profile_table()
+    fleet = DriftingFleet([DriftEvent("pi5_aihat", "thermal", start=10,
+                                      severity=5.0, ramp=15)])
+    arrays = table.as_arrays()
+    meas = _drift_measurements(fleet, arrays.pairs, steps)
+
+    # scalar reference: the exact per-frame interleave
+    ref_table = table.copy()
+    ref = _policy(ref_table, explore_every=explore_every, est=est)
+    ref_pairs = ref_table.pairs()
+    want = []
+    for t, req in enumerate(reqs):
+        d = ref.decide(req)
+        want.append(d)
+        j = ref_pairs.index(d.pair)
+        ref.observe(Observation(pair=d.pair,
+                                group=ref.group_for(req.true_complexity),
+                                time_ms=meas.time_ms[t, j],
+                                energy_mwh=meas.energy_mwh[t, j]))
+
+    policy = _policy(table, explore_every=explore_every, est=est)
+    assert policy.scannable
+    got = policy.decide_scan(reqs, meas)
+    assert got == want
+    if explore_every:
+        assert any(d.explored for d in got)
+    np.testing.assert_allclose(
+        np.asarray(table.as_arrays().state.energy_mwh),
+        np.asarray(ref_table.as_arrays().state.energy_mwh), rtol=1e-5)
+
+
+def test_decide_scan_requires_scannable():
+    table = nominal_profile_table()
+    policy = DetectionPolicy(OracleRouter(table, 5.0), table,
+                             OutputBasedEstimator())
+    assert not policy.scannable  # open loop: use decide_batch, not the scan
+    with pytest.raises(ValueError, match="scannable"):
+        policy.decide_scan([], None)
+
+
+def test_ob_estimator_is_not_scannable():
+    """OB's counts are per-frame feedback from the served result — the one
+    estimator whose closed loop must stay scalar."""
+    table = nominal_profile_table()
+    policy = DetectionPolicy(GreedyEstimateRouter(table, 5.0), table,
+                             OutputBasedEstimator(), adapt=True)
+    assert not policy.scannable
+
+
+# -------------------------------------------------- gateway scanned path
+
+def _fake_run_detector(params, images):
+    none = np.zeros((0, 4), np.float32)
+    return [(none, np.zeros(0, np.float32), np.zeros(0, np.int32))
+            for _ in range(len(images))]
+
+
+def test_gateway_scanned_closed_loop_identical_to_scalar(monkeypatch):
+    """Gateway(adapt=True, max_batch=N) routes through one lax.scan and
+    batches dispatch — EpisodeStats and the adapted profile are IDENTICAL
+    to the frame-at-a-time scalar loop on a drifting stream."""
+    from repro.detection import train
+    monkeypatch.setattr(train, "run_detector", _fake_run_detector)
+    params = {m: None for m, _ in TESTBED_PAIRS}
+    scenes = sc.drifting_dataset(n=80, seed=5)
+    modal = int(np.argmax(np.bincount([s.count for s in scenes])))
+    favorite = greedy_route(modal, nominal_profile_table(), 5.0).device
+    fleet = drift_scenario("thermal", device=favorite, start=20)
+
+    def episode(batch_routing, max_batch):
+        table = nominal_profile_table()
+        gw = Gateway(GreedyEstimateRouter(table, 5.0), table, params,
+                     EdgeDetectionEstimator(), fleet=fleet, adapt=True,
+                     alpha=0.2, explore_every=6,
+                     batch_routing=batch_routing, max_batch=max_batch)
+        assert gw.policy.scannable is batch_routing
+        return gw.process_stream(scenes), table
+
+    scanned, t_scan = episode(True, max_batch=8)
+    scalar, t_scal = episode(False, max_batch=8)
+    assert scanned == scalar  # decisions, costs, mAP, histogram — exact
+    assert len(scanned.pair_histogram) > 1
+    np.testing.assert_allclose(
+        np.asarray(t_scan.as_arrays().state.energy_mwh),
+        np.asarray(t_scal.as_arrays().state.energy_mwh), rtol=1e-5)
+
+
+def test_service_submit_batch_rejects_mismatched_decisions():
+    from repro.serving.service import EcoreService
+    table = nominal_profile_table()
+    policy = DetectionPolicy(OracleRouter(table, 5.0), table)
+    service = EcoreService(policy, lambda d: None)
+    try:
+        with pytest.raises(ValueError, match="decisions for"):
+            service.submit_batch(
+                [RouteRequest(uid=0, true_complexity=1)], decisions=[])
+    finally:
+        service.close()
+
+
+def test_detector_backend_profile_row_reads_live_table():
+    from repro.serving.backend import DetectorBackend
+    table = nominal_profile_table()
+    be = DetectorBackend("ssd_v1", "orin_nano", None,
+                         run_fn=_fake_run_detector, table=table)
+    nominal = be.profile_row()["energy_mwh"]
+    table.observe_pair(("ssd_v1", "orin_nano"), energy_mwh=nominal * 10,
+                       alpha=1.0)
+    assert be.profile_row()["energy_mwh"] == pytest.approx(nominal * 10)
+    # without a table the static device model answers, as before
+    static = DetectorBackend("ssd_v1", "orin_nano", None,
+                             run_fn=_fake_run_detector)
+    assert static.profile_row()["energy_mwh"] == pytest.approx(nominal)
+
+
+# ------------------------------------------------------ batched OB feedback
+
+def test_observe_batch_ob_keeps_last_count():
+    ob = OutputBasedEstimator(default=0)
+    ob.observe_batch([3, 9, 5])
+    assert ob.estimate(None)[0] == 5  # telescoped fold: last count wins
+    ob.observe_batch([])
+    assert ob.estimate(None)[0] == 5  # empty feedback is a no-op
+    loop = OutputBasedEstimator(default=0)
+    for c in [3, 9, 5]:
+        loop.observe(c)
+    assert loop.estimate(None) == ob.estimate(None)
+
+
+def test_observe_batch_generic_fallback_loops_observe():
+    calls = []
+
+    class Spy(EdgeDetectionEstimator):
+        def observe(self, c):
+            calls.append(c)
+
+    Spy().observe_batch([1, 2])
+    assert calls == [1, 2]
