@@ -1,0 +1,77 @@
+"""CLI: ``python -m repro.analysis [paths] [--format text|json]
+[--select/--ignore IDS] [--list-rules]``.
+
+Exit codes: 0 clean, 1 violations found, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from repro.analysis.engine import run_paths
+from repro.analysis.registry import all_rules
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples")
+
+
+def _split(values: List[str]) -> List[str]:
+    out: List[str] = []
+    for v in values:
+        out.extend(s.strip() for s in v.split(",") if s.strip())
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repro architectural lint: scan/jit purity (ECO1xx), "
+                    "hot-path discipline (ECO2xx), serving thread safety "
+                    "(ECO3xx), kernel oracle contract (ECO4xx), "
+                    "environment pins (ECO5xx).")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to lint (default: whichever of "
+                         f"{'/'.join(DEFAULT_PATHS)} exist)")
+    ap.add_argument("--format", choices=("text", "json"), default="text",
+                    dest="fmt", metavar="text|json")
+    ap.add_argument("--select", action="append", default=[], metavar="IDS",
+                    help="only run rules matching these comma-separated id "
+                         "prefixes or names (e.g. ECO1,ECO302)")
+    ap.add_argument("--ignore", action="append", default=[], metavar="IDS",
+                    help="skip rules matching these id prefixes or names")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, cls in all_rules().items():
+            print(f"{rid}  {cls.name}")
+            print(f"       {cls.description}")
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if os.path.exists(p)]
+    if not paths:
+        print("repro-lint: no paths given and none of "
+              f"{', '.join(DEFAULT_PATHS)} exist here", file=sys.stderr)
+        return 2
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"repro-lint: no such path: {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+
+    report = run_paths(paths, select=_split(args.select) or None,
+                       ignore=_split(args.ignore) or None)
+
+    if args.fmt == "json":
+        print(json.dumps(report.as_dict(), indent=2, sort_keys=True))
+    else:
+        for v in report.violations:
+            print(v.render())
+        n = len(report.violations)
+        print(f"repro-lint: {report.files} files, {len(report.rules)} "
+              f"rules, {n} violation{'' if n == 1 else 's'} "
+              f"({report.suppressed} suppressed)")
+    return 1 if report.violations else 0

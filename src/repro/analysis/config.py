@@ -1,0 +1,119 @@
+"""``[tool.repro-lint]`` configuration from pyproject.toml.
+
+Python 3.11+ reads pyproject via ``tomllib``; the container pins 3.10, so a
+minimal TOML-subset parser (dotted section headers, string/bool/int
+scalars, possibly-multiline arrays of strings — all this block needs) is
+the fallback.  It is NOT a general TOML parser.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, Optional
+
+DEFAULTS: Dict[str, object] = {
+    # collection excludes, added to engine.DEFAULT_EXCLUDE
+    "exclude": [],
+    # rule id prefixes; CLI flags override select, extend ignore
+    "select": [],
+    "ignore": [],
+    # function names treated as jit-traced scopes even without a decorator
+    # (the pure core the scanned closed loop threads state through)
+    "pure-functions": ["observe_state", "decide_state", "_mix32"],
+    # functions that must stay Python-loop-free in the hot core modules
+    "hot-functions": ["scan_stream", "route_batch", "decide_state",
+                      "observe_state"],
+    # the only files allowed to call .serve_batch(...) directly
+    "dispatch-plane": ["*/repro/serving/service.py",
+                       "*/repro/serving/engine.py"],
+}
+
+
+def find_pyproject(start: str = ".") -> Optional[str]:
+    d = os.path.abspath(start)
+    if os.path.isfile(d):
+        d = os.path.dirname(d)
+    while True:
+        cand = os.path.join(d, "pyproject.toml")
+        if os.path.isfile(cand):
+            return cand
+        parent = os.path.dirname(d)
+        if parent == d:
+            return None
+        d = parent
+
+
+def load_config(start: str = ".") -> Dict[str, object]:
+    cfg = {k: (list(v) if isinstance(v, list) else v)
+           for k, v in DEFAULTS.items()}
+    pp = find_pyproject(start)
+    if pp is None:
+        return cfg
+    with open(pp, "r", encoding="utf-8") as fh:
+        data = _load_toml(fh.read())
+    section = data.get("tool", {}).get("repro-lint", {})
+    if isinstance(section, dict):
+        cfg.update(section)
+    return cfg
+
+
+def _load_toml(text: str) -> Dict:
+    try:
+        import tomllib
+    except ImportError:  # Python 3.10 (this container)
+        return _parse_minimal(text)
+    return tomllib.loads(text)
+
+
+_KEY_RE = re.compile(r"""^\s*([A-Za-z0-9_\-."']+)\s*=\s*(.*)$""")
+_STRING_RE = re.compile(r'"((?:[^"\\]|\\.)*)"')
+
+
+def _strip_strings(s: str) -> str:
+    return _STRING_RE.sub("", s)
+
+
+def _parse_minimal(text: str) -> Dict:
+    root: Dict = {}
+    table = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = lines[i].strip()
+        i += 1
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[") and line.endswith("]"):
+            table = root
+            for part in line[1:-1].strip().split("."):
+                table = table.setdefault(part.strip().strip("\"'"), {})
+            continue
+        m = _KEY_RE.match(line)
+        if m is None:
+            continue
+        key = m.group(1).strip().strip("\"'")
+        value = m.group(2).strip()
+        if value.startswith("["):
+            buf = value
+            while (_strip_strings(buf).count("[")
+                   > _strip_strings(buf).count("]")) and i < len(lines):
+                buf += " " + lines[i].strip()
+                i += 1
+            table[key] = [s.replace('\\"', '"')
+                          for s in _STRING_RE.findall(buf)]
+        else:
+            table[key] = _scalar(value)
+    return root
+
+
+def _scalar(value: str):
+    if not value.startswith(("\"", "'")):
+        value = value.split("#", 1)[0].strip()
+    if value in ("true", "false"):
+        return value == "true"
+    if len(value) >= 2 and value[0] == value[-1] and value[0] in "\"'":
+        return value[1:-1]
+    try:
+        return int(value)
+    except ValueError:
+        return value

@@ -1,0 +1,255 @@
+"""repro.analysis engine: source loading, suppressions, rule execution.
+
+The engine is deliberately stdlib-only (``ast`` + ``re`` + ``fnmatch``): it
+runs in CI before anything heavy is importable, and it must never import
+jax — the linted tree includes modules whose import would initialise
+device state.
+
+Suppression grammar (free-text justification may follow the id list)::
+
+    x = risky()  # repro-lint: disable=ECO101
+    # repro-lint: disable=ECO101, ECO110 -- why this is sanctioned
+    x = risky()
+    # repro-lint: disable-file=ECO503
+
+An inline marker suppresses its own line; a standalone comment marker
+suppresses the next non-comment line (so a justification block may follow
+it); ``disable-file`` suppresses the whole file.  ``all`` (or ``*``) as an
+id disables every rule.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import fnmatch
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*(disable|disable-file)\s*=\s*"
+    r"([A-Za-z0-9_*]+(?:\s*,\s*[A-Za-z0-9_*]+)*)")
+
+#: always skipped during file collection (config ``exclude`` adds to this)
+DEFAULT_EXCLUDE = ("*/__pycache__/*", "*/.git/*", "*/build/*", "*/dist/*",
+                   "*.egg-info/*")
+
+
+def norm_path(path) -> str:
+    p = str(path).replace(os.sep, "/")
+    while p.startswith("./"):
+        p = p[2:]
+    return p
+
+
+def match_path(path, patterns: Sequence[str]) -> bool:
+    """fnmatch against both the path and a ``/``-anchored form, so
+    ``*/core/*.py`` patterns match repo-relative paths (``src/repro/core/
+    x.py`` and ``core/x.py`` alike) as well as absolute ones."""
+    p = norm_path(path)
+    anchored = p if p.startswith("/") else "/" + p
+    return any(fnmatch.fnmatch(anchored, pat) or fnmatch.fnmatch(p, pat)
+               for pat in patterns)
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def sort_key(self) -> Tuple[str, int, int, str]:
+        return (self.path, self.line, self.col, self.rule)
+
+    def as_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"{self.rule} {self.message}")
+
+
+class SourceFile:
+    """A parsed source file plus its suppression map."""
+
+    def __init__(self, path: str, text: str):
+        self.path = norm_path(path)
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text)  # caller converts SyntaxError to E001
+        self.file_suppress: Set[str] = set()
+        #: lineno -> rule ids suppressed on that line.  An inline marker
+        #: maps to its own line; a standalone comment marker maps to the
+        #: next non-comment line (a justification block may sit between).
+        self.line_suppress: Dict[int, Set[str]] = {}
+        for lineno, line in enumerate(self.lines, start=1):
+            m = _SUPPRESS_RE.search(line)
+            if m is None:
+                continue
+            ids = {s.strip() for s in m.group(2).split(",") if s.strip()}
+            if m.group(1) == "disable-file":
+                self.file_suppress |= ids
+                continue
+            target = lineno
+            if line.lstrip().startswith("#"):
+                for nxt in range(lineno + 1, len(self.lines) + 1):
+                    stripped = self.lines[nxt - 1].strip()
+                    if stripped and not stripped.startswith("#"):
+                        target = nxt
+                        break
+                else:
+                    continue  # trailing comment block: nothing to suppress
+            self.line_suppress.setdefault(target, set()).update(ids)
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        for ids in (self.file_suppress, self.line_suppress.get(line, ())):
+            if rule_id in ids or "all" in ids or "*" in ids:
+                return True
+        return False
+
+
+@dataclasses.dataclass
+class Report:
+    files: int
+    rules: List[str]
+    violations: List[Violation]
+    suppressed: int
+
+    def counts(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for v in self.violations:
+            out[v.rule] = out.get(v.rule, 0) + 1
+        return out
+
+    def as_dict(self) -> Dict[str, object]:
+        """JSON schema v1 — stable; covered by tests/test_analysis.py."""
+        return {"version": 1,
+                "files": self.files,
+                "rules": list(self.rules),
+                "violations": [v.as_dict() for v in self.violations],
+                "counts": self.counts(),
+                "suppressed": self.suppressed}
+
+
+def parse_source(path: str, text: str):
+    """-> ``(SourceFile, None)`` or ``(None, E001 Violation)``."""
+    try:
+        return SourceFile(path, text), None
+    except SyntaxError as e:
+        return None, Violation("E001", norm_path(path), e.lineno or 1,
+                               max((e.offset or 1) - 1, 0),
+                               f"syntax error: {e.msg}")
+
+
+def collect_paths(paths: Sequence[str],
+                  exclude: Sequence[str] = DEFAULT_EXCLUDE) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        p = norm_path(p)
+        if os.path.isfile(p):
+            if p.endswith(".py") and not match_path(p, exclude):
+                out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in (".git", "__pycache__"))
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                fp = norm_path(os.path.join(dirpath, fn))
+                if not match_path(fp, exclude):
+                    out.append(fp)
+    seen: Set[str] = set()
+    uniq = []
+    for p in out:
+        if p not in seen:
+            seen.add(p)
+            uniq.append(p)
+    return uniq
+
+
+def run_rules(sources: Sequence[SourceFile], rules,
+              extra_violations: Iterable[Violation] = ()):
+    """-> (sorted violations, suppressed count)."""
+    by_path = {s.path: s for s in sources}
+    violations = list(extra_violations)
+    suppressed = 0
+    for rule in rules:
+        targets = [s for s in sources if rule.applies_to(s.path)]
+        if rule.project_level:
+            found = list(rule.check_project(targets))
+        else:
+            found = [v for src in targets for v in rule.check(src)]
+        for v in found:
+            src = by_path.get(v.path)
+            if src is not None and src.suppressed(v.rule, v.line):
+                suppressed += 1
+            else:
+                violations.append(v)
+    violations.sort(key=Violation.sort_key)
+    return violations, suppressed
+
+
+def run_paths(paths: Sequence[str], *, select: Optional[Sequence[str]] = None,
+              ignore: Optional[Sequence[str]] = None,
+              config: Optional[Dict[str, object]] = None) -> Report:
+    """Lint files/directories on disk (the CLI entry point)."""
+    from repro.analysis.config import load_config
+    from repro.analysis.registry import make_rules
+    cfg = dict(config) if config is not None else load_config(
+        paths[0] if paths else ".")
+    exclude = tuple(DEFAULT_EXCLUDE) + tuple(cfg.get("exclude") or ())
+    files = collect_paths(paths, exclude)
+    sources, errors = [], []
+    for fp in files:
+        with open(fp, "r", encoding="utf-8") as fh:
+            text = fh.read()
+        src, err = parse_source(fp, text)
+        if src is not None:
+            sources.append(src)
+        else:
+            errors.append(err)
+    rules = make_rules(select=list(select or ()) or None,
+                       ignore=list(ignore or ()) + list(cfg.get("ignore")
+                                                        or ()),
+                       options=cfg)
+    violations, suppressed = run_rules(sources, rules, errors)
+    return Report(files=len(files), rules=[r.id for r in rules],
+                  violations=violations, suppressed=suppressed)
+
+
+def check_sources(named: Dict[str, str], *,
+                  select: Optional[Sequence[str]] = None,
+                  ignore: Optional[Sequence[str]] = None,
+                  options: Optional[Dict[str, object]] = None) -> Report:
+    """Lint in-memory sources (``{path: text}``) — the fixture-test surface.
+
+    Paths are virtual but still drive per-rule include/exclude matching, so
+    fixtures choose which plane they pretend to live in (e.g.
+    ``src/repro/core/x.py``).
+    """
+    from repro.analysis.config import DEFAULTS
+    from repro.analysis.registry import make_rules
+    cfg = {k: (list(v) if isinstance(v, list) else v)
+           for k, v in DEFAULTS.items()}
+    cfg.update(options or {})
+    sources, errors = [], []
+    for path, text in named.items():
+        src, err = parse_source(path, text)
+        if src is not None:
+            sources.append(src)
+        else:
+            errors.append(err)
+    rules = make_rules(select=list(select or ()) or None,
+                       ignore=list(ignore or ()) or None, options=cfg)
+    violations, suppressed = run_rules(sources, rules, errors)
+    return Report(files=len(named), rules=[r.id for r in rules],
+                  violations=violations, suppressed=suppressed)
+
+
+def check_source(text: str, path: str = "src/repro/core/snippet.py",
+                 **kw) -> List[Violation]:
+    """Lint one in-memory snippet; returns the violation list."""
+    return check_sources({path: text}, **kw).violations

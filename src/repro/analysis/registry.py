@@ -1,0 +1,84 @@
+"""Rule base class + registry.
+
+A rule is a class with a unique ``id`` (``ECO<family><nn>``), a short
+``name``, path ``include``/``exclude`` globs, and either ``check(src)``
+(per-file) or ``check_project(sources)`` (cross-file, ``project_level =
+True``).  ``@register`` adds it to the catalogue; ``make_rules`` builds the
+enabled, configured instances for a run.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Type
+
+from repro.analysis.engine import SourceFile, Violation, match_path
+
+
+class Rule:
+    id: str = ""
+    name: str = ""
+    description: str = ""
+    include: Tuple[str, ...] = ("*.py",)
+    exclude: Tuple[str, ...] = ()
+    project_level: bool = False
+
+    def configure(self, options: Dict[str, object]) -> None:
+        """Consume ``[tool.repro-lint]`` options (called once per run)."""
+
+    def applies_to(self, path: str) -> bool:
+        return (match_path(path, self.include)
+                and not match_path(path, self.exclude))
+
+    def check(self, src: SourceFile) -> Iterable[Violation]:
+        return ()
+
+    def check_project(self, sources: Sequence[SourceFile]
+                      ) -> Iterable[Violation]:
+        return ()
+
+    def hit(self, node, path: str, message: str) -> Violation:
+        return Violation(self.id, path, getattr(node, "lineno", 1),
+                         getattr(node, "col_offset", 0), message)
+
+
+_RULES: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    if not cls.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if cls.id in _RULES and _RULES[cls.id] is not cls:
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    _RULES[cls.id] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    import repro.analysis.rules  # noqa: F401  (registers the catalogue)
+    return dict(sorted(_RULES.items()))
+
+
+def _enabled(rule_id: str, name: str, select: Optional[Sequence[str]],
+             ignore: Optional[Sequence[str]]) -> bool:
+    """id prefixes (``ECO1`` = the whole family) or exact rule names."""
+    def matches(spec: str) -> bool:
+        spec = spec.strip()
+        return bool(spec) and (rule_id.startswith(spec.upper())
+                               or name == spec)
+
+    sel = [s for s in (select or ()) if s.strip()]
+    if sel and not any(matches(s) for s in sel):
+        return False
+    return not any(matches(s) for s in (ignore or ()))
+
+
+def make_rules(select: Optional[Sequence[str]] = None,
+               ignore: Optional[Sequence[str]] = None,
+               options: Optional[Dict[str, object]] = None) -> List[Rule]:
+    out: List[Rule] = []
+    for rid, cls in all_rules().items():
+        if not _enabled(rid, cls.name, select, ignore):
+            continue
+        rule = cls()
+        rule.configure(options or {})
+        out.append(rule)
+    return out

@@ -1,0 +1,3 @@
+"""Rule catalogue: importing this package registers every rule family."""
+from repro.analysis.rules import (hotpath, kernels, pins,  # noqa: F401
+                                  purity, threads)

@@ -1,0 +1,107 @@
+"""Shared AST helpers for the rule catalogue."""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Sequence
+
+#: list/set/dict methods that mutate the receiver in place
+MUTATORS = frozenset({"append", "extend", "insert", "remove", "pop",
+                      "popitem", "update", "setdefault", "clear", "discard",
+                      "sort", "reverse"})
+
+#: array-API reductions whose per-item scalarisation marks a hot-loop sync
+REDUCERS = frozenset({"sum", "mean", "max", "min", "prod", "all", "any",
+                      "argmin", "argmax", "item"})
+
+#: receivers whose reductions are explicitly host-side (never tracers)
+NP_NAMES = frozenset({"np", "numpy"})
+
+
+def dotted_name(node) -> Optional[str]:
+    """``"jax.sharding.AxisType"`` for Attribute/Name chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    return dotted_name(node.func)
+
+
+def annotate_parents(tree: ast.AST) -> None:
+    """Attach ``_repro_parent`` links (idempotent) for upward walks."""
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._repro_parent = parent  # type: ignore[attr-defined]
+
+
+def parents(node) -> Iterator[ast.AST]:
+    cur = getattr(node, "_repro_parent", None)
+    while cur is not None:
+        yield cur
+        cur = getattr(cur, "_repro_parent", None)
+
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While, ast.ListComp, ast.SetComp,
+          ast.DictComp, ast.GeneratorExp)
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def in_loop(node) -> bool:
+    """Is ``node`` lexically inside a loop/comprehension, without crossing
+    a nested function boundary above the loop?  Requires
+    ``annotate_parents`` on the tree first."""
+    for p in parents(node):
+        if isinstance(p, _LOOPS):
+            return True
+        if isinstance(p, _FUNCS):
+            return False
+    return False
+
+
+def enclosing_function(node) -> Optional[ast.AST]:
+    for p in parents(node):
+        if isinstance(p, _FUNCS):
+            return p
+    return None
+
+
+def is_jit_decorator(dec) -> bool:
+    """``@jax.jit`` / ``@jit``, or ``@(functools.)partial(jax.jit, ...)``."""
+    if dotted_name(dec) in ("jit", "jax.jit"):
+        return True
+    if isinstance(dec, ast.Call):
+        f = dotted_name(dec.func)
+        if f in ("jit", "jax.jit"):
+            return True
+        if f in ("partial", "functools.partial") and dec.args:
+            return dotted_name(dec.args[0]) in ("jit", "jax.jit")
+    return False
+
+
+def jit_entry_functions(tree, pure_names: Sequence[str] = ()) -> List:
+    """Top-most jit-traced functions: jit-decorated defs plus the configured
+    always-pure names.  Nested defs inside an entry belong to the entry's
+    trace and are covered by walking the entry, so they are not returned
+    separately."""
+    pure = set(pure_names)
+    out: List = []
+
+    def visit(node, inside: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            child_inside = inside
+            if isinstance(child, _FUNCS):
+                entry = (child.name in pure or any(
+                    is_jit_decorator(d) for d in child.decorator_list))
+                if entry and not inside:
+                    out.append(child)
+                child_inside = inside or entry
+            visit(child, child_inside)
+
+    visit(tree, False)
+    return out

@@ -1,0 +1,91 @@
+"""Family 5 — environment pins (ECO501/502/503).
+
+The container pins jax 0.4.37: ``jax.sharding.AxisType`` does not exist
+(0.5+), ``jax.make_mesh`` takes no ``axis_types`` kwarg, and ``hypothesis``
+is not installed.  ``launch/mesh.py`` and ``tests/_propcheck.py`` are the
+sanctioned compat shims — they carry inline justified suppressions, and
+everything else must route through them (so a future un-pin is a
+two-file change).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules.common import call_name, dotted_name
+
+
+@register
+class AxisTypePin(Rule):
+    id = "ECO501"
+    name = "axistype-pin"
+    description = ("direct jax.sharding.AxisType access — absent in the "
+                   "pinned jax 0.4.37; launch.mesh.make_mesh version-gates "
+                   "it via getattr")
+
+    def check(self, src):
+        for node in ast.walk(src.tree):
+            if (isinstance(node, ast.Attribute)
+                    and dotted_name(node) == "jax.sharding.AxisType"):
+                yield self.hit(node, src.path,
+                               "jax.sharding.AxisType does not exist in "
+                               "the pinned jax 0.4.37 — go through "
+                               "repro.launch.mesh.make_mesh")
+            elif (isinstance(node, ast.ImportFrom)
+                  and node.module == "jax.sharding"
+                  and any(a.name == "AxisType" for a in node.names)):
+                yield self.hit(node, src.path,
+                               "importing AxisType breaks on the pinned "
+                               "jax 0.4.37 — go through "
+                               "repro.launch.mesh.make_mesh")
+
+
+@register
+class BareMakeMesh(Rule):
+    id = "ECO502"
+    name = "bare-make-mesh"
+    description = ("bare jax.make_mesh call — repro.launch.mesh.make_mesh "
+                   "is the one call site that version-gates axis_types "
+                   "across the 0.4.37 pin")
+
+    def check(self, src):
+        for node in ast.walk(src.tree):
+            if (isinstance(node, ast.Call)
+                    and call_name(node) == "jax.make_mesh"):
+                yield self.hit(node, src.path,
+                               "bare jax.make_mesh(...) — call "
+                               "repro.launch.mesh.make_mesh so axis_types "
+                               "stays version-gated")
+            elif (isinstance(node, ast.ImportFrom)
+                  and node.module == "jax"
+                  and any(a.name == "make_mesh" for a in node.names)):
+                yield self.hit(node, src.path,
+                               "importing make_mesh from jax bypasses the "
+                               "version gate — use "
+                               "repro.launch.mesh.make_mesh")
+
+
+@register
+class HypothesisImport(Rule):
+    id = "ECO503"
+    name = "hypothesis-import"
+    description = ("direct hypothesis import — the container does not ship "
+                   "it; tests/_propcheck.py is the shim that falls back to "
+                   "the deterministic substitute")
+
+    def check(self, src):
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    root = alias.name.split(".", 1)[0]
+                    if root == "hypothesis":
+                        yield self.hit(node, src.path,
+                                       f"import {alias.name} fails where "
+                                       "hypothesis is absent — import the "
+                                       "tests/_propcheck.py shim instead")
+            elif (isinstance(node, ast.ImportFrom)
+                  and (node.module or "").split(".", 1)[0] == "hypothesis"):
+                yield self.hit(node, src.path,
+                               f"from {node.module} import ... fails "
+                               "where hypothesis is absent — import the "
+                               "tests/_propcheck.py shim instead")

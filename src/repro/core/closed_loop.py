@@ -151,6 +151,9 @@ def scan_stream(state: ProfileState, counts, measurements: StreamMeasurements,
         _scan_kernel = _scan_jit()
     counts = np.asarray(counts, np.int32)
     T = len(counts)
+    # repro-lint: disable=ECO201 -- eager pre-validation, not per-frame
+    # work: a jitted program cannot raise, so unprofiled groups must be
+    # rejected on the host BEFORE the scan is entered (documented above)
     for c in counts:
         group = group_of(int(c), group_rules)
         if group not in arrays.row_of:

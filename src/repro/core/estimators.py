@@ -81,7 +81,8 @@ class SSDFrontEndEstimator(Estimator):
 
     def estimate_batch(self, images):
         outs = self._run(self._params, np.asarray(images))
-        counts = np.asarray([int((s >= self._thr).sum()) for _, s, _ in outs])
+        counts = np.asarray([np.count_nonzero(s >= self._thr)
+                             for _, s, _ in outs])
         return counts, np.full(len(images), self._flops, np.float64)
 
 

@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.closed_loop import measurements_from_fleet
 from repro.core.estimators import Estimator
 from repro.core.metrics import MAPAccumulator
@@ -206,7 +208,7 @@ class Gateway:
                     # backend-detected counts only matter to an estimator
                     # that actually consumes feedback
                     if wants_feedback:
-                        detected.append(int((scores >= 0.5).sum()))
+                        detected.append(int(np.count_nonzero(scores >= 0.5)))
                     continue
                 obs = Observation(pair=d.pair, uid=served.request.uid)
                 if self.adapt:
@@ -219,7 +221,7 @@ class Gateway:
                     obs.time_ms, obs.energy_mwh = res.time_ms, res.energy_mwh
                 if self.estimator is not None:
                     # OB feedback: the count the BACKEND detected
-                    obs.detected_count = int((scores >= 0.5).sum())
+                    obs.detected_count = int(np.count_nonzero(scores >= 0.5))
                 if not obs.empty:
                     service.observe(obs)
             if folded and detected and self.estimator is not None:

@@ -1,0 +1,1 @@
+from .ops import attention  # noqa: F401

@@ -1,0 +1,1 @@
+from .ops import rglru, rglru_decode_step  # noqa: F401

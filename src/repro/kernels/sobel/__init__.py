@@ -1,0 +1,1 @@
+from .ops import sobel_grad  # noqa: F401

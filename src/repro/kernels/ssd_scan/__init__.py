@@ -1,0 +1,1 @@
+from .ops import ssd, ssd_decode_step  # noqa: F401

@@ -17,9 +17,11 @@ def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     auto axis types, so the kwarg is passed only when available."""
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
+        # repro-lint: disable=ECO502 -- THE sanctioned call site: this
+        # wrapper is the version gate every other module must go through
         return jax.make_mesh(tuple(shape), tuple(axes),
                              axis_types=(axis_type.Auto,) * len(axes))
-    return jax.make_mesh(tuple(shape), tuple(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes))  # repro-lint: disable=ECO502
 
 
 def make_production_mesh(*, multi_pod: bool = False):

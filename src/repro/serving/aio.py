@@ -87,6 +87,9 @@ class AsyncEcoreService:
             return self._bridge(self._svc.submit(req))
         except Exception as exc:
             afut: "asyncio.Future[Served]" = loop.create_future()
+            # repro-lint: disable=ECO302 -- submit_nowait runs ON the loop
+            # thread (get_running_loop above); only the cross-thread done-
+            # callback path must hop through _bridge's call_soon_threadsafe
             afut.set_exception(exc)
             return afut
 

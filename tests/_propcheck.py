@@ -12,8 +12,9 @@ Only the strategy subset this suite uses is implemented: ``integers``,
 from __future__ import annotations
 
 try:
-    from hypothesis import given, settings  # noqa: F401
-    import hypothesis.strategies as st      # noqa: F401
+    # the ONE sanctioned hypothesis import: this module IS the compat shim
+    from hypothesis import given, settings  # noqa: F401  # repro-lint: disable=ECO503
+    import hypothesis.strategies as st      # noqa: F401  # repro-lint: disable=ECO503
 except ImportError:
     import functools
     import inspect

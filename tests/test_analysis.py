@@ -1,0 +1,499 @@
+"""repro.analysis: per-rule good/bad fixtures + CLI surface.
+
+Every rule family gets at least one snippet it must flag and one it must
+not (the sanctioned idiom).  Fixtures are in-memory sources pushed through
+``check_source``/``check_sources`` with virtual paths, so each one chooses
+which plane it pretends to live in.  The CLI tests cover the acceptance
+surface: JSON schema stability, nonzero exit on violation, zero exit on
+the clean tree, and the suppression round-trip.
+
+Stdlib-only: nothing here imports jax.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import check_source, check_sources
+from repro.analysis.cli import main
+from repro.analysis.engine import match_path
+
+pytestmark = pytest.mark.analysis
+
+REPO = Path(__file__).resolve().parent.parent
+
+CORE = "src/repro/core/mod.py"
+SERVING = "src/repro/serving/mod.py"
+
+
+def rules_of(violations):
+    return [v.rule for v in violations]
+
+
+def src(text):
+    return textwrap.dedent(text)
+
+
+# ---------------------------------------------------------------- engine
+
+
+def test_match_path_anchors_relative_and_absolute():
+    assert match_path("src/repro/core/router.py", ("*/repro/core/*.py",))
+    assert match_path("/abs/src/repro/core/router.py",
+                      ("*/repro/core/*.py",))
+    assert not match_path("src/repro/serving/engine.py",
+                          ("*/repro/core/*.py",))
+
+
+def test_syntax_error_becomes_e001():
+    vs = check_source("def broken(:\n")
+    assert rules_of(vs) == ["E001"]
+    assert "syntax error" in vs[0].message
+
+
+# ------------------------------------------------- family 1: jit purity
+
+
+def test_eco101_flags_host_sync_in_jit_scope():
+    vs = check_source(src("""
+        import jax
+
+        @jax.jit
+        def f(x):
+            y = float(x)
+            z = x.item()
+            w = np.asarray(x)
+            return y + z + w
+    """), select=["ECO101"])
+    assert rules_of(vs) == ["ECO101", "ECO101", "ECO101"]
+
+
+def test_eco101_pure_function_names_are_jit_scopes():
+    vs = check_source(src("""
+        def decide_state(state, count):
+            return int(count)
+    """), select=["ECO101"])
+    assert rules_of(vs) == ["ECO101"]
+
+
+def test_eco101_clean_outside_jit_scope():
+    vs = check_source(src("""
+        def helper(x):
+            return float(x.sum())
+    """), select=["ECO101"])
+    assert vs == []
+
+
+def test_eco101_partial_jit_decorator_detected():
+    vs = check_source(src("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            return int(x) + n
+    """), select=["ECO101"])
+    assert rules_of(vs) == ["ECO101"]
+
+
+def test_eco102_flags_impure_calls_in_jit_scope():
+    vs = check_source(src("""
+        import jax, random, time
+
+        @jax.jit
+        def f(x):
+            print(x)
+            t = time.time()
+            r = random.random()
+            return x + t + r
+    """), select=["ECO102"])
+    assert rules_of(vs) == ["ECO102", "ECO102", "ECO102"]
+
+
+def test_eco103_flags_python_mutation_in_jit_scope():
+    vs = check_source(src("""
+        import jax
+
+        @jax.jit
+        def f(x, d, xs):
+            global g
+            d["k"] = 1
+            xs.append(x)
+            return x
+    """), select=["ECO103"])
+    assert rules_of(vs) == ["ECO103", "ECO103", "ECO103"]
+
+
+def test_eco103_at_updates_and_kernel_refs_are_sanctioned():
+    good = src("""
+        import jax
+
+        @jax.jit
+        def f(x, i):
+            return x.at[i].add(1)
+    """)
+    assert check_source(good, select=["ECO103"]) == []
+    # pallas kernels assign o_ref[...] by design: path-exempt
+    kernel = src("""
+        import jax
+
+        @jax.jit
+        def kernel(o_ref, x):
+            o_ref[...] = x
+    """)
+    assert check_source(kernel, path="src/repro/kernels/foo/foo.py",
+                        select=["ECO103"]) == []
+
+
+def test_eco110_flags_per_item_scalarization_in_loop():
+    vs = check_source(src("""
+        def f(items):
+            out = []
+            for s in items:
+                out.append(int((s >= 0.5).sum()))
+            return out
+    """), path=CORE, select=["ECO110"])
+    assert rules_of(vs) == ["ECO110"]
+
+
+def test_eco110_np_rooted_and_unlooped_reductions_are_fine():
+    vs = check_source(src("""
+        import numpy as np
+
+        def f(items, x):
+            out = [int(np.count_nonzero(s >= 0.5)) for s in items]
+            depths = [int(np.argmin(s)) for s in items]
+            total = int(x.sum())
+            return out, depths, total
+    """), path=CORE, select=["ECO110"])
+    assert vs == []
+
+
+# ------------------------------------------ family 2: hot-path discipline
+
+
+def test_eco201_flags_python_loop_in_hot_function():
+    vs = check_source(src("""
+        def route_batch(counts):
+            out = []
+            for c in counts:
+                out.append(c)
+            return out
+    """), path="src/repro/core/router.py", select=["ECO201"])
+    assert rules_of(vs) == ["ECO201"]
+
+
+def test_eco201_literal_unrolls_and_cold_functions_are_fine():
+    vs = check_source(src("""
+        def route_batch(x):
+            for name in ("a", "b"):
+                x += len(name)
+            return x
+
+        def cold_helper(xs):
+            for x in xs:
+                pass
+    """), path="src/repro/core/router.py", select=["ECO201"])
+    assert vs == []
+
+
+def test_eco202_flags_profile_facade_in_hot_module():
+    vs = check_source(src("""
+        def f(table, state):
+            table.observe("pair", 1, time_ms=2.0)
+            table.entries[0] = None
+            return table.load_state(state)
+    """), path="src/repro/core/closed_loop.py", select=["ECO202"])
+    assert rules_of(vs) == ["ECO202", "ECO202", "ECO202"]
+
+
+def test_eco203_flags_serve_batch_outside_dispatch_plane():
+    snippet = "def f(be, reqs):\n    return be.serve_batch(reqs)\n"
+    assert rules_of(check_source(snippet, path="src/repro/core/driver.py",
+                                 select=["ECO203"])) == ["ECO203"]
+    # the dispatch plane itself and tests/ are sanctioned
+    assert check_source(snippet, path="src/repro/serving/engine.py",
+                        select=["ECO203"]) == []
+    assert check_source(snippet, path="tests/test_x.py",
+                        select=["ECO203"]) == []
+
+
+# ------------------------------------------- family 3: thread/async safety
+
+
+def test_eco301_flags_blocking_calls_under_lock():
+    vs = check_source(src("""
+        import time
+
+        def f(self, fut):
+            with self._lock:
+                r = fut.result()
+                time.sleep(0.1)
+            return r
+    """), path=SERVING, select=["ECO301"])
+    assert rules_of(vs) == ["ECO301", "ECO301"]
+
+
+def test_eco301_condition_wait_is_sanctioned():
+    vs = check_source(src("""
+        def f(self):
+            with self._cond:
+                self._cond.wait(0.5)
+    """), path=SERVING, select=["ECO301"])
+    assert vs == []
+
+
+def test_eco302_flags_future_completion_off_loop():
+    vs = check_source(src("""
+        def f(loop):
+            afut = loop.create_future()
+            afut.set_result(1)
+            return afut
+    """), path=SERVING, select=["ECO302"])
+    assert rules_of(vs) == ["ECO302"]
+
+
+def test_eco302_call_soon_threadsafe_callback_is_sanctioned():
+    vs = check_source(src("""
+        def bridge(loop, cfut):
+            afut = loop.create_future()
+
+            def _copy():
+                afut.set_result(cfut.result())
+
+            loop.call_soon_threadsafe(_copy)
+            return afut
+    """), path=SERVING, select=["ECO302"])
+    assert vs == []
+
+
+def test_eco303_flags_blind_except_shapes():
+    vs = check_source(src("""
+        def f():
+            try:
+                g()
+            except:
+                h()
+            try:
+                g()
+            except BaseException:
+                h()
+            try:
+                g()
+            except ValueError:
+                pass
+    """), path=SERVING, select=["ECO303"])
+    assert rules_of(vs) == ["ECO303", "ECO303", "ECO303"]
+    good = src("""
+        def f(log):
+            try:
+                g()
+            except Exception as exc:
+                log(exc)
+    """)
+    assert check_source(good, path=SERVING, select=["ECO303"]) == []
+
+
+# ---------------------------------------------- family 4: kernel contract
+
+
+def _kernel_files(**overrides):
+    files = {
+        "src/repro/kernels/foo/__init__.py": "from .ops import foo\n",
+        "src/repro/kernels/foo/ops.py": "def foo(x):\n    return x\n",
+        "src/repro/kernels/foo/ref.py": "import jax.numpy as jnp\n",
+        "tests/test_foo.py": "import repro.kernels.foo\n",
+    }
+    files.update(overrides)
+    return {k: v for k, v in files.items() if v is not None}
+
+
+def test_eco4xx_complete_kernel_package_is_clean():
+    report = check_sources(_kernel_files(), select=["ECO4"])
+    assert report.violations == []
+
+
+def test_eco401_missing_init():
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/__init__.py": None}),
+        select=["ECO401"])
+    assert rules_of(report.violations) == ["ECO401"]
+    assert report.violations[0].path.endswith("foo/__init__.py")
+
+
+def test_eco402_missing_ref():
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/ref.py": None}),
+        select=["ECO402"])
+    assert rules_of(report.violations) == ["ECO402"]
+    assert "ref.py" in report.violations[0].message
+
+
+def test_eco403_kernel_without_parity_test():
+    report = check_sources(
+        _kernel_files(**{"tests/test_foo.py": "import repro.core\n"}),
+        select=["ECO403"])
+    assert rules_of(report.violations) == ["ECO403"]
+    # no tests collected at all -> nothing to assert, no violation
+    report = check_sources(
+        _kernel_files(**{"tests/test_foo.py": None}), select=["ECO403"])
+    assert report.violations == []
+
+
+def test_eco404_oracle_importing_pallas():
+    ref = "from jax.experimental import pallas as pl\n"
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/ref.py": ref}),
+        select=["ECO404"])
+    assert rules_of(report.violations) == ["ECO404"]
+
+
+# --------------------------------------------- family 5: environment pins
+
+
+def test_eco501_axistype_access_and_import():
+    vs = check_source(src("""
+        import jax
+        from jax.sharding import AxisType
+
+        def f():
+            return jax.sharding.AxisType.Auto
+    """), select=["ECO501"])
+    assert rules_of(vs) == ["ECO501", "ECO501"]
+    # the version-gated getattr idiom is the sanctioned form
+    good = "import jax\nx = getattr(jax.sharding, 'AxisType', None)\n"
+    assert check_source(good, select=["ECO501"]) == []
+
+
+def test_eco502_bare_make_mesh():
+    vs = check_source(src("""
+        import jax
+        from jax import make_mesh
+
+        def f():
+            return jax.make_mesh((1,), ("x",))
+    """), select=["ECO502"])
+    assert rules_of(vs) == ["ECO502", "ECO502"]
+
+
+def test_eco503_hypothesis_imports():
+    vs = check_source(src("""
+        import hypothesis
+        import hypothesis.strategies as st
+        from hypothesis import given
+    """), select=["ECO503"])
+    assert rules_of(vs) == ["ECO503", "ECO503", "ECO503"]
+
+
+# ------------------------------------------------------------ suppressions
+
+
+def test_suppression_inline_and_standalone_roundtrip():
+    bad = "from hypothesis import given\n"
+    assert rules_of(check_source(bad, select=["ECO503"])) == ["ECO503"]
+
+    inline = "from hypothesis import given  # repro-lint: disable=ECO503\n"
+    report = check_sources({"x.py": inline}, select=["ECO503"])
+    assert report.violations == [] and report.suppressed == 1
+
+    standalone = src("""
+        # repro-lint: disable=ECO503 -- exercising the shim fallback;
+        # a justification block may run on before the flagged line
+        from hypothesis import given
+    """)
+    report = check_sources({"x.py": standalone}, select=["ECO503"])
+    assert report.violations == [] and report.suppressed == 1
+
+
+def test_suppression_is_per_rule_and_file_wide_forms():
+    # suppressing a DIFFERENT rule must not hide the finding
+    wrong = "from hypothesis import given  # repro-lint: disable=ECO502\n"
+    assert rules_of(check_source(wrong, select=["ECO503"])) == ["ECO503"]
+
+    file_wide = ("# repro-lint: disable-file=ECO503\n"
+                 "from hypothesis import given\n"
+                 "import hypothesis\n")
+    report = check_sources({"x.py": file_wide}, select=["ECO503"])
+    assert report.violations == [] and report.suppressed == 2
+
+
+# -------------------------------------------------------------------- CLI
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return p
+
+
+def test_cli_nonzero_exit_and_text_output(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", "from hypothesis import given\n")
+    assert main([str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "ECO503" in out and "bad.py:1:" in out
+
+
+def test_cli_zero_exit_on_clean_file(tmp_path, capsys):
+    clean = _write(tmp_path, "clean.py", "x = 1\n")
+    assert main([str(clean)]) == 0
+    assert "0 violations" in capsys.readouterr().out
+
+
+def test_cli_json_schema(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", "from hypothesis import given\n")
+    assert main([str(bad), "--format", "json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert set(doc) == {"version", "files", "rules", "violations",
+                        "counts", "suppressed"}
+    assert doc["version"] == 1
+    assert doc["files"] == 1
+    assert doc["counts"] == {"ECO503": 1}
+    assert doc["suppressed"] == 0
+    (v,) = doc["violations"]
+    assert set(v) == {"rule", "path", "line", "col", "message"}
+    assert (v["rule"], v["line"]) == ("ECO503", 1)
+
+
+def test_cli_suppression_roundtrip(tmp_path, capsys):
+    _write(tmp_path, "bad.py",
+           "from hypothesis import given  # repro-lint: disable=ECO503\n")
+    assert main([str(tmp_path), "--format", "json"]) == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["violations"] == [] and doc["suppressed"] == 1
+
+
+def test_cli_select_and_ignore(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", "from hypothesis import given\n")
+    assert main([str(bad), "--select", "ECO1"]) == 0
+    capsys.readouterr()
+    assert main([str(bad), "--ignore", "ECO503"]) == 0
+    capsys.readouterr()
+    assert main([str(bad), "--select", "ECO5"]) == 1
+    capsys.readouterr()
+
+
+def test_cli_list_rules_and_usage_errors(tmp_path, capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for family_rep in ("ECO101", "ECO201", "ECO301", "ECO401", "ECO501"):
+        assert family_rep in out
+    assert main([str(tmp_path / "nope")]) == 2
+
+
+def test_cli_clean_on_this_repo(capsys):
+    """The acceptance gate, in-process: the final tree lints clean."""
+    paths = [str(REPO / d) for d in ("src", "tests", "benchmarks",
+                                     "examples") if (REPO / d).exists()]
+    assert main(paths) == 0, capsys.readouterr().out
+
+
+def test_module_entrypoint_subprocess(tmp_path):
+    """``python -m repro.analysis`` works and exit codes propagate."""
+    bad = _write(tmp_path, "bad.py", "import jax\nx = jax.make_mesh((1,))\n")
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    r = subprocess.run([sys.executable, "-m", "repro.analysis", str(bad)],
+                       capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode == 1, r.stderr
+    assert "ECO502" in r.stdout
