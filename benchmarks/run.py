@@ -319,11 +319,13 @@ def bench_serve(quick=False):
     the p50/p95 queue wait a request pays for batching under the threaded
     deadline-bounded flusher.  Appended to BENCH_gateway.json.
 
-    Queue wait is measured submit -> own-flush START (the serve itself is
-    excluded); on this CPU container it is dominated by waiting behind
-    OTHER flushes (first-batch jit compiles serialize under the service
-    lock), not by the max_wait_ms deadline — expect it to collapse on a
-    TPU pod where serve_batch is sub-ms."""
+    Two separated latency planes (the service accounts them apart): queue
+    wait is submit -> flush TRIGGERED (deadline expiry / full batch —
+    bounded by max_wait_ms under a healthy flusher), service time is
+    trigger -> completion (waiting behind other flushes under the service
+    lock + the serve itself).  On this CPU container service time is
+    dominated by first-batch jit compiles and collapses on a TPU pod;
+    queue wait genuinely tracks the deadline."""
     from repro.configs import get_config
     from repro.core.policy import PoolPolicy, RouteRequest
     from repro.launch.serve import PROMPT_CAP, synthetic_pool_table
@@ -361,9 +363,14 @@ def bench_serve(quick=False):
     finally:
         service.close()
     assert len(served) == n
-    waits = sorted(stats["queue_wait_ms"])
-    p50 = waits[len(waits) // 2]
-    p95 = waits[min(int(len(waits) * 0.95), len(waits) - 1)]
+
+    def pcts(xs):
+        xs = sorted(xs)
+        return (xs[len(xs) // 2],
+                xs[min(int(len(xs) * 0.95), len(xs) - 1)])
+
+    wait_p50, wait_p95 = pcts(stats["queue_wait_ms"])
+    svc_p50, svc_p95 = pcts(stats["service_ms"])
     row = {"serve": {
         "requests": n,
         "backends": stats["backends"],
@@ -371,8 +378,10 @@ def bench_serve(quick=False):
         "serve_calls": stats["serve_calls"],
         "deadline_flushes": stats["deadline_flushes"],
         "max_wait_ms": max_wait_ms,
-        "queue_wait_p50_ms": p50,
-        "queue_wait_p95_ms": p95,
+        "queue_wait_p50_ms": wait_p50,
+        "queue_wait_p95_ms": wait_p95,
+        "service_p50_ms": svc_p50,
+        "service_p95_ms": svc_p95,
     }}
     print("\n== serve (EcoreService end-to-end) ==")
     print("metric,value")
@@ -467,6 +476,105 @@ def bench_cluster(quick=False):
     }}
     _append_gateway_bench(record)
     _save("cluster", record)
+    return record
+
+
+# ------------------------------------------------- fault storm resilience
+
+def bench_faults(quick=False):
+    """Goodput under an injected fault storm: error + stall + crash-window
+    faults on the fleet's favorite device, resilient service (deadline +
+    retry + hedged re-dispatch) vs the bare EcoreService baseline.
+
+    Everything is deterministic — faults key on request uid, retry jitter
+    on (uid, attempt), backoff runs on a manual clock — so the goodput/
+    availability numbers are exactly reproducible run to run.  Appended to
+    BENCH_gateway.json."""
+    from repro.core.policy import DetectionPolicy, RouteRequest
+    from repro.core.router import OracleRouter
+    from repro.detection.devices import nominal_profile_table
+    from repro.serving.backend import make_backend, null_run
+    from repro.serving.faults import FaultSpec
+    from repro.serving.resilience import ResilientService, RetryPolicy
+    from repro.serving.service import EcoreService
+
+    n = 120 if quick else 400
+    deadline_ms = 500.0
+    storm_device = "orin_nano"   # the zero-fault energy favorite
+    storm = [FaultSpec("error", rate=0.4, seed=3),
+             FaultSpec("stall", rate=0.3, seed=5, stall_ms=10_000.0),
+             FaultSpec("crash_window", start=n // 2, end=n // 2 + n // 5)]
+
+    def factory(decision):
+        model, device = decision.pair
+        return make_backend(
+            "faulty:detector", model, device, max_batch=4, run_fn=null_run,
+            faults=storm if device == storm_device else [])
+
+    rng = np.random.default_rng(1)
+    reqs = [RouteRequest(uid=u, payload=np.zeros((4, 4), np.float32),
+                         true_complexity=int(rng.integers(1, 20)))
+            for u in range(n)]
+
+    def episode(resilient):
+        table = nominal_profile_table()
+        policy = DetectionPolicy(OracleRouter(table, 2.0), table)
+        clock = time.monotonic
+        if resilient:
+            svc = ResilientService(
+                policy, factory, clock=clock,
+                retry=RetryPolicy(deadline_ms=deadline_ms, max_retries=3))
+        else:
+            svc = EcoreService(policy, factory, clock=clock,
+                               retain_results=False, buffer_errors=False)
+        futs, failed = [], 0
+        t0 = time.perf_counter()
+        for r in reqs:
+            try:
+                futs.append(svc.submit(r))
+            except Exception:   # bare service: inline flush error raises
+                failed += 1
+        try:
+            svc.drain()
+        except Exception:
+            pass
+        good = 0
+        for f in futs:
+            if f.exception() is not None:
+                failed += 1
+                continue
+            t_ms = f.result().result.time_ms
+            if t_ms is not None and np.isfinite(t_ms) and t_ms <= deadline_ms:
+                good += 1
+        wall_s = time.perf_counter() - t0
+        stats = svc.stats() if resilient else {}
+        svc.close()
+        return {"goodput_under_deadline": good / n,
+                "availability": (n - failed) / n,
+                "failed": failed,
+                "wall_s": wall_s,
+                "retries": stats.get("retries", 0),
+                "hedges": stats.get("hedges", 0),
+                "deadline_misses": stats.get("deadline_misses", 0)}
+
+    resilient = episode(resilient=True)
+    baseline = episode(resilient=False)
+    print("\n== faults (storm: error+stall+crash on the favorite device) ==")
+    print("service,goodput_under_deadline,availability,retries,hedges,"
+          "deadline_misses")
+    for name, r in (("resilient", resilient), ("baseline", baseline)):
+        print(f"{name},{r['goodput_under_deadline']:.3f},"
+              f"{r['availability']:.3f},{r['retries']},{r['hedges']},"
+              f"{r['deadline_misses']}")
+    record = {"faults": {
+        "requests": n,
+        "deadline_ms": deadline_ms,
+        "storm_device": storm_device,
+        "resilient": resilient,
+        "baseline": baseline,
+    }}
+    _append_gateway_bench(record)
+    _save("faults", record)
     return record
 
 
@@ -651,6 +759,7 @@ BENCHES = {
     "overhead": bench_overhead,
     "serve": bench_serve,
     "cluster": bench_cluster,
+    "faults": bench_faults,
     "kernels": bench_kernels,
     "pool_routing": bench_pool_routing,
     "roofline": bench_roofline,

@@ -1,11 +1,12 @@
-"""Family 3 — serving thread/async safety (ECO301/302/303).
+"""Family 3 — serving thread/async safety (ECO301/302/303/304).
 
 The serving plane runs a background flusher thread plus caller threads
-plus (behind the asyncio facade) an event loop.  The three historical
-failure shapes: blocking while holding the service lock (stalls every
-submitter), completing an asyncio future from a foreign thread (corrupts
-loop state), and blind exception handlers that let the flusher die
-silently.
+plus (behind the asyncio facade) an event loop.  The historical failure
+shapes: blocking while holding the service lock (stalls every submitter),
+completing an asyncio future from a foreign thread (corrupts loop state),
+blind exception handlers that let the flusher die silently, and wall-clock
+sleeps / unbounded spin loops that bypass the injectable clock the whole
+fault plane is tested against.
 """
 from __future__ import annotations
 
@@ -151,3 +152,64 @@ class BlindExcept(Rule):
                                "exception silently dropped (pass-only "
                                "handler) — record it or re-raise so "
                                "serving failures stay observable")
+
+
+@register
+class WallClockRetry(Rule):
+    id = "ECO304"
+    name = "wall-clock-retry"
+    description = ("time.sleep or an unbounded ``while True`` loop in the "
+                   "serving plane bypasses the injectable clock — retries "
+                   "and backoff must condition-wait on the clock the fault "
+                   "tests control, and every spin loop needs an exit")
+    include = ("*/repro/serving/*.py",)
+
+    def check(self, src):
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call) and self._is_sleep(node):
+                yield self.hit(node, src.path,
+                               "wall-clock sleep in the serving plane — "
+                               "backoff/polling must ride the injectable "
+                               "clock (Condition.wait with a timeout "
+                               "derived from it), or fault tests that "
+                               "drive a fake clock hang for real seconds")
+            elif (isinstance(node, ast.While)
+                    and isinstance(node.test, ast.Constant)
+                    and node.test.value is True
+                    and not self._has_exit(node)):
+                yield self.hit(node, src.path,
+                               "while True with no break/return — an "
+                               "unbounded retry/poll loop cannot be "
+                               "drained or closed; bound it (attempt "
+                               "budget, _closed flag, or an explicit "
+                               "break on the empty condition)")
+
+    @staticmethod
+    def _is_sleep(call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id == "sleep"
+        return isinstance(f, ast.Attribute) and dotted_name(f) == "time.sleep"
+
+    @staticmethod
+    def _has_exit(loop) -> bool:
+        """break/return anywhere in the loop body, not counting nested
+        functions (their control flow cannot exit THIS loop) or nested
+        loops' own breaks (a break there exits the inner loop only)."""
+        stack = list(loop.body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Break, ast.Return)):
+                return True
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue
+            if isinstance(node, (ast.While, ast.For)):
+                # the inner loop's orelse runs in OUR scope; its body's
+                # breaks do not — but a return inside still exits us
+                stack.extend(node.orelse)
+                stack.extend(n for b in node.body for n in ast.walk(b)
+                             if isinstance(n, ast.Return))
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+        return False

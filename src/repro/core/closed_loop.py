@@ -32,7 +32,8 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from .groups import DEFAULT_GROUP_RULES, group_of
-from .profiles import ProfileArrays, ProfileState, observe_state
+from .profiles import (ProfileArrays, ProfileState, observe_state,
+                       probe_state, quarantine_state, with_fails)
 from .router import decide_state, rules_arrays
 
 
@@ -45,6 +46,13 @@ class StreamMeasurements:
     measured serving step t (a drifting fleet's cost is a function of
     (device, step) only).  ``map_pct`` is optional ([T, n_pairs] or None);
     NaN cells mean "no measurement" — the scan's observe skips them.
+
+    An INF ``time_ms`` cell is the failure sentinel: the pair did not
+    answer at step t (hard dropout — ``DriftingFleet.cost_profile`` emits
+    it for ``DriftEvent(hard=True)`` windows).  A failed step folds NO
+    measurement into the EWMA and instead bumps the routed cell's
+    quarantine counter (``quarantine_state``), so the breaker opens after
+    ``quarantine_after`` consecutive failures.
     """
     time_ms: np.ndarray
     energy_mwh: np.ndarray
@@ -102,19 +110,31 @@ def _scan_jit():
 
     @jax.jit
     def kernel(state, counts, t_meas, e_meas, m_meas, explore,
-               lo, hi, rule_rows, col_of_pair, delta, alpha):
+               lo, hi, rule_rows, col_of_pair, delta, alpha, quarantine):
         def step(st, xs):
             count, t_row, e_row, m_row, expl = xs
-            g, col, _ = decide_state(st, count, delta, lo, hi, rule_rows)
+            g, col, _ = decide_state(st, count, delta, lo, hi, rule_rows,
+                                     quarantine_after=quarantine)
             pair = st.pair_id[g, col]
             # round-robin exploration override (expl = -1: router's pick);
             # the explored pair's column within this group row maps the
-            # decision back to an entry (-1 when the pair has no row here)
+            # decision back to an entry (-1 when the pair has no row here).
+            # Under quarantine this IS the half-open probe: the override
+            # serves an OPEN pair the breaker would have excluded.
             pair = jnp.where(expl >= 0, expl, pair)
             col = jnp.where(expl >= 0, col_of_pair[g, pair], col)
+            # inf time = the pair did not answer: no EWMA evidence, one
+            # more consecutive failure at the routed cell
+            failed = jnp.isinf(t_row[pair])
+            nan = jnp.float32(jnp.nan)
             st = observe_state(st, pair, g,
-                               time_ms=t_row[pair], energy_mwh=e_row[pair],
-                               map_pct=m_row[pair], alpha=alpha)
+                               time_ms=jnp.where(failed, nan, t_row[pair]),
+                               energy_mwh=jnp.where(failed, nan,
+                                                    e_row[pair]),
+                               map_pct=jnp.where(failed, nan, m_row[pair]),
+                               alpha=alpha)
+            st = quarantine_state(st, pair, g, failed)
+            st = probe_state(st, pair, (expl >= 0) & ~failed)
             return st, (g, col, pair)
         return jax.lax.scan(step, state,
                             (counts, t_meas, e_meas, m_meas, explore))
@@ -125,7 +145,8 @@ def _scan_jit():
 def scan_stream(state: ProfileState, counts, measurements: StreamMeasurements,
                 *, arrays: ProfileArrays, delta: float, alpha: float = 0.1,
                 group_rules: Sequence = DEFAULT_GROUP_RULES,
-                explore_pairs=None) -> Tuple[ProfileState, ScanDecisions]:
+                explore_pairs=None, quarantine_after: Optional[int] = None
+                ) -> Tuple[ProfileState, ScanDecisions]:
     """Run estimate->route->observe for a whole frame sequence inside one
     jitted ``lax.scan``; returns the final state and the routing trace.
 
@@ -141,6 +162,15 @@ def scan_stream(state: ProfileState, counts, measurements: StreamMeasurements,
     [T] int32, -1 = no override) serves step t on that pair index instead
     of the router's pick — the deterministic round-robin schedule
     ``DetectionPolicy`` uses for post-transient recovery.
+
+    ``quarantine_after`` (optional) arms the per-(group, pair) circuit
+    breaker: after that many CONSECUTIVE failed steps (inf ``time_ms``
+    sentinel in the measurements) the cell is excluded from routing until
+    an ``explore_pairs`` probe of the pair succeeds (half-open recovery
+    riding the existing schedule).  Off (None) it compiles to a threshold
+    no counter reaches — decisions stay bit-identical to the
+    pre-quarantine kernel, so zero-fault parity with the scalar loop is
+    structural, not coincidental.
 
     Raises the scalar path's ``ValueError`` when any count lands in an
     unprofiled group (checked eagerly — a jitted program cannot raise).
@@ -177,12 +207,15 @@ def scan_stream(state: ProfileState, counts, measurements: StreamMeasurements,
     explore = (np.full(T, -1, np.int32) if explore_pairs is None
                else np.asarray(explore_pairs, np.int32))
     lo, hi, rule_rows = rules_arrays(group_rules, arrays.row_of)
+    # one kernel for both modes: "off" is a threshold no counter reaches
+    quarantine = (np.iinfo(np.int32).max if quarantine_after is None
+                  else int(quarantine_after))
     state, (g, col, pair) = _scan_kernel(
-        state, jnp.asarray(counts), jnp.asarray(t_meas), jnp.asarray(e_meas),
-        jnp.asarray(m_meas), jnp.asarray(explore), jnp.asarray(lo),
-        jnp.asarray(hi), jnp.asarray(rule_rows),
+        with_fails(state), jnp.asarray(counts), jnp.asarray(t_meas),
+        jnp.asarray(e_meas), jnp.asarray(m_meas), jnp.asarray(explore),
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(rule_rows),
         jnp.asarray(arrays.col_of_pair), jnp.float32(delta),
-        jnp.float32(alpha))
+        jnp.float32(alpha), jnp.int32(quarantine))
     g, col, pair = np.asarray(g), np.asarray(col), np.asarray(pair)
     entry_idx = np.where(col >= 0, arrays.entry_index[g, np.maximum(col, 0)],
                          -1).astype(np.int32)

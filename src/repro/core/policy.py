@@ -134,7 +134,8 @@ class DetectionPolicy:
                  estimator: Optional[Estimator] = None, *,
                  adapt: bool = False, alpha: float = 0.1,
                  explore_every: int = 0, adapt_map: bool = False,
-                 batch_routing: bool = True):
+                 batch_routing: bool = True,
+                 quarantine_after: Optional[int] = None):
         self.router = router
         self.table = table
         self.estimator = estimator
@@ -143,6 +144,10 @@ class DetectionPolicy:
         self.explore_every = explore_every
         self.adapt_map = adapt_map
         self.batch_routing = batch_routing
+        #: circuit-breaker threshold for the scanned closed loop: after this
+        #: many consecutive failed steps on a (group, pair) cell the scan
+        #: quarantines it (None = off); half-open probes ride explore_every
+        self.quarantine_after = quarantine_after
         self._step = 0
         if adapt and getattr(router, "table", None) is not table:
             raise ValueError(
@@ -232,7 +237,8 @@ class DetectionPolicy:
         state, trace = scan_stream(
             arrays.state, routing, measurements, arrays=arrays,
             delta=self.router.delta, alpha=self.alpha,
-            group_rules=self.rules, explore_pairs=explore)
+            group_rules=self.rules, explore_pairs=explore,
+            quarantine_after=self.quarantine_after)
         self.table.load_state(state)
         out = []
         for t, req in enumerate(reqs):
@@ -307,13 +313,22 @@ class DetectionPolicy:
     def observe(self, obs: Observation) -> None:
         """Fold runtime measurements into the profile: latency/energy are
         group-independent (every row of the pair moves), detection quality
-        is per-group; a backend-detected count feeds the estimator (OB)."""
+        is per-group; a backend-detected count feeds the estimator (OB).
+
+        Non-finite latency/energy (the fault plane's did-not-answer
+        sentinel) is NOT evidence about the pair's cost and is dropped here
+        — one inf folded into the EWMA would poison the profile forever;
+        failures reroute traffic through the resilience/quarantine planes
+        instead."""
         if obs.detected_count is not None and self.estimator is not None:
             self.estimator.observe(int(obs.detected_count))
-        if obs.time_ms is not None or obs.energy_mwh is not None:
-            self.table.observe_pair(obs.pair, time_ms=obs.time_ms,
-                                    energy_mwh=obs.energy_mwh,
-                                    alpha=self.alpha)
+        t_ms = obs.time_ms if (obs.time_ms is None
+                               or np.isfinite(obs.time_ms)) else None
+        e_mwh = obs.energy_mwh if (obs.energy_mwh is None
+                                   or np.isfinite(obs.energy_mwh)) else None
+        if t_ms is not None or e_mwh is not None:
+            self.table.observe_pair(obs.pair, time_ms=t_ms,
+                                    energy_mwh=e_mwh, alpha=self.alpha)
         if obs.map_pct is not None:
             group = obs.group
             if group is None:

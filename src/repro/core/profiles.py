@@ -59,12 +59,22 @@ class ProfileState(NamedTuple):
     Static identity (group labels, entry names, the entry_index map back
     into ``ProfileTable.entries``) lives on the ``ProfileArrays`` snapshot,
     NOT here: state is pure numbers, metadata never enters the jit.
+
+    ``fails`` is the quarantine plane: consecutive failed attempts per
+    (group, pair) cell — the circuit-breaker counter ``quarantine_state``
+    increments on a failed observation and ``probe_state`` clears on a
+    successful half-open probe.  ``decide_state(quarantine_after=K)``
+    excludes cells with ``fails >= K`` from the feasible set (breaker OPEN),
+    falling back to the unquarantined mask when a whole group would be
+    masked out.  All zeros = every breaker CLOSED, decisions identical to a
+    state without the field (exact-parity invariant, tested).
     """
     map_pct: object      # jnp [G, P] f32
     time_ms: object      # jnp [G, P] f32
     energy_mwh: object   # jnp [G, P] f32
     valid: object        # jnp [G, P] bool
     pair_id: object      # jnp [G, P] int32; -1 on pads
+    fails: object = None  # jnp [G, P] int32 consecutive failures; None = off
 
 
 def observe_state(state: ProfileState, pair_idx, group_row, *,
@@ -96,6 +106,48 @@ def observe_state(state: ProfileState, pair_idx, group_row, *,
         time_ms=fold(state.time_ms, time_ms, pair_mask),
         energy_mwh=fold(state.energy_mwh, energy_mwh, pair_mask),
         map_pct=fold(state.map_pct, map_pct, cell_mask))
+
+
+def with_fails(state: ProfileState) -> ProfileState:
+    """State with the quarantine counter materialized (all breakers
+    CLOSED); identity when ``fails`` is already an array."""
+    import jax.numpy as jnp
+    if state.fails is not None:
+        return state
+    return state._replace(fails=jnp.zeros(jnp.shape(state.pair_id),
+                                          jnp.int32))
+
+
+def quarantine_state(state: ProfileState, pair_idx, group_row,
+                     failed) -> ProfileState:
+    """Pure circuit-breaker fold of ONE attempt outcome at the routed
+    (group, pair) cell: a failure increments the cell's consecutive-failure
+    count, a success resets it to zero (breaker closes).  ``failed`` may be
+    a traced bool — jit/scan-safe, the quarantine twin of
+    ``observe_state``."""
+    import jax
+    import jax.numpy as jnp
+    state = with_fails(state)
+    pair_mask = state.pair_id == jnp.int32(pair_idx)
+    rows = jax.lax.broadcasted_iota(jnp.int32, state.pair_id.shape, 0)
+    cell = pair_mask & (rows == jnp.int32(group_row))
+    upd = jnp.where(failed, state.fails + 1, jnp.int32(0))
+    return state._replace(fails=jnp.where(cell, upd, state.fails))
+
+
+def probe_state(state: ProfileState, pair_idx, success) -> ProfileState:
+    """Pure half-open-probe fold: a SUCCESSFUL probe of ``pair_idx`` closes
+    the breaker on EVERY group row of the pair (the device answered — like
+    latency/energy, reachability is group-independent evidence); a failed
+    probe (``success`` False) is the identity — the per-cell count already
+    moved through ``quarantine_state``.  The scanned closed loop applies
+    this on its ``explore_every`` steps, which is how an OPEN breaker gets
+    its half-open recovery path without leaving the ``lax.scan``."""
+    import jax.numpy as jnp
+    state = with_fails(state)
+    pair_mask = state.pair_id == jnp.int32(pair_idx)
+    return state._replace(
+        fails=jnp.where(pair_mask & success, jnp.int32(0), state.fails))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -203,7 +255,8 @@ class ProfileTable:
         state = ProfileState(
             map_pct=jnp.asarray(map_pct), time_ms=jnp.asarray(time_ms),
             energy_mwh=jnp.asarray(energy), valid=jnp.asarray(valid),
-            pair_id=jnp.asarray(pair_id))
+            pair_id=jnp.asarray(pair_id),
+            fails=jnp.zeros((G, P), jnp.int32))
         self._arrays = ProfileArrays(
             groups=tuple(groups), row_of=row_of, pairs=pairs, state=state,
             entry_index=entry_index, col_of_pair=col_of_pair,

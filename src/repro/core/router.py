@@ -69,9 +69,28 @@ def greedy_route(number_of_objects: int, profiling_data: ProfileTable,
     return min(refined, key=lambda e: e.energy_mwh)         # lines 14-15
 
 
+def runner_up_route(number_of_objects: int, profiling_data: ProfileTable,
+                    delta_map: float, exclude: Sequence[Pair],
+                    group_rules: Sequence = DEFAULT_GROUP_RULES
+                    ) -> Optional[ProfileEntry]:
+    """Algorithm 1's NEXT pick: the argmin-energy entry of the feasible set
+    with the ``exclude``d pairs removed — what hedged re-dispatch routes to
+    when the primary pick's device fails (``serving.resilience``).  Same
+    masked ranking as lines 14-15, so the runner-up of an empty exclusion
+    IS the greedy pick; returns None when every feasible pair is excluded
+    (nothing left to hedge onto)."""
+    excluded = set(exclude)
+    refined = [e for e in feasible_for_count(number_of_objects,
+                                             profiling_data, delta_map,
+                                             group_rules)
+               if e.pair not in excluded]
+    return min(refined, key=lambda e: e.energy_mwh) if refined else None
+
+
 # ------------------------------------------------------- tensorized routing
 
-def decide_state(state: ProfileState, count, delta, lo, hi, rule_rows):
+def decide_state(state: ProfileState, count, delta, lo, hi, rule_rows,
+                 quarantine_after=None):
     """Algorithm 1 for ONE count against a ``ProfileState`` — pure and
     jit/scan-safe, the routing step ``core.closed_loop.scan_stream`` folds
     into its ``lax.scan`` body (and, vmapped, the whole ``route_batch``
@@ -82,6 +101,15 @@ def decide_state(state: ProfileState, count, delta, lo, hi, rule_rows):
     count landed in (-1 = unprofiled group), the masked-argmin column
     (lines 14-15; ties break like the scalar ``min`` because rows keep
     table order), and whether the feasible set was non-empty.
+
+    ``quarantine_after`` (static; None = off) is the circuit-breaker
+    threshold: cells whose ``state.fails`` count has reached it (breaker
+    OPEN) are excluded from both the mAP_max scan and the feasible set —
+    a dead device must stop receiving traffic IMMEDIATELY, not after the
+    EWMA drifts.  The breaker fails OPEN-loop-safe: when every pair of the
+    group is quarantined, the unquarantined mask is restored (serving the
+    least-bad pair beats serving nobody).  With all-zero ``fails`` the
+    decision is bit-identical to the unquarantined path (parity-tested).
     """
     import jax.numpy as jnp
     m = (count >= lo) & (count <= hi)                       # lines 1-7
@@ -89,8 +117,14 @@ def decide_state(state: ProfileState, count, delta, lo, hi, rule_rows):
     g = rule_rows[rule]                                     # lines 8-9
     g_safe = jnp.maximum(g, 0)
     gm = state.map_pct[g_safe]                              # [P]
-    max_map = jnp.max(gm)                                   # line 10 (pads=-inf)
-    feasible = state.valid[g_safe] & (gm >= max_map - delta)  # lines 11-13
+    v = state.valid[g_safe]
+    if quarantine_after is not None:
+        qv = v & (state.fails[g_safe] < jnp.int32(quarantine_after))
+        v = jnp.where(qv.any(), qv, v)      # fail open, never route to void
+        max_map = jnp.max(jnp.where(v, gm, -jnp.inf))       # line 10
+    else:
+        max_map = jnp.max(gm)               # line 10 (pads already -inf)
+    feasible = v & (gm >= max_map - delta)                  # lines 11-13
     e = jnp.where(feasible, state.energy_mwh[g_safe], jnp.inf)
     col = jnp.argmin(e)                                     # lines 14-15
     return g, col, feasible.any()

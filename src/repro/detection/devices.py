@@ -87,6 +87,20 @@ def nominal_profile_table(pairs: Sequence[Tuple[str, str]] = TESTBED_PAIRS,
 # the gateway can charge ACTUAL costs against while the routers still consult
 # the (possibly EWMA-adapted) profile table.
 
+class DeviceDropout(RuntimeError):
+    """A hard-dropout device was asked to serve while unreachable
+    (``DriftEvent(kind="dropout", hard=True)`` active at this step).  The
+    dispatch plane turns this into a failed batch the resilience layer
+    retries elsewhere — unlike the soft penalty, the request does NOT
+    complete on this device."""
+
+    def __init__(self, device: str, step: int):
+        super().__init__(f"device {device!r} is unreachable at step {step} "
+                         "(hard dropout window)")
+        self.device = device
+        self.step = step
+
+
 @dataclasses.dataclass(frozen=True)
 class DriftEvent:
     """One runtime condition change on one device.
@@ -98,7 +112,12 @@ class DriftEvent:
       * ``background`` — co-tenant load: square wave alternating between
                          ``severity`` and 1 with ``period`` steps per cycle
       * ``dropout``    — device unreachable in [start, end): requests pay a
-                         flat ``severity``x retry/timeout penalty
+                         flat ``severity``x retry/timeout penalty — or, with
+                         ``hard=True``, FAIL outright: the scalar ``cost``
+                         raises ``DeviceDropout`` (the serving path's batch
+                         error) and the vectorized faces report ``inf``
+                         (the scanned closed loop's failure sentinel that
+                         drives the quarantine breaker)
     Energy scales with the same multiplier (active power x longer busy time).
     """
     device: str
@@ -108,9 +127,18 @@ class DriftEvent:
     severity: float = 2.0
     ramp: int = 40              # thermal ramp-up length, steps
     period: int = 60            # background-load cycle length, steps
+    hard: bool = False          # dropout only: raise instead of penalizing
+
+    def active(self, step: int) -> bool:
+        return step >= self.start and (self.end is None or step < self.end)
+
+    def failing(self, step: int) -> bool:
+        """True when a HARD dropout makes the device unreachable at
+        ``step`` (soft events never fail — they only cost more)."""
+        return self.hard and self.kind == "dropout" and self.active(step)
 
     def multiplier(self, step: int) -> float:
-        if step < self.start or (self.end is not None and step >= self.end):
+        if not self.active(step):
             return 1.0
         if self.kind == "thermal":
             frac = min((step - self.start) / max(self.ramp, 1), 1.0)
@@ -119,7 +147,7 @@ class DriftEvent:
             phase = ((step - self.start) % self.period) / self.period
             return self.severity if phase < 0.5 else 1.0
         if self.kind == "dropout":
-            return self.severity
+            return float("inf") if self.hard else self.severity
         raise ValueError(f"unknown drift kind {self.kind!r}")
 
     def multipliers(self, steps: int):
@@ -135,7 +163,7 @@ class DriftEvent:
             phase = ((t - self.start) % self.period) / self.period
             m = np.where(phase < 0.5, self.severity, 1.0)
         elif self.kind == "dropout":
-            m = np.full(steps, self.severity)
+            m = np.full(steps, np.inf if self.hard else self.severity)
         else:
             raise ValueError(f"unknown drift kind {self.kind!r}")
         active = t >= self.start
@@ -160,10 +188,20 @@ class DriftingFleet:
                 m *= ev.multiplier(step)
         return m
 
+    def failing(self, device: str, step: int) -> bool:
+        """True when a hard-dropout event makes ``device`` unreachable at
+        ``step`` — ``cost`` raises instead of quoting a price."""
+        return any(ev.device == device and ev.failing(step)
+                   for ev in self.events)
+
     def cost(self, device: str, flops: float, step: int
              ) -> Tuple[float, float]:
         """(time_ms, energy_mwh) actually paid at ``step``; energy is linear
-        in busy time, so both scale by the same multiplier."""
+        in busy time, so both scale by the same multiplier.  Raises
+        ``DeviceDropout`` when a hard-dropout window covers ``step`` — the
+        request did not complete, so there IS no cost to report."""
+        if self.failing(device, step):
+            raise DeviceDropout(device, step)
         dev = self.devices[device]
         m = self.multiplier(device, step)
         return dev.time_ms(flops) * m, dev.energy_mwh(flops) * m

@@ -124,7 +124,11 @@ class AsyncEcoreService:
         await loop.run_in_executor(None, self._svc.drain)
 
     async def close(self) -> None:
-        """Flush, resolve every outstanding future, stop the flusher."""
+        """Flush, resolve every outstanding future, stop the flusher.
+        Idempotent; afterwards ``submit``/``submit_nowait`` resolve to a
+        failed future carrying ``ServiceClosed`` (the sync service's
+        structured terminal error), and any future the flush could not
+        resolve fails with it too rather than dangling forever."""
         loop = asyncio.get_running_loop()
         await loop.run_in_executor(None, self._svc.close)
 

@@ -79,7 +79,19 @@ def ensure_backend(obj) -> ExecutionBackend:
 
 
 def make_backend(kind: str, *args, **kwargs) -> ExecutionBackend:
-    """Build a registered backend and validate it against the protocol."""
+    """Build a registered backend and validate it against the protocol.
+
+    ``"faulty:<inner>"`` builds ``<inner>`` through its registered factory
+    and wraps it in the fault-injection plane's ``FaultyBackend``; the
+    ``faults`` kwarg (a sequence of ``FaultSpec``) belongs to the wrapper,
+    everything else goes to the inner factory."""
+    if kind.startswith("faulty:"):
+        # lazy: faults.py imports this module, so the wrapper cannot be a
+        # top-level import here
+        from repro.serving.faults import FaultyBackend
+        faults = kwargs.pop("faults", ())
+        inner = make_backend(kind[len("faulty:"):], *args, **kwargs)
+        return ensure_backend(FaultyBackend(inner, faults))
     try:
         factory = _REGISTRY[kind]
     except KeyError:
@@ -172,6 +184,9 @@ class DetectorBackend:
             # an edge device serves its batch sequentially: occupy the wall
             # clock for the modeled busy time (scaled), so pods genuinely
             # contend/overlap in cluster benches
+            # repro-lint: disable=ECO304 -- this sleep IS the simulated
+            # device busy time (opt-in realtime_scale), not a retry/poll
+            # that must ride the injectable clock
             time.sleep(total_modeled_ms / 1e3 * self.realtime_scale)
         return results
 

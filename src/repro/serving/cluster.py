@@ -65,6 +65,20 @@ def _mix32(x, xp):
     return x
 
 
+#: a dead pod's masked queue depth: larger than any real depth, far from
+#: int32 overflow even after a whole batch of .add(1)s
+_DEAD_DEPTH = 2 ** 30
+
+
+def _masked_scores(scores, alive, xp):
+    """Rendezvous scores with dead pods forced to lose: live scores map
+    monotonically into [2^31, 2^32) (>> 1 then set the top bit), dead pods
+    score 0.  Same uint32 ops for numpy and jnp — no int64, which jax
+    would silently downcast with x64 disabled."""
+    live = (scores >> xp.uint32(1)) | xp.uint32(0x80000000)
+    return xp.where(alive, live, xp.uint32(0))
+
+
 _kernels = None
 
 
@@ -82,6 +96,13 @@ def _shard_kernels():
             return jnp.argmax(scores, axis=1)
 
         @jax.jit
+        def rendezvous_masked(uids_u32, pod_ids_u32, alive):
+            scores = _mix32(uids_u32[:, None] ^ _mix32(pod_ids_u32, jnp)[None, :],
+                            jnp)
+            return jnp.argmax(_masked_scores(scores, alive[None, :], jnp),
+                              axis=1)
+
+        @jax.jit
         def least_loaded(uids_u32, depths_i32):
             # sequential greedy: each pick sees the depths the previous
             # picks produced (ties -> lowest pod index, like np.argmin)
@@ -91,50 +112,86 @@ def _shard_kernels():
             _, picks = jax.lax.scan(step, depths_i32, uids_u32)
             return picks
 
-        _kernels = {"rendezvous": rendezvous, "least_loaded": least_loaded}
+        @jax.jit
+        def least_loaded_masked(uids_u32, depths_i32, alive):
+            dead = jnp.int32(_DEAD_DEPTH)
+            def step(depth, _):
+                p = jnp.argmin(jnp.where(alive, depth, dead))
+                return depth.at[p].add(1), p
+            _, picks = jax.lax.scan(step, depths_i32, uids_u32)
+            return picks
+
+        _kernels = {"rendezvous": rendezvous, "least_loaded": least_loaded,
+                    "rendezvous_masked": rendezvous_masked,
+                    "least_loaded_masked": least_loaded_masked}
     return _kernels
 
 
 def select_pods(uids: Sequence[int], depths: Sequence[int],
-                mode: str = "least_loaded") -> np.ndarray:
+                mode: str = "least_loaded",
+                alive: Optional[Sequence[bool]] = None) -> np.ndarray:
     """Assign a batch of request uids to pods in ONE jitted XLA call.
 
     ``depths`` is the live per-pod queue depth (least-loaded consumes it;
-    rendezvous ignores it).  Exactly matches ``select_pods_reference``
-    (tested): pure uint32/int32 arithmetic on both paths."""
+    rendezvous ignores it).  ``alive`` (optional bool mask) excludes dead
+    pods: least-loaded sees their depth as unbeatable, rendezvous forces
+    their score below every live pod's — graceful degradation without a
+    separate kernel family; ``None`` runs the original unmasked kernels
+    bit-identically.  Exactly matches ``select_pods_reference`` (tested):
+    pure uint32/int32 arithmetic on both paths."""
     if mode not in SHARD_MODES:
         raise ValueError(f"unknown shard mode {mode!r}; one of {SHARD_MODES}")
     import jax.numpy as jnp
     uids_u32 = jnp.asarray(np.asarray(uids, np.uint32))
-    k = _shard_kernels()[mode]
+    k = _shard_kernels()[mode if alive is None else mode + "_masked"]
     if mode == "rendezvous":
         pod_ids = jnp.asarray(np.arange(len(depths), dtype=np.uint32))
-        return np.asarray(k(uids_u32, pod_ids))
-    return np.asarray(k(uids_u32, jnp.asarray(np.asarray(depths, np.int32))))
+        if alive is None:
+            return np.asarray(k(uids_u32, pod_ids))
+        return np.asarray(k(uids_u32, pod_ids,
+                            jnp.asarray(np.asarray(alive, bool))))
+    depths_i32 = jnp.asarray(np.asarray(depths, np.int32))
+    if alive is None:
+        return np.asarray(k(uids_u32, depths_i32))
+    return np.asarray(k(uids_u32, depths_i32,
+                        jnp.asarray(np.asarray(alive, bool))))
 
 
 def select_pods_reference(uids: Sequence[int], depths: Sequence[int],
-                          mode: str = "least_loaded") -> np.ndarray:
+                          mode: str = "least_loaded",
+                          alive: Optional[Sequence[bool]] = None
+                          ) -> np.ndarray:
     """Scalar reference: one request at a time, plain numpy.  The jitted
-    ``select_pods`` must match this exactly."""
+    ``select_pods`` must match this exactly (masked or not)."""
     if mode not in SHARD_MODES:
         raise ValueError(f"unknown shard mode {mode!r}; one of {SHARD_MODES}")
     uids = list(uids)   # materialize ONCE: a generator must not be exhausted
     depths = np.asarray(depths, np.int32).copy()
     pod_ids = np.arange(len(depths), dtype=np.uint32)
+    alive_mask = None if alive is None else np.asarray(alive, bool)
     picks = np.zeros(len(uids), np.int64)
     for i, uid in enumerate(uids):
         if mode == "least_loaded":
-            p = int(np.argmin(depths))
+            visible = (depths if alive_mask is None
+                       else np.where(alive_mask, depths,
+                                     np.int32(_DEAD_DEPTH)))
+            p = int(np.argmin(visible))
             depths[p] += 1
         else:
             u = np.asarray([uid], np.uint32)  # arrays: silent uint32 wrap
-            p = int(np.argmax(_mix32(u ^ _mix32(pod_ids, np), np)))
+            scores = _mix32(u ^ _mix32(pod_ids, np), np)
+            if alive_mask is not None:
+                scores = _masked_scores(scores, alive_mask, np)
+            p = int(np.argmax(scores))
         picks[i] = p
     return picks
 
 
 # --------------------------------------------------------------- cluster
+
+class NoLivePods(RuntimeError):
+    """Every pod has been marked failed — the cluster cannot place work."""
+
 
 class EcoreCluster:
     """Shard one request stream over N independent ``EcoreService`` pods.
@@ -143,14 +200,25 @@ class EcoreCluster:
     state must not be shared — observations fold into the owning pod);
     ``backend_factory`` is per-decision, as in ``EcoreService``.  Requests
     need cluster-unique uids (the owner map and each pod's inflight check
-    key on them)."""
+    key on them).
+
+    ``pod_fail_after`` (optional) arms graceful degradation: after that
+    many CONSECUTIVE failed completions a pod is marked dead
+    (``mark_pod_failed``), masked out of shard selection, and every
+    request that failed on it is RESUBMITTED to a surviving pod (the
+    cluster then owns the returned future and resolves it from whichever
+    pod finally answers; the owner map follows the move, so uid-keyed
+    observations fold into the pod that actually served).  Off (None),
+    behavior is identical to the non-degrading cluster: pod futures are
+    returned directly and errors propagate untouched."""
 
     def __init__(self, policy_factory: Callable[[int], RoutingPolicy],
                  backend_factory: Callable[[RouteDecision], object], *,
                  pods: int = 2, shard: str = "least_loaded",
                  max_wait_ms: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
-                 retain_results: bool = True):
+                 retain_results: bool = True,
+                 pod_fail_after: Optional[int] = None):
         if pods < 1:
             raise ValueError(f"pods={pods}: need at least one pod")
         if shard not in SHARD_MODES:
@@ -162,7 +230,7 @@ class EcoreCluster:
                          max_wait_ms=max_wait_ms, clock=clock,
                          retain_results=retain_results)
             for i in range(pods)]
-        self._lock = threading.Lock()
+        self._lock = threading.Condition()
         #: live queue depth per pod (in-flight requests; shard input)
         self._depth = np.zeros(pods, np.int64)
         #: total requests ever assigned per pod (stats)
@@ -171,6 +239,11 @@ class EcoreCluster:
         self._owner_order: collections.deque = collections.deque()
         #: uid-keyed observations dropped because the owner was unknown
         self.stale_observations = 0
+        self.pod_fail_after = pod_fail_after
+        self._alive = np.ones(pods, bool)
+        self._consec_errors = np.zeros(pods, np.int64)
+        self.resubmitted = 0          # requests moved off a failed pod
+        self._moving = 0              # resubmissions not yet re-enqueued
         self._exec = ThreadPoolExecutor(max_workers=pods,
                                         thread_name_prefix="ecore-pod")
         self._closed = False
@@ -179,8 +252,15 @@ class EcoreCluster:
 
     def _assign(self, uids: Sequence[int], batched: bool) -> np.ndarray:
         with self._lock:
+            if not self._alive.any():
+                raise NoLivePods(
+                    f"all {len(self.pods)} pods are marked failed")
+            # the mask only enters selection once degradation is armed (or
+            # a pod actually died) — the unmasked kernels stay bit-
+            # identical to the non-degrading cluster
+            alive = None if self._alive.all() else self._alive
             picks = (select_pods if batched else select_pods_reference)(
-                uids, self._depth, self.shard)
+                uids, self._depth, self.shard, alive=alive)
             np.add.at(self._depth, picks, 1)
             np.add.at(self.shard_counts, picks, 1)
             for uid, p in zip(uids, picks):
@@ -199,6 +279,102 @@ class EcoreCluster:
         fut.add_done_callback(lambda _f: self._release(pod))
         return fut
 
+    # ------------------------------------------------------- degradation
+
+    def mark_pod_failed(self, pod: int) -> None:
+        """Mask ``pod`` out of shard selection (manual override or called
+        by the consecutive-error detector).  Its queued work is not
+        recalled wholesale — each failed completion resubmits itself — but
+        nothing NEW lands on it."""
+        with self._lock:
+            self._alive[pod] = False
+            self._lock.notify_all()
+
+    def _record_outcome(self, pod: int, failed: bool) -> None:
+        """Consecutive-failure pod detector (degradation armed only)."""
+        with self._lock:
+            if failed:
+                self._consec_errors[pod] += 1
+                if (self.pod_fail_after is not None and self._alive[pod]
+                        and self._consec_errors[pod] >= self.pod_fail_after):
+                    self._alive[pod] = False
+            else:
+                self._consec_errors[pod] = 0
+            self._lock.notify_all()
+
+    def _guard(self, fut: "Future[Served]", pod: int, req: RouteRequest,
+               outer: "Future[Served]", hops: int) -> None:
+        """Bridge a pod future to the cluster-owned ``outer`` future,
+        recording outcomes and resubmitting failures to survivors.  The
+        pod resolves its futures while holding its OWN condition, so the
+        resubmission (which must take another pod's condition) hops
+        through the executor — pod-to-pod lock cycles are impossible."""
+        def _done(f: "Future[Served]") -> None:
+            self._release(pod)
+            exc = f.exception()
+            if exc is None:
+                self._record_outcome(pod, failed=False)
+                outer.set_result(f.result())
+                return
+            self._recover(pod, req, outer, exc, hops)
+        fut.add_done_callback(_done)
+
+    def _recover(self, pod: int, req: RouteRequest, outer: "Future[Served]",
+                 exc: BaseException, hops: int) -> None:
+        """One failed attempt on ``pod``: feed the detector, then either
+        move the request to a survivor (pod is dead, hop budget left) or
+        surface the error on the outer future."""
+        self._record_outcome(pod, failed=True)
+        with self._lock:
+            can_move = (not self._alive[pod] and not self._closed
+                        and hops + 1 < len(self.pods)
+                        and self._alive.any())
+            if can_move:
+                self.resubmitted += 1
+                self._moving += 1
+        if can_move:
+            self._exec.submit(self._resubmit, req, outer, hops + 1)
+        else:
+            outer.set_exception(exc)
+
+    def _submit_guarded(self, pod: int, shard_reqs: List[RouteRequest],
+                        outers: List["Future[Served]"]) -> None:
+        """Armed-mode shard submission: one ``pod.submit`` per request, so
+        an inline-flush backend error surfaces HERE for exactly the
+        request that triggered it (co-batched failures come back through
+        the futures ``_guard`` already watches) and recovery never loses a
+        request the way a whole-shard ``submit_batch`` raise would."""
+        for req, outer in zip(shard_reqs, outers):
+            try:
+                fut = self.pods[pod].submit(req)
+            except Exception as exc:
+                self._release(pod)
+                self._recover(pod, req, outer, exc, hops=0)
+            else:
+                self._guard(fut, pod, req, outer, hops=0)
+
+    def _resubmit(self, req: RouteRequest, outer: "Future[Served]",
+                  hops: int) -> None:
+        """Re-place one request that failed on a dead pod (executor
+        thread: holds no lock while entering the survivor pod)."""
+        try:
+            try:
+                pod = int(self._assign([req.uid], batched=False)[0])
+            except Exception as exc:
+                outer.set_exception(exc)
+                return
+            try:
+                fut = self.pods[pod].submit(req)
+            except Exception as exc:
+                self._release(pod)
+                outer.set_exception(exc)
+                return
+            self._guard(fut, pod, req, outer, hops)
+        finally:
+            with self._lock:
+                self._moving -= 1
+                self._lock.notify_all()
+
     def submit(self, req: RouteRequest) -> "Future[Served]":
         """Shard one request (scalar reference path) and submit it to its
         pod; the pod routes, queues and batches as usual.  If the pod's
@@ -206,13 +382,23 @@ class EcoreCluster:
         request is un-counted from the depth accounting before the error
         propagates — same invariant as ``submit_batch``'s error path."""
         pod = int(self._assign([req.uid], batched=False)[0])
+        if self.pod_fail_after is None:
+            try:
+                fut = self.pods[pod].submit(req)
+            except Exception:
+                with self._lock:
+                    self._depth[pod] -= 1
+                raise
+            return self._watch(fut, pod)
+        outer: "Future[Served]" = Future()
         try:
             fut = self.pods[pod].submit(req)
-        except Exception:
-            with self._lock:
-                self._depth[pod] -= 1
-            raise
-        return self._watch(fut, pod)
+        except Exception as exc:
+            self._release(pod)
+            self._recover(pod, req, outer, exc, hops=0)
+        else:
+            self._guard(fut, pod, req, outer, hops=0)
+        return outer
 
     def submit_batch(self, reqs: Sequence[RouteRequest]
                      ) -> List["Future[Served]"]:
@@ -233,6 +419,18 @@ class EcoreCluster:
         shards: Dict[int, List[int]] = {}
         for i, p in enumerate(picks):
             shards.setdefault(int(p), []).append(i)
+        if self.pod_fail_after is not None:
+            # degradation armed: per-request pod submission (still batched
+            # at the dispatch queues) so inline backend errors recover
+            # per-request instead of losing a whole shard's futures
+            outers: List["Future[Served]"] = [Future() for _ in reqs]
+            tasks = [self._exec.submit(self._submit_guarded, pod,
+                                       [reqs[i] for i in idxs],
+                                       [outers[i] for i in idxs])
+                     for pod, idxs in shards.items()]
+            for t in tasks:
+                t.result()
+            return outers
         pending = {
             pod: self._exec.submit(self.pods[pod].submit_batch,
                                    [reqs[i] for i in idxs])
@@ -254,8 +452,14 @@ class EcoreCluster:
                 with self._lock:
                     self._depth[pod] -= len(idxs)
                 continue
-            for i, fut in zip(idxs, futs):
-                out[i] = self._watch(fut, pod)
+            if self.pod_fail_after is None:
+                for i, fut in zip(idxs, futs):
+                    out[i] = self._watch(fut, pod)
+            else:
+                for i, fut in zip(idxs, futs):
+                    outer: "Future[Served]" = Future()
+                    self._guard(fut, pod, reqs[i], outer, hops=0)
+                    out[i] = outer
         if first_exc is not None:
             raise first_exc
         return out  # type: ignore[return-value]
@@ -290,15 +494,24 @@ class EcoreCluster:
 
     def drain(self) -> List[Served]:
         """Drain every pod CONCURRENTLY; completions are merged.  The first
-        pod error re-raises after all pods finished draining."""
-        futs = [self._exec.submit(p.drain) for p in self.pods]
+        pod error re-raises after all pods finished draining.  Under
+        degradation a drained failure may RESUBMIT to a survivor, so the
+        drain loops until no resubmission is still moving between pods
+        (bounded: each request moves at most pods-1 times)."""
         out: List[Served] = []
         first_exc = None
-        for f in futs:
-            try:
-                out += f.result()
-            except Exception as exc:
-                first_exc = first_exc or exc
+        while True:
+            futs = [self._exec.submit(p.drain) for p in self.pods]
+            for f in futs:
+                try:
+                    out += f.result()
+                except Exception as exc:
+                    first_exc = first_exc or exc
+            with self._lock:
+                while self._moving:
+                    self._lock.wait(timeout=1.0)
+            if not any(p.pending_requests for p in self.pods):
+                break
         if first_exc is not None:
             raise first_exc
         return out
@@ -331,6 +544,9 @@ class EcoreCluster:
 
     def stats(self) -> Dict:
         per_pod = [p.stats() for p in self.pods]
+        with self._lock:
+            alive = self._alive.tolist()
+            resubmitted = self.resubmitted
         return {
             "pods": len(self.pods),
             "shard_mode": self.shard,
@@ -340,5 +556,8 @@ class EcoreCluster:
             "served": sum(s["served"] for s in per_pod),
             "deadline_flushes": sum(s["deadline_flushes"] for s in per_pod),
             "stale_observations": self.stale_observations,
+            "alive": alive,
+            "availability": sum(alive) / len(alive),
+            "resubmitted": resubmitted,
             "per_pod": per_pod,
         }

@@ -1,0 +1,146 @@
+"""Fault injection plane: deterministic failures for any ExecutionBackend.
+
+Chaos testing the serving stack needs failures that are REPRODUCIBLE — a
+flaky test that injects faults at random times is worse than no test.  So
+every fault here is a pure function of the request ``uid``: a ``FaultSpec``
+hashes (uid, seed, kind) through the same splitmix32 avalanche the cluster
+uses for rendezvous sharding and fires when the hash lands under ``rate``.
+Two runs over the same uid stream inject byte-identical fault sequences, no
+matter how dispatch batches or reorders — the same uid-keyed determinism
+``DetectorBackend`` relies on for fleet drift.
+
+Four fault kinds, matching how edge devices actually die:
+
+  * ``error``        — the device throws: ``serve_batch`` raises
+                       ``InjectedFault`` (the whole batch dies with it,
+                       exactly like a real backend exception in
+                       ``EcoreService._dispatch``)
+  * ``stall``        — the device answers LATE: the result's modeled
+                       ``time_ms`` is inflated by ``stall_ms`` (a deadline
+                       miss for the resilience layer, not an exception)
+  * ``corrupt``      — the device answers GARBAGE: payload zeroed and
+                       ``time_ms`` = NaN, the detectable corruption marker
+                       the resilience layer's validator rejects
+  * ``crash_window`` — the device is down for every uid in
+                       [``start``, ``end``): the uid-space analog of
+                       ``DriftEvent(kind="dropout", hard=True)``
+
+``FaultyBackend`` wraps any registered backend with a list of specs;
+``make_backend("faulty:<inner>", ..., faults=[...])`` builds the wrapped
+form through the ordinary registry, so every bench/test factory can switch
+a healthy fleet to a faulty one by changing one string.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.backend import ExecutionBackend, ensure_backend
+from repro.serving.cluster import _mix32
+from repro.serving.engine import Request, Result
+
+FAULT_KINDS = ("error", "stall", "corrupt", "crash_window")
+
+#: per-kind hash salt so one seed drives independent streams per fault kind
+_KIND_SALT = {"error": 0x9E3779B9, "stall": 0x85EBCA6B,
+              "corrupt": 0xC2B2AE35, "crash_window": 0x27D4EB2F}
+
+
+class InjectedFault(RuntimeError):
+    """A deterministically injected backend failure (the fault plane's
+    analog of a device throwing mid-batch)."""
+
+    def __init__(self, kind: str, uid: int, backend: str):
+        super().__init__(f"injected {kind} fault on {backend!r} "
+                         f"(fired by uid {uid})")
+        self.kind = kind
+        self.uid = uid
+        self.backend = backend
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One fault mode, deterministically seeded per request uid.
+
+    ``rate`` is the per-uid firing probability for ``error``/``stall``/
+    ``corrupt`` (evaluated by hashing, so it is exact-in-distribution and
+    reproducible, not sampled); ``crash_window`` ignores it and fires for
+    every uid in [``start``, ``end``)."""
+    kind: str
+    rate: float = 1.0
+    seed: int = 0
+    stall_ms: float = 250.0     # modeled extra latency for a stall
+    start: int = 0              # crash window [start, end) in uid space
+    end: Optional[int] = None   # exclusive; None = never recovers
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {FAULT_KINDS}")
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"rate={self.rate}: probability in [0, 1]")
+
+    def fires(self, uid: int) -> bool:
+        """Does this fault hit request ``uid``?  Pure, stateless,
+        reproducible — the whole point of the injection plane."""
+        if self.kind == "crash_window":
+            return uid >= self.start and (self.end is None
+                                          or uid < self.end)
+        if self.rate <= 0.0:
+            return False
+        if self.rate >= 1.0:
+            return True
+        # arrays, not scalars: uint32 arithmetic must wrap silently
+        salt = _mix32(np.asarray([self.seed], np.uint32)
+                      ^ np.uint32(_KIND_SALT[self.kind]), np)
+        h = _mix32(np.asarray([uid], np.uint32) ^ salt, np)
+        return int(h[0]) < int(self.rate * 4294967296.0)
+
+
+class FaultyBackend:
+    """Wrap any ``ExecutionBackend`` with deterministic fault injection.
+
+    ``error``/``crash_window`` faults fire BEFORE the inner backend runs —
+    the device never answered, so no result exists and the whole batch
+    fails (matching real backend-exception semantics in the dispatch
+    plane).  ``stall``/``corrupt`` faults rewrite the inner backend's
+    results after the fact.  ``injected`` counts fired faults per kind for
+    bench/test observability."""
+
+    def __init__(self, inner: ExecutionBackend,
+                 faults: Sequence[FaultSpec] = ()):
+        self.inner = ensure_backend(inner)
+        self.faults = tuple(faults)
+        self.name = self.inner.name
+        self.max_batch = self.inner.max_batch
+        self.injected: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+
+    def serve_batch(self, requests: List[Request]) -> List[Result]:
+        for r in requests:
+            for spec in self.faults:
+                if (spec.kind in ("error", "crash_window")
+                        and spec.fires(r.uid)):
+                    self.injected[spec.kind] += 1
+                    raise InjectedFault(spec.kind, r.uid, self.name)
+        results = self.inner.serve_batch(requests)
+        out = []
+        for res in results:
+            for spec in self.faults:
+                if spec.kind == "stall" and spec.fires(res.uid):
+                    self.injected["stall"] += 1
+                    res = dataclasses.replace(
+                        res, time_ms=(res.time_ms or 0.0) + spec.stall_ms)
+                elif spec.kind == "corrupt" and spec.fires(res.uid):
+                    self.injected["corrupt"] += 1
+                    res = dataclasses.replace(
+                        res, tokens=np.zeros_like(res.tokens),
+                        detections=None, time_ms=float("nan"))
+            out.append(res)
+        return out
+
+    def profile_row(self) -> Dict[str, object]:
+        row = dict(self.inner.profile_row())
+        row["faults"] = [f.kind for f in self.faults]
+        return row

@@ -52,6 +52,13 @@ class Served:
     result: Result
 
 
+class ServiceClosed(RuntimeError):
+    """The service was closed: raised by ``submit``/``submit_batch`` after
+    ``close()``, and set on any future still pending when ``close()``
+    finishes flushing — a structured terminal error callers can
+    distinguish from a backend failure (nothing is retryable here)."""
+
+
 class EcoreService:
     """Request-centric serving: ``submit -> Future``, ``results``,
     ``drain``, ``close``, with deadline-bounded threaded flushing."""
@@ -88,8 +95,16 @@ class EcoreService:
         self._inflight: Dict[int, Tuple[RouteRequest, RouteDecision,
                                         Future, float, Tuple[str, str]]] = {}
         self._completed: List[Served] = []
-        # bounded: a long-lived service must not grow per-request state
+        # bounded: a long-lived service must not grow per-request state.
+        # Two separate planes per request: queue_wait (submit -> its flush
+        # TRIGGERED: deadline expiry / batch full / drain — bounded by
+        # max_wait_ms under a healthy flusher) and service (trigger ->
+        # completion: lock wait behind other serves + the serve itself).
+        # Folding the second into the first made p95 "queue wait" report
+        # seconds of jit-compile head-of-line blocking against a 25 ms
+        # deadline.
         self._queue_wait_ms: Deque[float] = collections.deque(maxlen=4096)
+        self._service_ms: Deque[float] = collections.deque(maxlen=4096)
         # backend errors caught in the flusher thread: futures carry them,
         # but results()-driven drivers never look — re-raised at
         # drain()/close() so a lost batch cannot pass silently
@@ -166,9 +181,10 @@ class EcoreService:
 
     def close(self) -> None:
         """Flush whatever is pending (no future is left dangling: results
-        resolve, backend errors become future exceptions), stop the flusher
-        thread, then re-raise the first flush error.  Idempotent;
-        completions remain readable via ``results()``."""
+        resolve, backend errors become future exceptions, anything still
+        unresolved fails with ``ServiceClosed``), stop the flusher thread,
+        then re-raise the first flush error.  Idempotent; completions
+        remain readable via ``results()``."""
         exc = None
         with self._cond:
             if self._closed:
@@ -179,6 +195,13 @@ class EcoreService:
                 exc = e
             if exc is None and self._errors:
                 exc = self._errors.popleft()
+            # the flush resolved or failed every normal future; whatever is
+            # STILL pending (a backend that returned a partial batch, a
+            # cancelled flush) must not dangle past close
+            for uid, (_, _, fut, _, _) in list(self._inflight.items()):
+                del self._inflight[uid]
+                fut.set_exception(ServiceClosed(
+                    f"EcoreService closed with request uid {uid} unserved"))
             self._closed = True
             self._cond.notify_all()
         if self._flusher is not None:
@@ -199,6 +222,13 @@ class EcoreService:
             self._cond.notify_all()
 
     @property
+    def pending_requests(self) -> int:
+        """Requests enqueued but not yet flushed (cluster drain uses this
+        to decide whether resubmitted work still needs another pass)."""
+        with self._cond:
+            return sum(len(q.pending) for q in self._queues.values())
+
+    @property
     def deadline_flushes(self) -> int:
         """Partial batches served because a deadline expired — counted on
         the queues, so inline (submit-path) and flusher-thread deadline
@@ -213,13 +243,14 @@ class EcoreService:
                 "served": sum(q.served for q in self._queues.values()),
                 "deadline_flushes": self.deadline_flushes,
                 "queue_wait_ms": list(self._queue_wait_ms),
+                "service_ms": list(self._service_ms),
             }
 
     # ----------------------------------------------------------- internals
 
     def _ensure_open(self) -> None:
         if self._closed:
-            raise RuntimeError("EcoreService is closed")
+            raise ServiceClosed("EcoreService is closed")
 
     def _enqueue(self, req: RouteRequest,
                  decision: RouteDecision) -> "Future[Served]":
@@ -240,15 +271,20 @@ class EcoreService:
                     group=decision.group)))
         return fut
 
-    def _dispatch(self, key: Tuple[str, str], q: DispatchQueue, fn) -> None:
-        """Run one queue operation that may serve a batch.  A backend error
-        must not kill the flusher thread or dangle futures: every inflight
-        future of the failing backend gets the exception (the flushed batch
-        was already popped, and any same-flush sub-batch results are lost
-        with it), then the error propagates to a direct caller."""
-        t_flush = self._clock()  # wait ends when serving STARTS
+    def _dispatch(self, key: Tuple[str, str], q: DispatchQueue, fn,
+                  t_trigger: Optional[float] = None) -> None:
+        """Run one queue operation that may serve a batch.  ``t_trigger``
+        is the moment the flush became DUE (deadline expiry, drain entry;
+        defaults to now for inline full-batch flushes) — queue wait ends
+        there, everything after is service time.  A backend error must not
+        kill the flusher thread or dangle futures: every inflight future of
+        the failing backend gets the exception (the flushed batch was
+        already popped, and any same-flush sub-batch results are lost with
+        it), then the error propagates to a direct caller."""
+        if t_trigger is None:
+            t_trigger = self._clock()
         try:
-            self._complete(fn(), t_flush)
+            self._complete(fn(), t_trigger)
         except Exception as exc:
             for uid, (_, _, fut, _, k) in list(self._inflight.items()):
                 if k == key:
@@ -257,13 +293,16 @@ class EcoreService:
             raise
 
     def _complete(self, results: List[Result],
-                  t_flush: Optional[float] = None) -> None:
-        if t_flush is None:
-            t_flush = self._clock()
+                  t_trigger: Optional[float] = None) -> None:
+        t_done = self._clock()
+        if t_trigger is None:
+            t_trigger = t_done
         for res in results:
             req, decision, fut, t_submit, _ = self._inflight.pop(res.uid)
-            # time spent QUEUED for batching (not the serve itself)
-            self._queue_wait_ms.append((t_flush - t_submit) * 1e3)
+            # time spent QUEUED for batching vs time being SERVED (incl.
+            # waiting behind other flushes under the service lock)
+            self._queue_wait_ms.append(max(t_trigger - t_submit, 0.0) * 1e3)
+            self._service_ms.append((t_done - t_trigger) * 1e3)
             served = Served(request=req, decision=decision, result=res)
             if self._retain:
                 self._completed.append(served)
@@ -271,9 +310,12 @@ class EcoreService:
 
     def _flush_all(self) -> None:
         first_exc = None
+        # one trigger stamp for the whole drain: queues flushed later must
+        # not book earlier queues' serve time as their own queue wait
+        t_trigger = self._clock()
         for key, q in self._queues.items():
             try:
-                self._dispatch(key, q, q.flush)
+                self._dispatch(key, q, q.flush, t_trigger=t_trigger)
             except Exception as exc:  # futures already carry it; drain the
                 first_exc = first_exc or exc        # healthy queues anyway
         if first_exc is not None:
@@ -299,7 +341,9 @@ class EcoreService:
                     if nd is not None and nd <= now:
                         q.deadline_flushes += 1
                         try:
-                            self._dispatch(key, q, q.flush)
+                            # wait ended when the deadline EXPIRED, not when
+                            # the flusher got the lock back
+                            self._dispatch(key, q, q.flush, t_trigger=nd)
                         except Exception as exc:
                             # futures carry the backend error and drain()/
                             # close() re-raise it; the flusher must survive

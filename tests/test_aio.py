@@ -225,3 +225,37 @@ def test_async_observe_closes_the_loop():
             assert second.decision.backend == "big"
 
     asyncio.run(drive())
+
+
+@pytest.mark.asyncio
+def test_close_is_idempotent_and_submit_after_close_fails_structured():
+    """The sync service's ServiceClosed mirrors through the facade: submit
+    after close resolves to a FAILED future carrying it (futures-only error
+    contract — never a synchronous throw into the coroutine)."""
+    from repro.serving.service import ServiceClosed
+
+    async def scenario():
+        svc = AsyncEcoreService(PoolPolicy(_pool()),
+                                lambda d: _StubBackend(d.backend, 1))
+        await svc.submit(_req(0, 64))
+        await svc.close()
+        await svc.close()               # idempotent
+        with pytest.raises(ServiceClosed):
+            await svc.submit(_req(1, 64))
+
+    asyncio.run(scenario())
+
+
+@pytest.mark.asyncio
+def test_aexit_closes_the_facade():
+    from repro.serving.service import ServiceClosed
+
+    async def scenario():
+        async with AsyncEcoreService(
+                PoolPolicy(_pool()),
+                lambda d: _StubBackend(d.backend, 1)) as svc:
+            assert (await svc.submit(_req(0, 64))).result.uid == 0
+        with pytest.raises(ServiceClosed):
+            await svc.submit(_req(1, 64))
+
+    asyncio.run(scenario())

@@ -296,6 +296,69 @@ def test_eco303_flags_blind_except_shapes():
     assert check_source(good, path=SERVING, select=["ECO303"]) == []
 
 
+def test_eco304_flags_wall_clock_sleep_and_unbounded_spin():
+    vs = check_source(src("""
+        import time
+        from time import sleep
+
+        def retry(fn):
+            while True:
+                try:
+                    return fn()
+                except Exception:
+                    time.sleep(0.5)
+
+        def poll(q):
+            while True:
+                sleep(0.01)
+                q.flush()
+    """), path=SERVING, select=["ECO304"])
+    # retry's loop has a return (bounded); poll's does not — plus the two
+    # sleeps themselves
+    assert rules_of(vs) == ["ECO304", "ECO304", "ECO304"]
+
+
+def test_eco304_condition_wait_loop_with_exit_is_sanctioned():
+    vs = check_source(src("""
+        def retry_loop(self):
+            while True:
+                with self._cond:
+                    if self._closed:
+                        return
+                    self._cond.wait(0.05)
+    """), path=SERVING, select=["ECO304"])
+    assert vs == []
+
+
+def test_eco304_nested_loop_break_does_not_bound_outer():
+    vs = check_source(src("""
+        def pump(self):
+            while True:
+                for item in self._queue:
+                    if item is None:
+                        break
+    """), path=SERVING, select=["ECO304"])
+    assert rules_of(vs) == ["ECO304"]
+
+
+def test_eco304_only_applies_to_serving_and_suppression_works():
+    sleepy = src("""
+        import time
+
+        def bench():
+            time.sleep(1.0)
+    """)
+    assert check_source(sleepy, path=CORE, select=["ECO304"]) == []
+    suppressed = src("""
+        import time
+
+        def simulate(self, ms):
+            # repro-lint: disable=ECO304 -- simulated device busy time
+            time.sleep(ms / 1e3)
+    """)
+    assert check_source(suppressed, path=SERVING, select=["ECO304"]) == []
+
+
 # ---------------------------------------------- family 4: kernel contract
 
 

@@ -217,3 +217,119 @@ def test_cluster_drain_flushes_partial_batches_everywhere():
         drained = cluster.drain()
         assert len(drained) == 5
         assert all(f.done() for f in futs)
+
+
+# ------------------------------------------------- graceful degradation
+
+from repro.core.policy import RouteDecision  # noqa: E402
+from repro.serving.cluster import NoLivePods  # noqa: E402
+
+
+class _PinnedPolicy:
+    """Per-pod policy that routes everything to ONE fixed pair — the model
+    name encodes the pod, so a Served's backend identifies who served it."""
+    batchable = True
+
+    def __init__(self, pair):
+        self.pair = pair
+        self.observed = []
+
+    def decide(self, req):
+        return RouteDecision(uid=req.uid, pair=self.pair, group=0)
+
+    def decide_batch(self, reqs):
+        return [self.decide(r) for r in reqs]
+
+    def observe(self, obs):
+        self.observed.append(obs)
+
+
+def test_shard_selection_masked_parity_and_avoids_dead():
+    rng = np.random.default_rng(1)
+    for pods in (2, 4, 7):
+        alive = np.ones(pods, bool)
+        alive[0] = False
+        uids = rng.integers(0, 2**31, size=40)
+        depths = rng.integers(0, 9, size=pods)
+        for mode in ("least_loaded", "rendezvous"):
+            got = select_pods(uids, depths, mode, alive=alive)
+            want = select_pods_reference(uids, depths, mode, alive=alive)
+            np.testing.assert_array_equal(got, want), (mode, pods)
+            assert alive[got].all()          # never a dead pod
+    # alive=None is the original unmasked kernel, bit-identical to seed
+    uids = rng.integers(0, 2**31, size=64)
+    for mode in ("least_loaded", "rendezvous"):
+        np.testing.assert_array_equal(
+            select_pods(uids, np.zeros(4, int), mode, alive=None),
+            select_pods(uids, np.zeros(4, int), mode))
+
+
+def test_mark_pod_failed_masks_shard_selection():
+    with EcoreCluster(lambda i: PoolPolicy(_pool()),
+                      lambda d: _StubBackend(d.backend, max_batch=1),
+                      pods=2) as cluster:
+        cluster.mark_pod_failed(0)
+        futs = cluster.submit_batch([_req(u) for u in range(6)])
+        cluster.drain()
+        assert all(f.exception() is None for f in futs)
+        stats = cluster.stats()
+        assert stats["alive"] == [False, True]
+        assert stats["availability"] == 0.5
+        assert cluster.shard_counts.tolist()[0] == 0   # all on pod 1
+
+
+@pytest.mark.threads
+def test_cluster_masks_failed_pod_and_resubmits_inflight():
+    """Pod 0's device dies outright; after ``pod_fail_after`` consecutive
+    errors the pod is masked out, its failed in-flight requests move to
+    survivors, and uid-keyed observations follow the move."""
+    n, fail_after = 40, 2
+    policies = [_PinnedPolicy((f"m{i}", "dead" if i == 0 else "ok"))
+                for i in range(3)]
+
+    def backend_factory(decision):
+        cls = (_FailingBackend if decision.pair[1] == "dead"
+               else _StubBackend)
+        return cls(decision.backend, max_batch=1)
+
+    cluster = EcoreCluster(lambda i: policies[i], backend_factory,
+                           pods=3, pod_fail_after=fail_after)
+    futs = cluster.submit_batch([_req(u) for u in range(n)])
+    cluster.drain()
+    served = [f.result(5.0) for f in futs if f.exception() is None]
+    stats = cluster.stats()
+    # at most fail_after - 1 requests may fail before detection trips
+    assert len(served) >= n - (fail_after - 1)
+    assert stats["alive"] == [False, True, True]
+    assert stats["availability"] == pytest.approx(2 / 3)
+    assert stats["resubmitted"] >= 1
+    assert not any(s.result.backend == "m0" for s in served)
+    # Observation fan-in after the move: the owner map follows the
+    # resubmission, so uid-keyed evidence folds into the pod that
+    # ACTUALLY served — never the dead pod, never dropped as stale
+    for s in served:
+        cluster.observe(Observation(pair=s.decision.pair,
+                                    uid=s.request.uid, time_ms=1.0))
+    assert cluster.stats()["stale_observations"] == 0
+    assert not policies[0].observed             # dead pod got nothing
+    for i in (1, 2):
+        got = {o.uid for o in policies[i].observed}
+        want = {s.request.uid for s in served
+                if s.result.backend == f"m{i}"}
+        assert got == want
+    cluster.close()
+
+
+@pytest.mark.threads
+def test_cluster_all_pods_dead_raises_no_live_pods():
+    cluster = EcoreCluster(lambda i: _PinnedPolicy((f"m{i}", "dead")),
+                           lambda d: _FailingBackend(d.backend, max_batch=1),
+                           pods=2, pod_fail_after=1)
+    futs = cluster.submit_batch([_req(u) for u in range(6)])
+    cluster.drain()
+    assert all(f.exception() is not None for f in futs)
+    assert cluster.stats()["alive"] == [False, False]
+    assert cluster.stats()["availability"] == 0.0
+    with pytest.raises(NoLivePods):
+        cluster.submit(_req(100))
+    cluster.close()

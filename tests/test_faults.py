@@ -1,0 +1,482 @@
+"""The fault plane end to end: deterministic injection (FaultSpec /
+FaultyBackend / hard dropout), the resilience layer (deadline, bounded
+retry, hedged re-dispatch), and the scanned closed loop's quarantine
+breaker (exact zero-fault parity, exclusion, half-open recovery).
+
+The acceptance scenario lives here too: under a fault storm (error +
+stall + crash-window on the fleet's energy favorite) the resilient
+service completes >= 99% of requests within the deadline while the bare
+service measurably does not.  Everything is uid-keyed and hash-seeded,
+so every run injects byte-identical fault sequences."""
+import numpy as np
+import pytest
+
+from repro.core.policy import DetectionPolicy, RouteRequest
+from repro.core.profiles import probe_state, quarantine_state, with_fails
+from repro.core.router import OracleRouter, runner_up_route
+from repro.detection.devices import (DeviceDropout, DriftEvent,
+                                     DriftingFleet, nominal_profile_table)
+from repro.serving.backend import make_backend, null_run
+from repro.serving.engine import Request, Result
+from repro.serving.faults import (FAULT_KINDS, FaultSpec, FaultyBackend,
+                                  InjectedFault)
+from repro.serving.resilience import (CorruptResult, DeadlineExceeded,
+                                      ResilientService, RetriesExhausted,
+                                      RetryPolicy)
+from repro.serving.service import ServiceClosed
+
+
+class _StubBackend:
+    def __init__(self, name="stub", max_batch=4):
+        self.name = name
+        self.max_batch = max_batch
+        self.calls = 0
+
+    def serve_batch(self, requests):
+        self.calls += 1
+        return [Result(uid=r.uid, tokens=np.asarray([r.uid], np.int32),
+                       prefill_s=.01, decode_s=.01, backend=self.name,
+                       batch_size=len(requests), time_ms=10.0)
+                for r in requests]
+
+    def profile_row(self):
+        return {"kind": "stub", "model": self.name,
+                "max_batch": self.max_batch}
+
+
+def _requests(uids):
+    return [Request(uid=u, prompt=np.zeros(4, np.int32), max_new_tokens=1)
+            for u in uids]
+
+
+# ------------------------------------------------------------- FaultSpec
+
+def test_fault_spec_validates_kind_and_rate():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("meteor")
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec("error", rate=1.5)
+    for kind in FAULT_KINDS:
+        FaultSpec(kind)   # every documented kind constructs
+
+
+def test_fault_spec_firing_is_deterministic_and_rate_exact():
+    spec = FaultSpec("error", rate=0.3, seed=7)
+    fired = [spec.fires(u) for u in range(4000)]
+    # pure function of uid: a second pass is byte-identical
+    assert fired == [spec.fires(u) for u in range(4000)]
+    frac = sum(fired) / len(fired)
+    assert 0.25 < frac < 0.35    # hash-thresholded, exact-in-distribution
+    # a different seed fires on a different uid set
+    other = [FaultSpec("error", rate=0.3, seed=8).fires(u)
+             for u in range(4000)]
+    assert other != fired
+    # rate edges short-circuit
+    assert not FaultSpec("error", rate=0.0).fires(1)
+    assert FaultSpec("error", rate=1.0).fires(1)
+
+
+def test_fault_kinds_draw_independent_streams_from_one_seed():
+    uids = range(4000)
+    streams = {k: [FaultSpec(k, rate=0.5, seed=3).fires(u) for u in uids]
+               for k in ("error", "stall", "corrupt")}
+    assert streams["error"] != streams["stall"]
+    assert streams["stall"] != streams["corrupt"]
+
+
+def test_crash_window_fires_exactly_in_uid_window():
+    spec = FaultSpec("crash_window", start=10, end=20)
+    assert [spec.fires(u) for u in range(25)] == \
+        [10 <= u < 20 for u in range(25)]
+    forever = FaultSpec("crash_window", start=5)   # end=None: no recovery
+    assert forever.fires(5) and forever.fires(10 ** 6)
+    assert not forever.fires(4)
+
+
+# -------------------------------------------------------- FaultyBackend
+
+def test_error_fault_raises_before_the_inner_backend_runs():
+    inner = _StubBackend()
+    fb = FaultyBackend(inner, [FaultSpec("error", rate=1.0)])
+    with pytest.raises(InjectedFault) as exc:
+        fb.serve_batch(_requests([3, 4]))
+    assert inner.calls == 0           # the device never answered
+    assert exc.value.kind == "error" and exc.value.uid == 3
+    assert fb.injected["error"] == 1
+
+
+def test_stall_and_corrupt_rewrite_results_per_uid():
+    fb = FaultyBackend(_StubBackend(), [
+        FaultSpec("stall", rate=1.0, stall_ms=500.0),
+        FaultSpec("corrupt", rate=0.3, seed=2)])
+    uids = list(range(8))
+    corrupt = {u for u in uids if FaultSpec("corrupt", rate=0.3,
+                                            seed=2).fires(u)}
+    assert corrupt and len(corrupt) < len(uids)   # the split is real
+    out = fb.serve_batch(_requests(uids))
+    for res in out:
+        if res.uid in corrupt:
+            # corruption is detectable: NaN time, zeroed payload
+            assert np.isnan(res.time_ms)
+            assert not res.tokens.any()
+        else:
+            assert res.time_ms == 10.0 + 500.0    # stalled, not corrupted
+    assert fb.injected["stall"] == len(uids)
+    assert fb.injected["corrupt"] == len(corrupt)
+
+
+def test_make_backend_faulty_prefix_wraps_the_registry():
+    fb = make_backend("faulty:detector", "yolov8_n", "pi5_tpu", max_batch=2,
+                      run_fn=null_run, faults=[FaultSpec("error", rate=1.0)])
+    assert fb.name == "yolov8_n@pi5_tpu" and fb.max_batch == 2
+    assert fb.profile_row()["faults"] == ["error"]
+    with pytest.raises(InjectedFault):
+        fb.serve_batch(_requests([0]))
+    # no faults = transparent wrapper
+    clean = make_backend("faulty:detector", "yolov8_n", "pi5_tpu",
+                         max_batch=2, run_fn=null_run)
+    res = clean.serve_batch(_requests([0]))[0]
+    assert np.isfinite(res.time_ms)
+
+
+# ----------------------------------------------------- hard dropout
+
+def test_hard_dropout_raises_and_soft_dropout_penalizes():
+    hard = DriftingFleet([DriftEvent("pi5_tpu", "dropout", start=5, end=9,
+                                     hard=True)])
+    assert hard.cost("pi5_tpu", 1e9, 4)[0] > 0       # before the window
+    with pytest.raises(DeviceDropout) as exc:
+        hard.cost("pi5_tpu", 1e9, 5)
+    assert exc.value.device == "pi5_tpu" and exc.value.step == 5
+    assert np.isfinite(hard.cost("pi5_tpu", 1e9, 9)[0])   # recovered
+    # the vectorized face reports the scan's failure sentinel instead
+    t, _ = hard.cost_profile("pi5_tpu", 1e9, 12)
+    assert np.isinf(t[5:9]).all() and np.isfinite(t[:5]).all()
+    # soft dropout (hard=False) keeps the flat penalty semantics
+    soft = DriftingFleet([DriftEvent("pi5_tpu", "dropout", start=5, end=9,
+                                     severity=3.0)])
+    assert soft.cost("pi5_tpu", 1e9, 6)[0] == \
+        pytest.approx(3.0 * soft.cost("pi5_tpu", 1e9, 0)[0])
+
+
+# ------------------------------------------------------- RetryPolicy
+
+def test_retry_delay_is_deterministic_exponential_and_jitter_bounded():
+    p = RetryPolicy(backoff_ms=10.0, backoff_mult=2.0, jitter=0.5)
+    assert p.delay_s(42, 1) == p.delay_s(42, 1)      # pure in (uid, attempt)
+    assert p.delay_s(42, 1) != p.delay_s(43, 1)      # jitter varies by uid
+    for attempt in (1, 2, 3):
+        base = 10.0 * 2.0 ** (attempt - 1) / 1e3
+        assert base <= p.delay_s(7, attempt) < base * 1.5
+    flat = RetryPolicy(backoff_ms=10.0, jitter=0.0)
+    assert flat.delay_s(1, 2) == pytest.approx(0.02)
+
+
+# -------------------------------------------------- resilience harness
+
+def _storm(n, device="orin_nano"):
+    """error + stall + crash-window on one device, uid-deterministic."""
+    return {device: [
+        FaultSpec("error", rate=0.4, seed=3),
+        FaultSpec("stall", rate=0.3, seed=5, stall_ms=10_000.0),
+        FaultSpec("crash_window", start=n // 2, end=n // 2 + n // 5)]}
+
+
+def _factory(faults_by_device):
+    def factory(decision):
+        model, device = decision.pair
+        return make_backend("faulty:detector", model, device, max_batch=4,
+                            run_fn=null_run,
+                            faults=faults_by_device.get(device, []))
+    return factory
+
+
+def _policy(delta=2.0):
+    table = nominal_profile_table()
+    return DetectionPolicy(OracleRouter(table, delta), table)
+
+
+def _reqs(n, seed=1):
+    rng = np.random.default_rng(seed)
+    return [RouteRequest(uid=u, payload=np.zeros((4, 4), np.float32),
+                         true_complexity=int(rng.integers(1, 20)))
+            for u in range(n)]
+
+
+def _fake_clock():
+    fake = [0.0]
+    return fake, (lambda: fake[0])
+
+
+@pytest.mark.threads
+def test_chaos_storm_resilient_meets_deadline_baseline_does_not():
+    """THE acceptance scenario: >= 99% goodput under the storm with the
+    resilience layer, measurably broken without it."""
+    n, deadline = 300, 500.0
+    _, clock = _fake_clock()
+    svc = ResilientService(_policy(), _factory(_storm(n)), clock=clock,
+                           retry=RetryPolicy(deadline_ms=deadline,
+                                             max_retries=3))
+    futs = [svc.submit(r) for r in _reqs(n)]
+    svc.drain()
+    ok = sum(1 for f in futs if f.exception() is None
+             and np.isfinite(f.result().result.time_ms)
+             and f.result().result.time_ms <= deadline)
+    stats = svc.stats()
+    svc.close()
+    assert ok / n >= 0.99, f"goodput {ok}/{n} under the storm"
+    assert stats["failed"] == 0 and stats["pending"] == 0
+    assert stats["retries"] > 0 and stats["hedges"] > 0
+
+    # bare service, same storm, same uids: no recovery plane
+    from repro.serving.service import EcoreService
+    bare = EcoreService(_policy(), _factory(_storm(n)), clock=clock,
+                        retain_results=False, buffer_errors=False)
+    futs, inline_errors = [], 0
+    for r in _reqs(n):
+        try:
+            futs.append(bare.submit(r))
+        except InjectedFault:   # inline full-batch flush raises to submitter
+            inline_errors += 1
+    try:
+        bare.drain()
+    except InjectedFault:
+        pass
+    bare_ok = sum(1 for f in futs if f.exception() is None
+                  and np.isfinite(f.result().result.time_ms)
+                  and f.result().result.time_ms <= deadline)
+    bare.close()
+    assert bare_ok / n < 0.5, "the storm must actually hurt the baseline"
+    assert ok > bare_ok
+
+
+@pytest.mark.threads
+def test_chaos_storm_is_reproducible_run_to_run():
+    n = 120
+    def run():
+        _, clock = _fake_clock()
+        svc = ResilientService(_policy(), _factory(_storm(n)), clock=clock,
+                               retry=RetryPolicy(deadline_ms=500.0,
+                                                 max_retries=3))
+        futs = [svc.submit(r) for r in _reqs(n)]
+        svc.drain()
+        stats = svc.stats()
+        svc.close()
+        return (stats["retries"], stats["hedges"], stats["completed"],
+                stats["failed"])
+    assert run() == run()
+
+
+@pytest.mark.threads
+def test_hedged_retry_lands_on_the_runner_up_pair():
+    # the favorite device errors on EVERY uid: attempt 1 always fails,
+    # the hedge must move to Algorithm-1's runner-up feasible pair
+    policy = _policy()
+    favorite = policy.decide(_reqs(1)[0]).pair
+    faults = {favorite[1]: [FaultSpec("error", rate=1.0)]}
+    want = runner_up_route(int(_reqs(1)[0].true_complexity), policy.table,
+                           policy.router.delta, exclude=[favorite]).pair
+    _, clock = _fake_clock()
+    svc = ResilientService(policy, _factory(faults), clock=clock,
+                           retry=RetryPolicy(max_retries=2))
+    fut = svc.submit(_reqs(1)[0])
+    svc.drain()
+    served = fut.result(timeout=5)
+    stats = svc.stats()
+    svc.close()
+    assert served.decision.pair == want != favorite
+    assert stats["retries"] >= 1 and stats["hedges"] >= 1
+
+
+@pytest.mark.threads
+def test_retries_exhausted_carries_the_last_failure():
+    # every device errors: the whole retry budget burns, the outer future
+    # fails with RetriesExhausted chaining the terminal InjectedFault
+    devices = {e.device for e in nominal_profile_table().entries}
+    faults = {d: [FaultSpec("error", rate=1.0)] for d in devices}
+    _, clock = _fake_clock()
+    svc = ResilientService(_policy(), _factory(faults), clock=clock,
+                           retry=RetryPolicy(max_retries=2))
+    fut = svc.submit(_reqs(1)[0])
+    svc.drain()
+    with pytest.raises(RetriesExhausted) as exc:
+        fut.result(timeout=5)
+    assert exc.value.attempts == 3            # 1 try + max_retries
+    assert isinstance(exc.value.__cause__, InjectedFault)
+    stats = svc.stats()
+    svc.close()
+    assert stats["failed"] == 1 and stats["completed"] == 0
+
+
+@pytest.mark.threads
+def test_stall_past_deadline_is_a_miss_and_retries_elsewhere():
+    policy = _policy()
+    favorite = policy.decide(_reqs(1)[0]).pair
+    faults = {favorite[1]: [FaultSpec("stall", rate=1.0, stall_ms=10_000.0)]}
+    _, clock = _fake_clock()
+    svc = ResilientService(policy, _factory(faults), clock=clock,
+                           retry=RetryPolicy(deadline_ms=500.0,
+                                             max_retries=2))
+    fut = svc.submit(_reqs(1)[0])
+    svc.drain()
+    served = fut.result(timeout=5)
+    stats = svc.stats()
+    svc.close()
+    assert served.result.time_ms <= 500.0
+    assert served.decision.pair != favorite
+    assert stats["deadline_misses"] >= 1
+
+
+@pytest.mark.threads
+def test_corrupt_result_is_rejected_and_retried():
+    policy = _policy()
+    favorite = policy.decide(_reqs(1)[0]).pair
+    faults = {favorite[1]: [FaultSpec("corrupt", rate=1.0)]}
+    _, clock = _fake_clock()
+    svc = ResilientService(policy, _factory(faults), clock=clock,
+                           retry=RetryPolicy(max_retries=2))
+    fut = svc.submit(_reqs(1)[0])
+    svc.drain()
+    served = fut.result(timeout=5)
+    svc.close()
+    assert np.isfinite(served.result.time_ms)
+    assert served.decision.pair != favorite
+
+
+@pytest.mark.threads
+def test_wall_clock_deadline_stops_retry_scheduling():
+    # the injectable clock jumps past the deadline between attempts: the
+    # retry is NOT scheduled, the request fails as a deadline miss
+    devices = {e.device for e in nominal_profile_table().entries}
+    faults = {d: [FaultSpec("error", rate=1.0)] for d in devices}
+    fake, clock = _fake_clock()
+    svc = ResilientService(_policy(), _factory(faults), clock=clock,
+                           retry=RetryPolicy(deadline_ms=500.0,
+                                             max_retries=5))
+    fut = svc.submit(_reqs(1)[0])
+    fake[0] = 10.0            # 10 s later on the injectable clock
+    svc.drain()
+    with pytest.raises(RetriesExhausted) as exc:
+        fut.result(timeout=5)
+    assert isinstance(exc.value.__cause__, DeadlineExceeded)
+    assert exc.value.attempts < 6   # budget NOT burned: deadline cut it
+    svc.close()
+
+
+@pytest.mark.threads
+def test_resilient_close_is_idempotent_and_structured():
+    _, clock = _fake_clock()
+    svc = ResilientService(_policy(), _factory({}), clock=clock)
+    fut = svc.submit(_reqs(1)[0])
+    svc.close()
+    assert fut.result(timeout=5).result.time_ms is not None
+    svc.close()                        # idempotent
+    with pytest.raises(ServiceClosed):
+        svc.submit(_reqs(1)[0])
+    with ResilientService(_policy(), _factory({}), clock=clock) as ctx:
+        ctx.submit_batch(_reqs(3))
+    with pytest.raises(ServiceClosed):
+        ctx.submit(_reqs(1)[0])        # __exit__ closed it
+
+
+# ------------------------------------- quarantine breaker (pure ops)
+
+def _arrays():
+    return nominal_profile_table().as_arrays()
+
+
+def test_quarantine_state_counts_consecutive_failures_per_cell():
+    st = with_fails(_arrays().state)
+    assert not np.asarray(st.fails).any()          # all breakers closed
+    st = quarantine_state(st, 3, 0, True)
+    st = quarantine_state(st, 3, 0, True)
+    fails = np.asarray(st.fails)
+    assert fails.sum() == 2 and fails[0].max() == 2   # one cell, row 0
+    st = quarantine_state(st, 3, 0, False)            # success resets
+    assert not np.asarray(st.fails).any()
+
+
+def test_probe_state_closes_the_breaker_pair_wide():
+    st = with_fails(_arrays().state)
+    for row in (0, 1, 2):
+        for _ in range(3):
+            st = quarantine_state(st, 3, row, True)
+    assert np.asarray(st.fails).sum() == 9
+    st_fail = probe_state(st, 3, False)     # failed probe: identity
+    np.testing.assert_array_equal(np.asarray(st_fail.fails),
+                                  np.asarray(st.fails))
+    st_ok = probe_state(st, 3, True)        # success: every row clears
+    assert not np.asarray(st_ok.fails).any()
+
+
+# --------------------------------- quarantine inside the jitted scan
+
+def _scan(quarantine_after=None, fleet=None, steps=160, explore=None):
+    from repro.core.closed_loop import (measurements_from_fleet,
+                                        scan_stream)
+    table = nominal_profile_table()
+    arrays = table.as_arrays()
+    rng = np.random.default_rng(0)
+    counts = rng.integers(1, 20, size=steps)
+    meas = measurements_from_fleet(arrays.pairs, steps, fleet)
+    state, dec = scan_stream(arrays.state, counts, meas, arrays=arrays,
+                             delta=2.0, quarantine_after=quarantine_after,
+                             explore_pairs=explore)
+    return arrays, state, dec
+
+
+def test_scan_zero_fault_parity_quarantine_on_vs_off():
+    """No failures -> arming the breaker changes NOTHING: same decisions,
+    same state numbers (the off mode compiles to an unreachable
+    threshold, so parity is structural)."""
+    arrays, st_off, dec_off = _scan(quarantine_after=None)
+    _, st_on, dec_on = _scan(quarantine_after=3)
+    np.testing.assert_array_equal(dec_on.pair_idx, dec_off.pair_idx)
+    np.testing.assert_array_equal(dec_on.entry_idx, dec_off.entry_idx)
+    for name in ("map_pct", "time_ms", "energy_mwh"):
+        np.testing.assert_array_equal(np.asarray(getattr(st_on, name)),
+                                      np.asarray(getattr(st_off, name)))
+    assert not np.asarray(st_on.fails).any()   # no failure ever counted
+
+
+def test_scan_quarantine_excludes_the_dead_pair():
+    steps, dead_at, q = 160, 30, 3
+    fleet = DriftingFleet([DriftEvent("orin_nano", "dropout",
+                                      start=dead_at, hard=True)])
+    arrays, state, dec = _scan(quarantine_after=q, fleet=fleet, steps=steps)
+    dead = [j for j, (_, d) in enumerate(arrays.pairs) if d == "orin_nano"]
+    routed = np.asarray(dec.pair_idx)
+    assert np.isin(routed[:dead_at], dead).any()   # favorite before death
+    # each (group, pair) cell may burn at most q consecutive failures
+    # before its breaker opens; afterwards the scan routes around it
+    after = routed[dead_at:]
+    n_rows = np.asarray(arrays.state.pair_id).shape[0]
+    assert 0 < np.isin(after, dead).sum() <= q * n_rows * len(dead)
+    assert not np.isin(after[-40:], dead).any()    # steady state: excluded
+    # versus: without the breaker the loop keeps feeding the dead device
+    _, _, dec_off = _scan(quarantine_after=None, fleet=fleet, steps=steps)
+    off_after = np.asarray(dec_off.pair_idx)[dead_at:]
+    assert np.isin(after, dead).sum() < np.isin(off_after, dead).sum()
+
+
+def test_scan_half_open_probe_reopens_a_recovered_pair():
+    steps, q = 200, 3
+    window = DriftEvent("orin_nano", "dropout", start=30, end=90, hard=True)
+    arrays, _, probe_free = _scan(quarantine_after=q, steps=steps,
+                                  fleet=DriftingFleet([window]))
+    dead = [j for j, (_, d) in enumerate(arrays.pairs) if d == "orin_nano"]
+    favorite = int(np.asarray(probe_free.pair_idx)[0])
+    assert favorite in dead
+    # without probes the breaker stays open after recovery: voluntary
+    # routes to the pair never fully resume (only still-closed cells may)
+    late_free = np.asarray(probe_free.pair_idx)[150:]
+    # with a probe schedule hitting the favorite pair after the window,
+    # one SUCCESSFUL probe closes the breaker pair-wide and voluntary
+    # routing returns to it
+    explore = np.full(steps, -1, np.int32)
+    explore[100] = favorite                 # one probe, after recovery
+    _, _, probed = _scan(quarantine_after=q, steps=steps,
+                         fleet=DriftingFleet([window]), explore=explore)
+    late = np.asarray(probed.pair_idx)[150:]
+    assert (late == favorite).sum() > (late_free == favorite).sum()
+    assert (late == favorite).sum() > 30    # the favorite is favorite again

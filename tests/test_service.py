@@ -306,3 +306,90 @@ def test_threaded_flush_results_match_solo_serving(monkeypatch):
                                        max_new_tokens=3)])[0]
         np.testing.assert_array_equal(s.result.tokens, solo.tokens)
     service.close()
+
+
+# --------------------------------------- structured close + error planes
+
+def test_service_closed_is_structured_and_terminal():
+    from repro.serving.service import ServiceClosed
+
+    service = EcoreService(PoolPolicy(_pool()),
+                           lambda d: _StubBackend(d.backend, max_batch=4))
+    fut = service.submit(_req(0, 64))
+    service.close()                      # flushes: the future resolves
+    assert fut.result(5.0).result.uid == 0
+    service.close()                      # idempotent
+    with pytest.raises(ServiceClosed):
+        service.submit(_req(1, 64))
+    with pytest.raises(ServiceClosed):
+        service.submit_batch([_req(1, 64)])
+    with EcoreService(PoolPolicy(_pool()),
+                      lambda d: _StubBackend(d.backend)) as ctx:
+        pass
+    with pytest.raises(ServiceClosed):   # __exit__ closed it
+        ctx.submit(_req(2, 64))
+
+
+@pytest.mark.threads
+def test_buffer_errors_toggle_controls_drain_reraise():
+    """buffer_errors=True (results()-driven drivers): a flusher-swallowed
+    backend error resurfaces at drain().  buffer_errors=False (futures-only
+    drivers): the futures already carry it — drain stays silent instead of
+    double-reporting."""
+    def factory(decision):
+        cls = _FailingBackend if decision.backend == "small" else _StubBackend
+        return cls(decision.backend, max_batch=4)
+
+    for buffered in (True, False):
+        clock = ManualClock()
+        service = EcoreService(PoolPolicy(_pool()), factory,
+                               max_wait_ms=50.0, clock=clock,
+                               buffer_errors=buffered)
+        bad = service.submit_batch([_req(0, 64), _req(1, 64)])  # 'small'
+        clock.advance_ms(51)
+        service.wake()
+        for f in bad:                      # futures carry it either way
+            assert isinstance(f.exception(timeout=5.0), RuntimeError)
+        if buffered:
+            with pytest.raises(RuntimeError, match="backend exploded"):
+                service.drain()
+            service.close()                # error consumed: closes clean
+        else:
+            assert service.drain() == []   # no re-raise, no double report
+            service.close()
+
+
+# ------------------------------------------- queue-wait / service split
+
+@pytest.mark.threads
+def test_queue_wait_excludes_service_time():
+    """The two latency planes must not be folded together: queue wait ends
+    when the flush TRIGGERS (deadline expiry here), service time covers
+    trigger -> completion — slow serving must not inflate 'queue wait'."""
+    clock = ManualClock()
+    service = EcoreService(PoolPolicy(_pool()),
+                           lambda d: _StubBackend(d.backend, max_batch=4),
+                           max_wait_ms=50.0, clock=clock)
+    service.submit(_req(0, 64))          # partial batch: waits for deadline
+    clock.advance_ms(200)                # flusher was slow to get there
+    service.wake()
+    _wait_until(lambda: service.stats()["served"] == 1)
+    stats = service.stats()
+    # wait = submit -> deadline EXPIRY (50 ms), not submit -> completion
+    assert stats["queue_wait_ms"] == [pytest.approx(50.0)]
+    # service = expiry -> completion on the same clock (the remaining 150)
+    assert stats["service_ms"] == [pytest.approx(150.0)]
+    service.close()
+
+
+def test_inline_full_batch_flush_has_zero_queue_wait():
+    clock = ManualClock()
+    service = EcoreService(PoolPolicy(_pool()),
+                           lambda d: _StubBackend(d.backend, max_batch=2),
+                           clock=clock)
+    service.submit(_req(0, 64))
+    service.submit(_req(1, 64))          # fills the batch: inline flush
+    stats = service.stats()
+    assert stats["queue_wait_ms"] == [pytest.approx(0.0)] * 2
+    assert stats["service_ms"] == [pytest.approx(0.0)] * 2
+    service.close()
