@@ -16,6 +16,9 @@ to artifacts/bench/.  Figure map (see DESIGN.md §7):
                   p50/p95 queue wait under the threaded deadline flusher)
   cluster       — sharded req/s scaling over EcoreCluster pods (1/2/4) +
                   jitted shard-selection overhead vs the scalar reference
+  load          — open-loop SLOs (p50/p95/p99, goodput, J/request) under
+                  {steady Poisson, flash crowd} x {fixed, autoscaled} fleets
+                  on the virtual-time LoadDriver (repro.traffic)
   kernels       — kernel timings (CPU oracle path; Pallas checked in tests)
   pool_routing  — framework-level: ECORE over the TPU dry-run pool
   roofline      — per (arch x shape x mesh) roofline terms from the dry-run
@@ -220,10 +223,33 @@ def bench_gateway_hotpath(quick=False):
     }
 
 
+def _run_meta():
+    """Attribution stamp for trajectory records: which commit produced the
+    numbers, when, under which record schema.  Git being unavailable (tar
+    export, shallow CI) degrades to "unknown" rather than failing a bench."""
+    import datetime
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    return {
+        "git_sha": sha or "unknown",
+        "timestamp": datetime.datetime.now(datetime.timezone.utc)
+                             .isoformat(timespec="seconds"),
+        "schema": "bench_gateway/v1",
+    }
+
+
 def _append_gateway_bench(record):
     """Persist the perf trajectory at the repo root (append-only across
-    PRs); the smoke target relies on a FAILED write exiting nonzero."""
+    PRs); the smoke target relies on a FAILED write exiting nonzero.
+    New records are stamped with run metadata (git sha, UTC timestamp,
+    schema tag); pre-existing entries are never rewritten."""
     path = os.path.join(REPO_ROOT, "BENCH_gateway.json")
+    record.setdefault("meta", _run_meta())
     try:
         history = []
         if os.path.exists(path) and os.path.getsize(path) > 0:
@@ -578,6 +604,111 @@ def bench_faults(quick=False):
     return record
 
 
+# ------------------------------------------------- open-loop load harness
+
+def bench_load(quick=False):
+    """Open-loop SLO bench: {steady Poisson, flash crowd} x {fixed 2-pod,
+    autoscaled} on the virtual-time LoadDriver (repro.traffic).
+
+    Arrival rates are tuned from the profile itself: the steady rate puts
+    the fixed 2-pod fleet at ~50% modeled utilization, the flash spike
+    (4x) pushes it past saturation — so the fixed fleet's queue grows for
+    the spike's duration while the autoscaler bursts to max_pods and
+    drains.  Everything rides the ManualClock: a multi-second episode
+    replays in milliseconds and every number is bit-reproducible.  Each
+    cell's summary + per-window SLO records + autoscaler events are
+    appended to BENCH_gateway.json."""
+    from repro.core.policy import DetectionPolicy
+    from repro.core.router import OracleRouter, greedy_route
+    from repro.detection.devices import nominal_profile_table
+    from repro.serving.backend import make_backend, null_run
+    from repro.serving.cluster import Autoscaler, EcoreCluster
+    import repro.traffic as tr
+
+    duration_s = 6.0 if quick else 12.0
+    window_s = 2.0
+    max_wait_ms = 20.0
+    pods, max_pods = 2, 6
+
+    # modeled mean service time of the drift mix -> rates and deadline
+    rng = np.random.default_rng(0)
+    table = nominal_profile_table()
+    mix = rng.choice(len(sc.COUNT_PROBS), p=sc.COUNT_PROBS, size=256)
+    mean_ms = float(np.mean([greedy_route(int(c), table, 5.0).time_ms
+                             for c in mix]))
+    steady_hz = 0.5 * pods * 1e3 / mean_ms      # ~50% fleet utilization
+    deadline_ms = 4.0 * (max_wait_ms + mean_ms)
+
+    def backend_for(decision):
+        return make_backend("detector", decision.pair[0], decision.pair[1],
+                            None, max_batch=4, run_fn=null_run)
+
+    def policy_for(i):
+        t = nominal_profile_table()
+        return DetectionPolicy(OracleRouter(t, 5.0), t)
+
+    def episode(pattern, autoscale):
+        clock = tr.ManualClock()
+        cluster = EcoreCluster(policy_for, backend_for, pods=pods,
+                               max_pods=max_pods, max_wait_ms=max_wait_ms,
+                               clock=clock, retain_results=False,
+                               flusher=False)
+        auto = Autoscaler(cluster, clock, min_pods=pods, max_pods=max_pods,
+                          high_backlog_per_pod=10.0, low_backlog_per_pod=1.0,
+                          cooldown_s=0.5) if autoscale else None
+        arrivals = tr.make_arrivals(pattern, steady_hz, duration_s, seed=7)
+        work = tr.merge_tenants([tr.detector_tenant(
+            "cams", arrivals, seed=1, deadline_ms=deadline_ms)])
+        driver = tr.LoadDriver(cluster, clock, autoscaler=auto,
+                               window_s=window_s)
+        try:
+            driver.run(work)
+        finally:
+            cluster.close()
+        return {"summary": driver.slo.summary(),
+                "windows": driver.slo.window_records(),
+                "autoscaler_events": auto.events if auto else [],
+                "requests": len(work)}
+
+    print("\n== load (open-loop SLOs; virtual time) ==")
+    print(f"steady_hz,{steady_hz:.0f},deadline_ms,{deadline_ms:.0f},"
+          f"duration_s,{duration_s:.0f}")
+    print("pattern,fleet,requests,p50_ms,p95_ms,p99_ms,goodput_fraction,"
+          "goodput_rps,joules_per_request,scale_events")
+    runs = {}
+    for pattern in ("poisson", "flash"):
+        for fleet, autoscale in (("fixed", False), ("autoscaled", True)):
+            r = episode(pattern, autoscale)
+            runs[f"{pattern}_{fleet}"] = r
+            s = r["summary"]
+            print(f"{pattern},{fleet},{r['requests']},{s['p50_ms']:.1f},"
+                  f"{s['p95_ms']:.1f},{s['p99_ms']:.1f},"
+                  f"{s['goodput_fraction']:.3f},{s['goodput_rps']:.1f},"
+                  f"{s['joules_per_request']:.4f},"
+                  f"{len(r['autoscaler_events'])}")
+
+    fixed, auto = runs["flash_fixed"]["summary"], \
+        runs["flash_autoscaled"]["summary"]
+    better = {"p99": auto["p99_ms"] < fixed["p99_ms"],
+              "goodput": auto["goodput_fraction"]
+              >= fixed["goodput_fraction"]}
+    print(f"flash_autoscaled_beats_fixed,p99,{better['p99']},"
+          f"goodput,{better['goodput']}")
+
+    record = {"load": {
+        "settings": {"duration_s": duration_s, "window_s": window_s,
+                     "max_wait_ms": max_wait_ms, "pods": pods,
+                     "max_pods": max_pods, "steady_hz": steady_hz,
+                     "deadline_ms": deadline_ms,
+                     "mean_service_ms": mean_ms},
+        "runs": runs,
+        "flash_autoscaled_beats_fixed": better,
+    }}
+    _append_gateway_bench(record)
+    _save("load", record)
+    return record
+
+
 # ------------------------------------------------- framework pool routing
 
 def bench_pool_routing(quick=False):
@@ -760,6 +891,7 @@ BENCHES = {
     "serve": bench_serve,
     "cluster": bench_cluster,
     "faults": bench_faults,
+    "load": bench_load,
     "kernels": bench_kernels,
     "pool_routing": bench_pool_routing,
     "roofline": bench_roofline,

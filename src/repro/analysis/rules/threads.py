@@ -162,7 +162,10 @@ class WallClockRetry(Rule):
                    "serving plane bypasses the injectable clock — retries "
                    "and backoff must condition-wait on the clock the fault "
                    "tests control, and every spin loop needs an exit")
-    include = ("*/repro/serving/*.py",)
+    # the traffic plane (arrivals, LoadDriver, autoscaler episodes) is
+    # virtual-time by contract: a wall-clock sleep there silently turns a
+    # millisecond replay into real seconds, so it gets the same rule
+    include = ("*/repro/serving/*.py", "*/repro/traffic/*.py")
 
     def check(self, src):
         for node in ast.walk(src.tree):

@@ -2,7 +2,8 @@
 the fused closed loop, gateway."""
 from .groups import DEFAULT_GROUP_RULES, group_of
 from .profiles import (ProfileArrays, ProfileEntry, ProfileState,
-                       ProfileTable, observe_state)
+                       ProfileTable, add_pair, observe_state,
+                       retire_pair)
 from .router import (BASELINE_ROUTERS, GreedyEstimateRouter,
                      HighestMAPPerGroupRouter, HighestMAPRouter,
                      LowestEnergyRouter, LowestInferenceRouter, OracleRouter,

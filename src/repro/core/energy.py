@@ -13,6 +13,15 @@ from repro.detection.devices import DEVICES, EdgeDevice
 
 GATEWAY_DEVICE = DEVICES["pi5"]
 
+#: 1 mWh = 3.6 J
+MWH_TO_J = 3.6
+
+
+def mwh_to_joules(mwh: float) -> float:
+    """Convert milliwatt-hours (the profile/bench unit) to joules (the
+    paper's reporting unit, and what the SLO plane charges per request)."""
+    return mwh * MWH_TO_J
+
 
 def gateway_cost(flops: float) -> Dict[str, float]:
     """Latency/energy of an estimator invocation at the gateway.

@@ -150,6 +150,61 @@ def probe_state(state: ProfileState, pair_idx, success) -> ProfileState:
         fails=jnp.where(pair_mask & success, jnp.int32(0), state.fails))
 
 
+def add_pair(state: ProfileState, *, map_pct, time_ms, energy_mwh,
+             pair_idx: Optional[int] = None) -> Tuple[ProfileState, int]:
+    """Pure fleet-elasticity op: a NEW (model, device) pair joins the
+    profile as one appended column on every group row.  Returns the new
+    state and the pair's index (default: one past the current maximum).
+
+    Each profile argument is a scalar (replicated across groups) or a
+    length-[G] vector (per-group values, e.g. measured mAP).  The column is
+    appended LAST, so the masked argmin in ``decide_state`` sees every
+    existing cell at the same position with the same tie-break order —
+    decisions over the original pairs are bit-identical unless the new pair
+    strictly wins.  Host-side (shapes change, so this cannot run under
+    jit); its inverse ``retire_pair`` is shape-preserving and jit-safe."""
+    import jax.numpy as jnp
+    G, _ = jnp.shape(state.pair_id)
+    if pair_idx is None:
+        pair_idx = int(jnp.max(state.pair_id)) + 1
+
+    def col(v, dtype=jnp.float32):
+        return jnp.broadcast_to(jnp.asarray(v, dtype), (G,)).reshape(G, 1)
+
+    new = state._replace(
+        map_pct=jnp.concatenate([state.map_pct, col(map_pct)], axis=1),
+        time_ms=jnp.concatenate([state.time_ms, col(time_ms)], axis=1),
+        energy_mwh=jnp.concatenate([state.energy_mwh, col(energy_mwh)],
+                                   axis=1),
+        valid=jnp.concatenate([state.valid, jnp.ones((G, 1), bool)], axis=1),
+        pair_id=jnp.concatenate(
+            [state.pair_id, jnp.full((G, 1), pair_idx, jnp.int32)], axis=1),
+        fails=(None if state.fails is None else
+               jnp.concatenate([state.fails, jnp.zeros((G, 1), jnp.int32)],
+                               axis=1)))
+    return new, int(pair_idx)
+
+
+def retire_pair(state: ProfileState, pair_idx) -> ProfileState:
+    """Pure fleet-elasticity op: every cell of ``pair_idx`` becomes a pad
+    (-inf mAP, +inf costs, invalid, ``pair_id=-1``, breaker reset) — the
+    pair leaves the feasible set of every group without changing any array
+    shape, so this is jit/scan-safe and ``pair_idx`` may be traced.
+    ``add_pair`` followed by ``retire_pair`` of the same index restores
+    decisions bit-identically (the extra column is all pads, which the
+    valid mask already ignores)."""
+    import jax.numpy as jnp
+    gone = state.pair_id == jnp.int32(pair_idx)
+    return state._replace(
+        map_pct=jnp.where(gone, -jnp.inf, state.map_pct),
+        time_ms=jnp.where(gone, jnp.inf, state.time_ms),
+        energy_mwh=jnp.where(gone, jnp.inf, state.energy_mwh),
+        valid=jnp.where(gone, False, state.valid),
+        pair_id=jnp.where(gone, jnp.int32(-1), state.pair_id),
+        fails=(None if state.fails is None else
+               jnp.where(gone, jnp.int32(0), state.fails)))
+
+
 @dataclasses.dataclass(frozen=True)
 class ProfileArrays:
     """Snapshot view binding a ``ProfileState`` to one table's identity.

@@ -3,6 +3,8 @@
   PYTHONPATH=src python -m repro.launch.serve --requests 24 --delta 5
   PYTHONPATH=src python -m repro.launch.serve --requests 24 --pods 4
   PYTHONPATH=src python -m repro.launch.serve --requests 24 --async
+  PYTHONPATH=src python -m repro.launch.serve --rate 20 --duration 5 \
+      --pattern flash --pods 2 --max-wait-ms 25   # open-loop SLO replay
 
 On this CPU container backends are REDUCED variants of the assigned archs
 (real prefill+decode runs, batched); the routing profile comes from the
@@ -75,42 +77,151 @@ def synthetic_pool_table(archs) -> ProfileTable:
     return ProfileTable(entries)
 
 
+def _run_open_loop(args, table: ProfileTable, backend_factory) -> int:
+    """--rate mode: replay a generated open-loop arrival stream through the
+    virtual-time LoadDriver and report windowed SLOs.  Arrival times are
+    virtual (the episode replays as fast as the backends serve); the
+    modeled service times come from the routing profile, so queue growth
+    reflects the PROFILED fleet capacity at this rate."""
+    import repro.traffic as tr
+
+    clock = tr.ManualClock()
+    arrivals = tr.make_arrivals(args.pattern, args.rate, args.duration,
+                                seed=args.seed)
+    work = tr.merge_tenants([tr.llm_tenant(
+        "pool", arrivals, seed=args.seed, deadline_ms=args.deadline_ms,
+        prompt_cap=PROMPT_CAP, max_new_tokens=args.max_new)])
+    if args.pods > 1:
+        from repro.serving.cluster import EcoreCluster
+        service = EcoreCluster(
+            lambda i: PoolPolicy(ServingPool(table.copy(),
+                                             delta=args.delta)),
+            backend_factory, pods=args.pods, shard=args.shard,
+            max_wait_ms=args.max_wait_ms, clock=clock,
+            retain_results=False, flusher=False)
+        plane = f"{args.pods}-pod cluster ({args.shard})"
+    else:
+        service = EcoreService(
+            PoolPolicy(ServingPool(table, delta=args.delta)),
+            backend_factory, max_wait_ms=args.max_wait_ms, clock=clock,
+            retain_results=False, buffer_errors=False, flusher=False)
+        plane = "service"
+
+    driver = tr.LoadDriver(service, clock,
+                           window_s=max(args.duration / 10.0, 1.0))
+    t0 = time.time()
+    try:
+        done = driver.run(work)
+    finally:
+        service.close()
+    wall_s = time.time() - t0
+
+    print(f"\nopen-loop replay [{plane}]: {len(done)} requests, "
+          f"pattern={args.pattern}, rate={args.rate:.1f}/s, "
+          f"duration={args.duration:.0f}s virtual ({wall_s:.1f}s wall)")
+    print("window_t_s,n,goodput_rps,p50_ms,p99_ms,queue_wait_p99_ms,"
+          "joules_per_request")
+    for w in driver.slo.window_records():
+        print(f"{w['t_start_s']:.0f},{w['n']},{w['goodput_rps']:.1f},"
+              f"{w['p50_ms']:.1f},{w['p99_ms']:.1f},"
+              f"{w['queue_wait_p99_ms']:.1f},"
+              f"{w['joules_per_request']:.4f}")
+    s = driver.slo.summary()
+    print(f"summary: p50={s['p50_ms']:.1f}ms p95={s['p95_ms']:.1f}ms "
+          f"p99={s['p99_ms']:.1f}ms goodput={s['goodput_fraction']:.3f} "
+          f"({s['goodput_rps']:.1f}/s) "
+          f"J/req={s['joules_per_request']:.4f} "
+          f"failed={s['failed']}")
+    return 0
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=24)
-    ap.add_argument("--delta", type=float, default=5.0)
-    ap.add_argument("--archs", nargs="*", default=list(DEFAULT_POOL))
-    ap.add_argument("--dryrun-artifact", default="artifacts/dryrun.jsonl")
-    ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--max-wait-ms", type=float, default=None,
-                    help="serve a partial batch once its oldest request "
-                         "has waited this long (default: wait for a full "
-                         "batch); honored by the service's background "
-                         "flusher thread")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--adapt", action="store_true",
-                    help="EWMA-update the routing profile from measured "
-                         "per-request latency (closed loop)")
-    ap.add_argument("--pods", type=int, default=1,
-                    help="shard the stream over an EcoreCluster of N "
-                         "service pods (each pod: own policy over a copy "
-                         "of the profile, own queues and backends)")
-    ap.add_argument("--shard", default="least_loaded",
-                    choices=["least_loaded", "rendezvous"],
-                    help="cluster shard-selection policy (with --pods > 1)")
-    ap.add_argument("--async", dest="use_async", action="store_true",
-                    help="drive one pod through the AsyncEcoreService "
-                         "asyncio facade (incompatible with --pods > 1)")
-    ap.add_argument("--profile-out", default=None,
-                    help="write the routing profile (with any --adapt "
-                         "updates folded in) to this json path after the "
-                         "run, to warm-start a later session; under "
-                         "--pods each pod adapts a PRIVATE copy, so the "
-                         "shared source profile is written unadapted")
+    ap = argparse.ArgumentParser(
+        description="ECORE serving driver: closed-loop request stream by "
+                    "default, open-loop load replay with --rate")
+
+    serving = ap.add_argument_group(
+        "serving", "workload shape, routing profile, dispatch batching")
+    serving.add_argument("--requests", type=int, default=24)
+    serving.add_argument("--delta", type=float, default=5.0)
+    serving.add_argument("--archs", nargs="*", default=list(DEFAULT_POOL))
+    serving.add_argument("--dryrun-artifact",
+                         default="artifacts/dryrun.jsonl")
+    serving.add_argument("--max-new", type=int, default=8)
+    serving.add_argument("--max-batch", type=int, default=8)
+    serving.add_argument("--max-wait-ms", type=float, default=None,
+                         help="serve a partial batch once its oldest "
+                              "request has waited this long (default: wait "
+                              "for a full batch); honored by the service's "
+                              "background flusher thread")
+    serving.add_argument("--seed", type=int, default=0)
+    serving.add_argument("--adapt", action="store_true",
+                         help="EWMA-update the routing profile from "
+                              "measured per-request latency (closed loop)")
+    serving.add_argument("--profile-out", default=None,
+                         help="write the routing profile (with any --adapt "
+                              "updates folded in) to this json path after "
+                              "the run, to warm-start a later session; "
+                              "under --pods each pod adapts a PRIVATE copy, "
+                              "so the shared source profile is written "
+                              "unadapted")
+
+    scale = ap.add_argument_group(
+        "resilience / scale-out", "how many pods serve, and through which "
+        "request plane")
+    scale.add_argument("--pods", type=int, default=1,
+                       help="shard the stream over an EcoreCluster of N "
+                            "service pods (each pod: own policy over a "
+                            "copy of the profile, own queues and backends)")
+    scale.add_argument("--shard", default="least_loaded",
+                       choices=["least_loaded", "rendezvous"],
+                       help="cluster shard-selection policy (with "
+                            "--pods > 1)")
+    scale.add_argument("--async", dest="use_async", action="store_true",
+                       help="drive one pod through the AsyncEcoreService "
+                            "asyncio facade (incompatible with --pods > 1)")
+
+    traffic = ap.add_argument_group(
+        "traffic", "open-loop load replay (repro.traffic) — requests "
+        "arrive at generated times on a virtual clock instead of the "
+        "closed --requests loop")
+    traffic.add_argument("--rate", type=float, default=None,
+                         help="mean arrival rate in requests/s; turns the "
+                              "driver into an open-loop LoadDriver replay")
+    traffic.add_argument("--duration", type=float, default=None,
+                         help="episode length in virtual seconds "
+                              "(default 10; needs --rate)")
+    traffic.add_argument("--pattern", default=None,
+                         choices=["poisson", "diurnal", "flash"],
+                         help="arrival process (default poisson; needs "
+                              "--rate)")
+    traffic.add_argument("--deadline-ms", type=float, default=None,
+                         help="per-request SLO deadline for goodput "
+                              "accounting (needs --rate)")
+
     args = ap.parse_args(argv)
-    if args.use_async and args.pods > 1:
+    if args.pods < 1:
+        ap.error(f"--pods {args.pods}: need at least one pod")
+    if args.use_async and args.pods != 1:
         ap.error("--async drives a single pod; use --pods 1 with it")
+    if args.rate is None:
+        for flag, v in (("--duration", args.duration),
+                        ("--pattern", args.pattern),
+                        ("--deadline-ms", args.deadline_ms)):
+            if v is not None:
+                ap.error(f"{flag} is open-loop traffic shape; it needs "
+                         f"--rate")
+    else:
+        if args.rate <= 0:
+            ap.error(f"--rate {args.rate}: need > 0")
+        if args.use_async:
+            ap.error("--rate replays through the sync LoadDriver; "
+                     "drop --async")
+        if args.adapt:
+            ap.error("--rate is an open-loop replay; --adapt's "
+                     "per-request closed loop is not supported with it")
+        args.duration = 10.0 if args.duration is None else args.duration
+        args.pattern = args.pattern or "poisson"
 
     if os.path.exists(args.dryrun_artifact):
         table = pool_table_from_dryrun(args.dryrun_artifact)
@@ -141,6 +252,9 @@ def main(argv=None):
         cfg = get_config(decision.backend).reduced()
         return Backend(decision.backend, cfg, max_batch=args.max_batch,
                        max_seq=96, seed=args.seed)
+
+    if args.rate is not None:
+        return _run_open_loop(args, table, backend_factory)
 
     def handle(served):
         observed = set()  # one observation per serve_batch call, not result

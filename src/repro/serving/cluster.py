@@ -218,18 +218,28 @@ class EcoreCluster:
                  max_wait_ms: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
                  retain_results: bool = True,
-                 pod_fail_after: Optional[int] = None):
+                 pod_fail_after: Optional[int] = None,
+                 max_pods: Optional[int] = None,
+                 flusher: bool = True):
         if pods < 1:
             raise ValueError(f"pods={pods}: need at least one pod")
         if shard not in SHARD_MODES:
             raise ValueError(
                 f"unknown shard mode {shard!r}; one of {SHARD_MODES}")
+        self.max_pods = pods if max_pods is None else max_pods
+        if self.max_pods < pods:
+            raise ValueError(
+                f"max_pods={max_pods} below initial pods={pods}")
         self.shard = shard
+        # kept so add_pod() can stand up new pods with identical wiring
+        self._policy_factory = policy_factory
+        self._backend_factory = backend_factory
+        self._max_wait_ms = max_wait_ms
+        self._clock = clock
+        self._retain = retain_results
+        self._pod_flusher = flusher
         self.pods: List[EcoreService] = [
-            EcoreService(policy_factory(i), backend_factory,
-                         max_wait_ms=max_wait_ms, clock=clock,
-                         retain_results=retain_results)
-            for i in range(pods)]
+            self._make_pod(i) for i in range(pods)]
         self._lock = threading.Condition()
         #: live queue depth per pod (in-flight requests; shard input)
         self._depth = np.zeros(pods, np.int64)
@@ -244,9 +254,21 @@ class EcoreCluster:
         self._consec_errors = np.zeros(pods, np.int64)
         self.resubmitted = 0          # requests moved off a failed pod
         self._moving = 0              # resubmissions not yet re-enqueued
-        self._exec = ThreadPoolExecutor(max_workers=pods,
+        #: pods drained by the autoscaler (alive=False but healthy — the
+        #: first to revive on scale-up, unlike FAILED pods which stay dead)
+        self._retired: set = set()
+        # sized for the elastic ceiling: ThreadPoolExecutor cannot grow
+        self._exec = ThreadPoolExecutor(max_workers=self.max_pods,
                                         thread_name_prefix="ecore-pod")
         self._closed = False
+
+    def _make_pod(self, index: int) -> EcoreService:
+        return EcoreService(self._policy_factory(index),
+                            self._backend_factory,
+                            max_wait_ms=self._max_wait_ms,
+                            clock=self._clock,
+                            retain_results=self._retain,
+                            flusher=self._pod_flusher)
 
     # ------------------------------------------------------------ submit
 
@@ -464,6 +486,90 @@ class EcoreCluster:
             raise first_exc
         return out  # type: ignore[return-value]
 
+    # -------------------------------------------------------- elasticity
+
+    def can_add_pod(self) -> bool:
+        """True when scale-up is possible: a retired pod can revive, or the
+        fleet is still below ``max_pods``."""
+        with self._lock:
+            return bool(self._retired) or len(self.pods) < self.max_pods
+
+    def add_pod(self) -> int:
+        """Grow the fleet by one pod and return its index.  A RETIRED pod
+        (drained by ``retire_pod``, still healthy) revives in place —
+        lowest index first, so grow/shrink cycles reuse warm pods and their
+        adapted policies — otherwise a fresh pod is appended, up to
+        ``max_pods``."""
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("cluster is closed")
+            if self._retired:
+                pod = min(self._retired)
+                self._retired.discard(pod)
+                self._alive[pod] = True
+                self._consec_errors[pod] = 0
+                self._lock.notify_all()
+                return pod
+            pod = len(self.pods)
+            if pod >= self.max_pods:
+                raise RuntimeError(
+                    f"cluster is at max_pods={self.max_pods}")
+            self.pods.append(self._make_pod(pod))
+            self._depth = np.append(self._depth, 0)
+            self.shard_counts = np.append(self.shard_counts, 0)
+            self._alive = np.append(self._alive, True)
+            self._consec_errors = np.append(self._consec_errors, 0)
+            self._lock.notify_all()
+            return pod
+
+    def retire_pod(self, pod: Optional[int] = None) -> int:
+        """Shrink the fleet by one pod: mask it out of shard selection,
+        remember it as retired (revivable), then DRAIN it so every queued
+        request completes — a scale-down never drops work.  Default victim
+        is the highest-index live pod; the last live pod is never retired."""
+        with self._lock:
+            live = [i for i, a in enumerate(self._alive) if a]
+            if pod is None:
+                if not live:
+                    raise NoLivePods("no live pod to retire")
+                pod = live[-1]
+            if not (0 <= pod < len(self.pods)) or not self._alive[pod]:
+                raise ValueError(f"pod {pod} is not live")
+            if len(live) <= 1:
+                raise ValueError("refusing to retire the last live pod")
+            self._alive[pod] = False
+            self._retired.add(pod)
+            self._lock.notify_all()
+        # outside the cluster lock: drain takes the pod's own condition and
+        # resolves futures (whose callbacks may re-enter cluster state)
+        self.pods[pod].drain()
+        return pod
+
+    def live_pods(self) -> List[int]:
+        with self._lock:
+            return [i for i, a in enumerate(self._alive) if a]
+
+    def queue_depths(self) -> List[int]:
+        """Live in-flight depth per pod (the shard-selection input)."""
+        with self._lock:
+            return self._depth.tolist()
+
+    def owner_of(self, uid: int) -> Optional[int]:
+        """Pod that owns ``uid``'s decision (None if unknown/evicted)."""
+        with self._lock:
+            return self._owner.get(uid)
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest ``max_wait_ms`` expiry across every pod's queues (the
+        virtual-time driver's next flush event), or None."""
+        deadlines = [d for p in list(self.pods)
+                     if (d := p.next_deadline()) is not None]
+        return min(deadlines) if deadlines else None
+
+    def flush_due(self, now: Optional[float] = None) -> int:
+        """Synchronously flush every pod queue whose deadline expired."""
+        return sum(p.flush_due(now) for p in list(self.pods))
+
     # ----------------------------------------------------------- observe
 
     def observe(self, obs: Observation) -> None:
@@ -547,8 +653,11 @@ class EcoreCluster:
         with self._lock:
             alive = self._alive.tolist()
             resubmitted = self.resubmitted
+            retired = sorted(self._retired)
         return {
             "pods": len(self.pods),
+            "max_pods": self.max_pods,
+            "retired": retired,
             "shard_mode": self.shard,
             "shard_counts": self.shard_counts.tolist(),
             "backends": sum(s["backends"] for s in per_pod),
@@ -561,3 +670,76 @@ class EcoreCluster:
             "resubmitted": resubmitted,
             "per_pod": per_pod,
         }
+
+
+# ------------------------------------------------------------ autoscaler
+
+class Autoscaler:
+    """Queue-depth-driven fleet elasticity with hysteresis, entirely on the
+    injectable clock — no background thread, no wall-clock sleeps.
+
+    The owner of time (``repro.traffic.LoadDriver``, or any event loop)
+    calls ``tick(backlog)`` whenever the backlog signal changes.  Backlog
+    is normalized per LIVE pod and compared against two watermarks:
+
+      * backlog/pod >= ``high_backlog_per_pod``  -> ``add_pod`` (revive a
+        retired pod, else append, up to ``max_pods``);
+      * backlog/pod <= ``low_backlog_per_pod``   -> ``retire_pod`` (drain
+        the highest-index live pod, down to ``min_pods``).
+
+    The gap between the watermarks plus ``cooldown_s`` between actions is
+    the hysteresis: a backlog oscillating inside the band changes nothing,
+    and a spike cannot flap the fleet faster than one pod per cooldown.
+    Every action is appended to ``events`` (virtual timestamp, action, pod,
+    backlog, resulting live count) — the bench's audit trail."""
+
+    def __init__(self, cluster: EcoreCluster,
+                 clock: Callable[[], float] = time.monotonic, *,
+                 min_pods: int = 1, max_pods: Optional[int] = None,
+                 high_backlog_per_pod: float = 8.0,
+                 low_backlog_per_pod: float = 1.0,
+                 cooldown_s: float = 2.0):
+        if min_pods < 1:
+            raise ValueError(f"min_pods={min_pods}: need >= 1")
+        self.max_pods = (cluster.max_pods if max_pods is None
+                         else min(max_pods, cluster.max_pods))
+        if self.max_pods < min_pods:
+            raise ValueError(
+                f"max_pods={self.max_pods} below min_pods={min_pods}")
+        if low_backlog_per_pod >= high_backlog_per_pod:
+            raise ValueError(
+                f"watermarks must leave a hysteresis band: "
+                f"low={low_backlog_per_pod} >= high={high_backlog_per_pod}")
+        self.cluster = cluster
+        self.clock = clock
+        self.min_pods = min_pods
+        self.high = high_backlog_per_pod
+        self.low = low_backlog_per_pod
+        self.cooldown_s = cooldown_s
+        self._last_action_t = -float("inf")
+        self.events: List[Dict] = []
+
+    def tick(self, backlog: int) -> Optional[str]:
+        """Evaluate the watermarks against ``backlog``; returns "add",
+        "retire", or None (in cooldown / inside the hysteresis band)."""
+        now = self.clock()
+        if now - self._last_action_t < self.cooldown_s:
+            return None
+        live = self.cluster.live_pods()
+        n = len(live)
+        per_pod = backlog / max(n, 1)
+        if (per_pod >= self.high and n < self.max_pods
+                and self.cluster.can_add_pod()):
+            pod = self.cluster.add_pod()
+            action = "add"
+        elif per_pod <= self.low and n > self.min_pods:
+            pod = self.cluster.retire_pod()
+            action = "retire"
+        else:
+            return None
+        self._last_action_t = now
+        self.events.append({
+            "t_s": now, "action": action, "pod": pod, "backlog": backlog,
+            "live_pods": len(self.cluster.live_pods()),
+        })
+        return action

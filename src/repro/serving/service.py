@@ -72,7 +72,8 @@ class EcoreService:
                  max_wait_ms: Optional[float] = None,
                  clock: Callable[[], float] = time.monotonic,
                  retain_results: bool = True,
-                 buffer_errors: bool = True):
+                 buffer_errors: bool = True,
+                 flusher: bool = True):
         self.policy = policy
         self.max_wait_ms = max_wait_ms
         self._factory = backend_factory
@@ -112,7 +113,11 @@ class EcoreService:
         self.flusher_passes = 0     # loop iterations (test observability)
         self._closed = False
         self._flusher: Optional[threading.Thread] = None
-        if max_wait_ms is not None:
+        # flusher=False keeps deadline semantics but hands WHEN to the
+        # caller: a virtual-time driver (repro.traffic.LoadDriver) advances
+        # its clock to next_deadline() and calls flush_due() itself, so
+        # batch composition is a pure function of the workload
+        if max_wait_ms is not None and flusher:
             self._flusher = threading.Thread(target=self._flush_loop,
                                              name="ecore-flusher",
                                              daemon=True)
@@ -220,6 +225,26 @@ class EcoreService:
         this after advancing their clock)."""
         with self._cond:
             self._cond.notify_all()
+
+    def next_deadline(self) -> Optional[float]:
+        """Earliest pending ``max_wait_ms`` expiry across all queues, or
+        None when nothing is batched (or no deadline is configured).  A
+        virtual-time driver advances its clock here, then ``flush_due``."""
+        with self._cond:
+            deadlines = [d for q in self._queues.values()
+                         if (d := q.next_deadline()) is not None]
+            return min(deadlines) if deadlines else None
+
+    def flush_due(self, now: Optional[float] = None) -> int:
+        """Flush every queue whose deadline has expired by ``now``
+        (default: the injected clock) — the flusher thread's one pass,
+        callable synchronously.  Returns the number of queues flushed;
+        backend errors follow the same plane as the thread (buffered for
+        drain()/close() when ``buffer_errors``, and the batch's futures
+        always carry them)."""
+        with self._cond:
+            return self._flush_due_locked(self._clock() if now is None
+                                          else now)
 
     @property
     def pending_requests(self) -> int:
@@ -335,18 +360,25 @@ class EcoreService:
                 if wait_s > 0:
                     self._cond.wait(min(wait_s, self.FLUSH_TICK_S))
                     continue
-                now = self._clock()
-                for key, q in list(self._queues.items()):
-                    nd = q.next_deadline()
-                    if nd is not None and nd <= now:
-                        q.deadline_flushes += 1
-                        try:
-                            # wait ended when the deadline EXPIRED, not when
-                            # the flusher got the lock back
-                            self._dispatch(key, q, q.flush, t_trigger=nd)
-                        except Exception as exc:
-                            # futures carry the backend error and drain()/
-                            # close() re-raise it; the flusher must survive
-                            # to serve the other queues
-                            if self._buffer_errors:
-                                self._errors.append(exc)
+                self._flush_due_locked(self._clock())
+
+    def _flush_due_locked(self, now: float) -> int:
+        """Flush queues whose deadline expired by ``now``; caller holds
+        ``_cond``.  Shared by the flusher thread and ``flush_due``."""
+        flushed = 0
+        for key, q in list(self._queues.items()):
+            nd = q.next_deadline()
+            if nd is not None and nd <= now:
+                q.deadline_flushes += 1
+                flushed += 1
+                try:
+                    # wait ended when the deadline EXPIRED, not when
+                    # the flush got the lock
+                    self._dispatch(key, q, q.flush, t_trigger=nd)
+                except Exception as exc:
+                    # futures carry the backend error and drain()/
+                    # close() re-raise it; flushing must survive
+                    # to serve the other queues
+                    if self._buffer_errors:
+                        self._errors.append(exc)
+        return flushed

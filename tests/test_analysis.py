@@ -341,6 +341,37 @@ def test_eco304_nested_loop_break_does_not_bound_outer():
     assert rules_of(vs) == ["ECO304"]
 
 
+def test_eco304_covers_traffic_plane():
+    # the traffic plane is virtual-time by contract: wall-clock sleeps are
+    # flagged there exactly like in serving, with the same suppression
+    TRAFFIC = "src/repro/traffic/mod.py"
+    sleepy = src("""
+        import time
+
+        def pace(self, dt):
+            time.sleep(dt)
+    """)
+    assert rules_of(check_source(sleepy, path=TRAFFIC,
+                                 select=["ECO304"])) == ["ECO304"]
+    suppressed = src("""
+        import time
+
+        def pace(self, dt):
+            # repro-lint: disable=ECO304 -- wall-clock pacing demo
+            time.sleep(dt)
+    """)
+    assert check_source(suppressed, path=TRAFFIC, select=["ECO304"]) == []
+    # the OTHER serving rules stay serving-only: the traffic plane has no
+    # flusher thread to protect
+    assert check_source(src("""
+        def f():
+            try:
+                g()
+            except:
+                pass
+    """), path=TRAFFIC, select=["ECO303"]) == []
+
+
 def test_eco304_only_applies_to_serving_and_suppression_works():
     sleepy = src("""
         import time

@@ -1,0 +1,592 @@
+"""repro.traffic: arrivals, SLO sketches, LoadDriver, fleet elasticity.
+
+Everything here runs on the ManualClock — no wall-clock sleeps, no
+flusher threads (services are built with ``flusher=False``), so every
+episode is bit-reproducible and the suite stays fast.
+"""
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+
+import repro.traffic as tr
+from repro.core.energy import mwh_to_joules
+from repro.traffic.slo import Completion
+
+
+# ------------------------------------------------------------- arrivals
+
+
+def test_poisson_arrivals_deterministic_sorted_and_bounded():
+    a = tr.poisson_arrivals(40.0, 5.0, seed=11)
+    b = tr.poisson_arrivals(40.0, 5.0, seed=11)
+    assert np.array_equal(a, b)
+    assert np.all(np.diff(a) >= 0)
+    assert a[0] >= 0.0 and a[-1] < 5.0
+    assert not np.array_equal(a, tr.poisson_arrivals(40.0, 5.0, seed=12))
+
+
+def test_all_patterns_deterministic_and_offset_by_t0():
+    for pattern in tr.ARRIVAL_PATTERNS:
+        a = tr.make_arrivals(pattern, 20.0, 4.0, seed=3)
+        b = tr.make_arrivals(pattern, 20.0, 4.0, seed=3)
+        assert np.array_equal(a, b), pattern
+        shifted = tr.make_arrivals(pattern, 20.0, 4.0, seed=3, t0=100.0)
+        assert np.allclose(shifted, a + 100.0), pattern
+
+
+def test_make_arrivals_rejects_unknown_pattern():
+    with pytest.raises(ValueError, match="unknown arrival pattern"):
+        tr.make_arrivals("burst", 1.0, 1.0)
+
+
+def test_degenerate_rates_yield_empty_streams():
+    assert len(tr.poisson_arrivals(0.0, 10.0)) == 0
+    assert len(tr.poisson_arrivals(5.0, 0.0)) == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(rate=st.floats(min_value=5.0, max_value=120.0),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_poisson_empirical_rate(rate, seed):
+    duration = 20.0
+    n = len(tr.poisson_arrivals(rate, duration, seed=seed))
+    expected = rate * duration
+    # Poisson count: mean n, std sqrt(n); 6 sigma keeps flakes impossible
+    assert abs(n - expected) < 6.0 * np.sqrt(expected) + 10
+
+
+@settings(max_examples=8, deadline=None)
+@given(base=st.floats(min_value=10.0, max_value=60.0),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_diurnal_empirical_rate_over_whole_periods(base, seed):
+    # whole periods: the sinusoid integrates out, mean rate = base
+    period, duration = 10.0, 40.0
+    ts = tr.diurnal_arrivals(base, duration, period_s=period, seed=seed)
+    expected = base * duration
+    assert abs(len(ts) - expected) < 6.0 * np.sqrt(expected) + 10
+    # and the intensity genuinely swings: peak-phase quarters beat
+    # trough-phase quarters (amplitude 0.5 -> 3x intensity ratio)
+    phase = (ts % period) / period
+    peak = np.sum((phase >= 0.0) & (phase < 0.5))    # sin >= 0 half
+    trough = np.sum(phase >= 0.5)
+    assert peak > trough
+
+
+def test_flash_crowd_spike_concentrates_mass():
+    ts = tr.flash_crowd_arrivals(10.0, 10.0, spike_hz=80.0,
+                                 spike_start_s=4.0, spike_len_s=2.0,
+                                 seed=5)
+    in_spike = np.sum((ts >= 4.0) & (ts < 6.0))
+    outside = len(ts) - in_spike
+    # 2s at 80/s vs 8s at 10/s: the spike holds ~2/3 of the mass
+    assert in_spike > outside
+
+
+def test_flash_crowd_rejects_spike_below_base():
+    with pytest.raises(ValueError, match="below base"):
+        tr.flash_crowd_arrivals(10.0, 10.0, spike_hz=5.0)
+
+
+def test_diurnal_amplitude_validation():
+    with pytest.raises(ValueError, match="amplitude"):
+        tr.diurnal_arrivals(10.0, 10.0, amplitude=1.5)
+
+
+def test_manual_clock_semantics():
+    clock = tr.ManualClock(5.0)
+    assert clock() == 5.0
+    clock.advance(1.5)
+    assert clock() == 6.5
+    clock.advance_to(6.0)          # behind now: clamped, never rewinds
+    assert clock() == 6.5
+    clock.advance_to(10.0)
+    assert clock() == 10.0
+    with pytest.raises(ValueError):
+        clock.advance(-0.1)
+
+
+# ------------------------------------------------------------ SLO plane
+
+
+def test_latency_sketch_relative_error_bound():
+    rng = np.random.default_rng(0)
+    vals = rng.lognormal(mean=3.0, sigma=1.2, size=20_000)
+    sk = tr.LatencySketch(rel_err=0.01)
+    for v in vals:
+        sk.add(float(v))
+    for q in (0.1, 0.5, 0.9, 0.95, 0.99):
+        exact = float(np.quantile(vals, q))
+        assert abs(sk.quantile(q) - exact) / exact < 0.03, q
+    assert np.isclose(sk.mean, vals.mean())
+
+
+def test_latency_sketch_merge_equals_bulk_add():
+    rng = np.random.default_rng(1)
+    a, b = rng.exponential(10.0, 500), rng.exponential(40.0, 700)
+    ska, skb, skall = (tr.LatencySketch() for _ in range(3))
+    for v in a:
+        ska.add(float(v))
+        skall.add(float(v))
+    for v in b:
+        skb.add(float(v))
+        skall.add(float(v))
+    merged = ska.merge(skb)
+    assert merged.count == skall.count
+    for q in (0.5, 0.95, 0.99):
+        assert merged.quantile(q) == skall.quantile(q)
+
+
+def test_latency_sketch_zero_bucket_and_validation():
+    sk = tr.LatencySketch(min_value=1e-3)
+    for v in (0.0, 0.0005, 0.001):
+        sk.add(v)
+    assert sk.quantile(0.5) == 0.0
+    with pytest.raises(ValueError):
+        sk.add(-1.0)
+    with pytest.raises(ValueError):
+        sk.add(float("nan"))
+    with pytest.raises(ValueError):
+        sk.quantile(1.5)
+    with pytest.raises(ValueError):
+        tr.LatencySketch().merge(tr.LatencySketch(rel_err=0.05))
+
+
+def _completion(uid, t_arr, t_start, t_done, *, tenant="a", ok=True,
+                deadline_ms=None, energy_mwh=0.0, service_ms=None):
+    if service_ms is None:
+        service_ms = (t_done - t_start) * 1e3
+    return Completion(uid=uid, tenant=tenant, t_arrival=t_arr,
+                      t_start=t_start, t_done=t_done, service_ms=service_ms,
+                      energy_mwh=energy_mwh, deadline_ms=deadline_ms, ok=ok)
+
+
+def test_completion_latency_split_and_deadline_verdict():
+    c = _completion(0, 1.0, 1.2, 1.5, deadline_ms=600.0)
+    assert np.isclose(c.queue_wait_ms, 200.0)
+    assert np.isclose(c.e2e_ms, 500.0)
+    assert c.within_deadline
+    assert not _completion(1, 1.0, 1.2, 1.7,
+                           deadline_ms=600.0).within_deadline
+    assert not _completion(2, 1.0, 1.2, 1.3, ok=False,
+                           deadline_ms=600.0).within_deadline
+    assert _completion(3, 1.0, 1.2, 9.0).within_deadline  # no deadline
+
+
+def test_windowed_slo_buckets_by_completion_time():
+    slo = tr.WindowedSLO(window_s=1.0)
+    slo.record(_completion(0, 0.0, 0.1, 0.5, energy_mwh=2.0))
+    slo.record(_completion(1, 0.2, 0.3, 0.9, energy_mwh=2.0))
+    slo.record(_completion(2, 0.8, 1.5, 2.5, energy_mwh=5.0,
+                           deadline_ms=100.0))
+    recs = slo.window_records()
+    assert [r["t_start_s"] for r in recs] == [0.0, 2.0]
+    assert recs[0]["n"] == 2 and recs[1]["n"] == 1
+    assert np.isclose(recs[0]["joules_per_request"],
+                      mwh_to_joules(4.0) / 2)
+    assert recs[0]["goodput_rps"] == 2.0      # no deadline: served = good
+    assert recs[1]["goodput_rps"] == 0.0      # 1700ms e2e vs 100ms deadline
+    s = slo.summary()
+    assert s["completions"] == 3 and s["failed"] == 0
+    assert np.isclose(s["goodput_fraction"], 2 / 3)
+    assert s["windows"] == 2
+
+
+def test_windowed_slo_per_tenant_counts():
+    slo = tr.WindowedSLO(window_s=10.0)
+    slo.record(_completion(0, 0.0, 0.0, 1.0, tenant="det"))
+    slo.record(_completion(1, 0.0, 0.0, 1.0, tenant="llm", ok=False))
+    t = slo.window_records()[0]["tenants"]
+    assert t["det"] == {"n": 1, "good": 1}
+    assert t["llm"] == {"n": 1, "good": 0}
+
+
+# ------------------------------------------------------------- tenants
+
+
+def test_detector_tenant_counts_drift_at_shift_frac():
+    arr = np.linspace(0.0, 10.0, 400)
+    ten = tr.detector_tenant("cam", arr, seed=0, shift_frac=0.5)
+    reqs = [ten.make_request(uid, i) for uid, i in enumerate(range(400))]
+    first = np.mean([r.true_complexity for r in reqs[:200]])
+    second = np.mean([r.true_complexity for r in reqs[200:]])
+    # COUNT_PROBS is sparse-heavy; its mirror is crowded-heavy
+    assert second > first + 1.0
+
+
+def test_llm_tenant_prompt_lengths_and_cap():
+    arr = np.linspace(0.0, 1.0, 50)
+    ten = tr.llm_tenant("llm", arr, seed=0, prompt_cap=48)
+    for i in range(50):
+        r = ten.make_request(i, i)
+        assert r.complexity in (32, 128, 1024, 4096, 40_000)
+        assert len(r.payload) == min(r.complexity, 48)
+
+
+def test_merge_tenants_orders_by_time_and_assigns_unique_uids():
+    a = tr.detector_tenant("a", np.array([0.5, 2.0]), seed=0)
+    b = tr.llm_tenant("b", np.array([1.0, 1.5]), seed=0)
+    merged = tr.merge_tenants([a, b])
+    assert [t.tenant for t in merged] == ["a", "b", "b", "a"]
+    assert [t.t for t in merged] == [0.5, 1.0, 1.5, 2.0]
+    assert [t.request.uid for t in merged] == [0, 1, 2, 3]
+
+
+def test_merge_tenants_requests_independent_of_merge_order():
+    arr = np.linspace(0.0, 2.0, 20)
+    mk = lambda: [tr.detector_tenant("a", arr, seed=1),
+                  tr.llm_tenant("b", arr + 0.01, seed=2)]
+    ab = tr.merge_tenants(mk())
+    ba = tr.merge_tenants(list(reversed(mk())))
+    # same global timeline -> same per-tenant payloads at each time slot
+    by_time_ab = {(t.t, t.tenant): t.request.true_complexity
+                  for t in ab if t.tenant == "a"}
+    by_time_ba = {(t.t, t.tenant): t.request.true_complexity
+                  for t in ba if t.tenant == "a"}
+    assert by_time_ab == by_time_ba
+
+
+# ------------------------------------------------ profile elasticity ops
+
+
+def _nominal_state():
+    from repro.detection.devices import nominal_profile_table
+    table = nominal_profile_table()
+    return table.as_arrays()
+
+
+def _decide_all(state, arrays):
+    import jax.numpy as jnp
+    from repro.core import DEFAULT_GROUP_RULES
+    from repro.core.router import decide_state, rules_arrays
+    lo, hi, rr = rules_arrays(DEFAULT_GROUP_RULES, arrays.row_of)
+    out = []
+    for c in range(9):
+        g, col, ok = decide_state(state, jnp.int32(c), 5.0, lo, hi, rr)
+        out.append((int(g), int(col), bool(ok)))
+    return out
+
+
+def test_add_then_retire_pair_restores_decisions_bit_identically():
+    from repro.core import add_pair, retire_pair
+    arrays = _nominal_state()
+    base = _decide_all(arrays.state, arrays)
+    grown, idx = add_pair(arrays.state, map_pct=10.0, time_ms=1e6,
+                          energy_mwh=1e6)
+    assert idx == len(arrays.pairs)
+    assert grown.pair_id.shape[1] == arrays.state.pair_id.shape[1] + 1
+    shrunk = retire_pair(grown, idx)
+    assert _decide_all(shrunk, arrays) == base
+    # the retired column is a full pad: invalid, -1 id, infinite costs
+    col = np.asarray(shrunk.valid)[:, -1]
+    assert not col.any()
+    assert (np.asarray(shrunk.pair_id)[:, -1] == -1).all()
+    assert np.isinf(np.asarray(shrunk.time_ms)[:, -1]).all()
+
+
+def test_add_pair_strictly_better_pair_wins():
+    import jax.numpy as jnp
+    from repro.core import add_pair
+    arrays = _nominal_state()
+    grown, idx = add_pair(arrays.state, map_pct=99.0, time_ms=0.01,
+                          energy_mwh=1e-9)
+    decisions = _decide_all(grown, arrays)
+    last_col = grown.pair_id.shape[1] - 1
+    assert all(col == last_col for _, col, ok in decisions if ok)
+    assert (np.asarray(grown.fails)[:, -1] == 0).all()
+
+
+def test_add_pair_accepts_per_group_vectors():
+    from repro.core import add_pair
+    arrays = _nominal_state()
+    g = arrays.state.map_pct.shape[0]
+    per_group = np.linspace(10.0, 90.0, g).astype(np.float32)
+    grown, _ = add_pair(arrays.state, map_pct=per_group, time_ms=1.0,
+                        energy_mwh=0.5)
+    assert np.allclose(np.asarray(grown.map_pct)[:, -1], per_group)
+
+
+def test_retire_pair_unknown_index_is_identity():
+    from repro.core import retire_pair
+    arrays = _nominal_state()
+    out = retire_pair(arrays.state, 10_000)
+    for a, b in zip(out, arrays.state):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retire_pair_is_jittable():
+    import jax
+    from repro.core import retire_pair
+    arrays = _nominal_state()
+    jitted = jax.jit(retire_pair)(arrays.state, 0)
+    eager = retire_pair(arrays.state, 0)
+    for a, b in zip(jitted, eager):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------- virtual-time service
+
+
+def _detection_service(clock, **kw):
+    from repro.core import OracleRouter
+    from repro.core.policy import DetectionPolicy
+    from repro.detection.devices import nominal_profile_table
+    from repro.serving.backend import make_backend, null_run
+    from repro.serving.service import EcoreService
+    table = nominal_profile_table()
+    policy = DetectionPolicy(OracleRouter(table, 5.0), table)
+
+    def factory(decision):
+        return make_backend("detector", decision.pair[0], decision.pair[1],
+                            None, max_batch=4, run_fn=null_run)
+    return EcoreService(policy, factory, clock=clock, flusher=False, **kw)
+
+
+def _req(uid, count=1):
+    from repro.core.policy import RouteRequest
+    return RouteRequest(uid=uid, payload=np.zeros((8, 8), np.float32),
+                        true_complexity=count)
+
+
+def test_service_next_deadline_and_flush_due_on_manual_clock():
+    clock = tr.ManualClock()
+    svc = _detection_service(clock, max_wait_ms=50.0)
+    try:
+        assert svc.next_deadline() is None
+        clock.advance_to(1.0)
+        fut = svc.submit(_req(0))
+        assert np.isclose(svc.next_deadline(), 1.05)
+        assert svc.flush_due() == 0          # deadline not reached
+        assert not fut.done()
+        clock.advance_to(1.05)
+        assert svc.flush_due() == 1
+        assert fut.done() and fut.result().request.uid == 0
+        assert svc.deadline_flushes == 1
+        assert svc.next_deadline() is None   # queue drained
+    finally:
+        svc.close()
+
+
+def test_service_flusher_false_never_starts_a_thread():
+    clock = tr.ManualClock()
+    svc = _detection_service(clock, max_wait_ms=10.0)
+    try:
+        assert svc._flusher is None
+        assert svc.flusher_passes == 0
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------ fleet elasticity
+
+
+def _cluster(clock, pods=2, max_pods=4, **kw):
+    from repro.core import OracleRouter
+    from repro.core.policy import DetectionPolicy
+    from repro.detection.devices import nominal_profile_table
+    from repro.serving.backend import make_backend, null_run
+    from repro.serving.cluster import EcoreCluster
+
+    def policy_for(i):
+        table = nominal_profile_table()
+        return DetectionPolicy(OracleRouter(table, 5.0), table)
+
+    def factory(decision):
+        return make_backend("detector", decision.pair[0], decision.pair[1],
+                            None, max_batch=4, run_fn=null_run)
+    return EcoreCluster(policy_for, factory, pods=pods, max_pods=max_pods,
+                        clock=clock, flusher=False, retain_results=False,
+                        **kw)
+
+
+def test_cluster_retire_then_add_revives_the_same_pod():
+    cl = _cluster(tr.ManualClock(), pods=3, max_pods=3)
+    try:
+        assert cl.live_pods() == [0, 1, 2]
+        assert cl.retire_pod() == 2          # highest-index live pod
+        assert cl.live_pods() == [0, 1]
+        assert cl.stats()["retired"] == [2]
+        assert cl.add_pod() == 2             # revived, not appended
+        assert cl.live_pods() == [0, 1, 2]
+        assert cl.stats()["retired"] == []
+        assert len(cl.pods) == 3
+    finally:
+        cl.close()
+
+
+def test_cluster_add_pod_appends_up_to_max_pods():
+    cl = _cluster(tr.ManualClock(), pods=2, max_pods=3)
+    try:
+        assert cl.can_add_pod()
+        assert cl.add_pod() == 2
+        assert len(cl.pods) == 3
+        assert not cl.can_add_pod()
+        with pytest.raises(RuntimeError, match="max_pods"):
+            cl.add_pod()
+    finally:
+        cl.close()
+
+
+def test_cluster_never_retires_the_last_live_pod():
+    cl = _cluster(tr.ManualClock(), pods=2, max_pods=2)
+    try:
+        cl.retire_pod()
+        with pytest.raises(ValueError, match="last live pod"):
+            cl.retire_pod()
+        with pytest.raises(ValueError, match="not live"):
+            cl.retire_pod(1)                 # already retired
+    finally:
+        cl.close()
+
+
+def test_cluster_retired_pod_receives_no_new_work():
+    cl = _cluster(tr.ManualClock(), pods=2, max_pods=2)
+    try:
+        cl.retire_pod(1)
+        futs = [cl.submit(_req(uid)) for uid in range(8)]
+        cl.drain()
+        assert all(f.result().request.uid == u
+                   for u, f in enumerate(futs))
+        assert all(cl.owner_of(u) == 0 for u in range(8))
+        assert cl.stats()["shard_counts"][1] == 0
+    finally:
+        cl.close()
+
+
+def test_cluster_max_pods_validation():
+    with pytest.raises(ValueError, match="max_pods"):
+        _cluster(tr.ManualClock(), pods=4, max_pods=2)
+
+
+def test_autoscaler_watermark_validation():
+    from repro.serving.cluster import Autoscaler
+    cl = _cluster(tr.ManualClock(), pods=2, max_pods=4)
+    try:
+        with pytest.raises(ValueError, match="hysteresis"):
+            Autoscaler(cl, tr.ManualClock(), high_backlog_per_pod=2.0,
+                       low_backlog_per_pod=2.0)
+        with pytest.raises(ValueError, match="min_pods"):
+            Autoscaler(cl, tr.ManualClock(), min_pods=0)
+    finally:
+        cl.close()
+
+
+def test_autoscaler_scales_up_on_backlog_and_down_when_idle():
+    from repro.serving.cluster import Autoscaler
+    clock = tr.ManualClock()
+    cl = _cluster(clock, pods=2, max_pods=4)
+    auto = Autoscaler(cl, clock, min_pods=2, max_pods=4,
+                      high_backlog_per_pod=5.0, low_backlog_per_pod=1.0,
+                      cooldown_s=1.0)
+    try:
+        assert auto.tick(4) is None          # inside the band
+        assert auto.tick(20) == "add"        # 10/pod >= 5
+        assert auto.tick(20) is None         # cooldown gates the next one
+        clock.advance(1.0)
+        assert auto.tick(20) == "add"        # 6.7/pod, now at max_pods=4
+        clock.advance(1.0)
+        assert auto.tick(100) is None        # can't exceed max
+        clock.advance(1.0)
+        assert auto.tick(0) == "retire"
+        clock.advance(1.0)
+        assert auto.tick(0) == "retire"
+        clock.advance(1.0)
+        assert auto.tick(0) is None          # floor at min_pods=2
+        assert cl.live_pods() == [0, 1]
+        assert [e["action"] for e in auto.events] == [
+            "add", "add", "retire", "retire"]
+        assert all("t_s" in e and "backlog" in e for e in auto.events)
+    finally:
+        cl.close()
+
+
+# ----------------------------------------------------------- LoadDriver
+
+
+def _run_episode(rate, duration, *, autoscale=False, seed=3,
+                 deadline_ms=80.0, pattern="poisson"):
+    from repro.serving.cluster import Autoscaler
+    clock = tr.ManualClock()
+    cl = _cluster(clock, pods=2, max_pods=4, max_wait_ms=20.0)
+    auto = Autoscaler(cl, clock, min_pods=2, max_pods=4,
+                      high_backlog_per_pod=8.0, low_backlog_per_pod=1.0,
+                      cooldown_s=0.5) if autoscale else None
+    arrivals = tr.make_arrivals(pattern, rate, duration, seed=seed)
+    work = tr.merge_tenants([tr.detector_tenant(
+        "cam", arrivals, seed=1, deadline_ms=deadline_ms)])
+    driver = tr.LoadDriver(cl, clock, autoscaler=auto, window_s=1.0)
+    try:
+        done = driver.run(work)
+    finally:
+        cl.close()
+    return done, driver, auto
+
+
+def test_load_driver_completes_every_request_deterministically():
+    a, drv_a, _ = _run_episode(60.0, 3.0)
+    b, drv_b, _ = _run_episode(60.0, 3.0)
+    assert len(a) == len(b) > 50
+    assert a == b                            # full Completion equality
+    assert drv_a.slo.summary() == drv_b.slo.summary()
+    assert {c.uid for c in a} == set(range(len(a)))
+    assert drv_a.backlog() == 0              # episode fully drained
+
+
+def test_load_driver_latency_split_is_consistent():
+    done, _, _ = _run_episode(60.0, 2.0)
+    for c in done:
+        assert c.t_arrival <= c.t_start <= c.t_done
+        assert np.isclose(c.e2e_ms, c.queue_wait_ms
+                          + (c.t_done - c.t_start) * 1e3)
+        assert c.ok and c.pair is not None
+
+
+def test_load_driver_underload_meets_deadline_overload_grows_queue():
+    light, drv_l, _ = _run_episode(40.0, 2.0, deadline_ms=120.0)
+    s_light = drv_l.slo.summary()
+    assert s_light["goodput_fraction"] == 1.0
+    # open loop: 30x the rate has nowhere to shed -> queue waits explode
+    heavy, drv_h, _ = _run_episode(1200.0, 2.0, deadline_ms=120.0)
+    s_heavy = drv_h.slo.summary()
+    assert s_heavy["queue_wait_p99_ms"] > 10 * s_light["queue_wait_p99_ms"]
+    assert s_heavy["goodput_fraction"] < 0.9
+    assert s_heavy["p99_ms"] > s_light["p99_ms"]
+
+
+def test_load_driver_autoscaled_flash_beats_fixed_fleet():
+    kw = dict(duration=6.0, deadline_ms=100.0, pattern="flash")
+    _, drv_fixed, _ = _run_episode(700.0, **kw)
+    _, drv_auto, auto = _run_episode(700.0, autoscale=True, **kw)
+    fixed, scaled = drv_fixed.slo.summary(), drv_auto.slo.summary()
+    assert any(e["action"] == "add" for e in auto.events)
+    assert scaled["p99_ms"] < fixed["p99_ms"]
+    assert scaled["goodput_fraction"] > fixed["goodput_fraction"]
+
+
+def test_load_driver_fires_deadline_flushes_at_exact_virtual_times():
+    done, drv, _ = _run_episode(30.0, 2.0)
+    # sub-max_batch traffic: every flush is deadline-triggered, so queue
+    # waits concentrate AT the 20ms max_wait (modulo same-batch sharing)
+    waits = [c.queue_wait_ms for c in done]
+    assert max(waits) <= 20.0 + 1e-6
+    s = drv.slo.summary()
+    assert s["queue_wait_p99_ms"] <= 21.0
+
+
+def test_load_driver_records_multi_tenant_slos():
+    clock = tr.ManualClock()
+    cl = _cluster(clock, pods=2, max_pods=2, max_wait_ms=10.0)
+    det = tr.detector_tenant(
+        "cam", tr.poisson_arrivals(40.0, 2.0, seed=1), seed=1,
+        deadline_ms=100.0)
+    work = tr.merge_tenants([det])
+    driver = tr.LoadDriver(cl, clock, window_s=0.5)
+    try:
+        done = driver.run(work)
+    finally:
+        cl.close()
+    recs = driver.slo.window_records()
+    assert len(recs) >= 3
+    assert all(r["tenants"]["cam"]["n"] > 0 for r in recs)
+    assert sum(r["n"] for r in recs) == len(done)
+    assert all(r["joules_per_request"] > 0 for r in recs)
