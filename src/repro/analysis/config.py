@@ -26,6 +26,11 @@ DEFAULTS: Dict[str, object] = {
     # the only files allowed to call .serve_batch(...) directly
     "dispatch-plane": ["*/repro/serving/service.py",
                        "*/repro/serving/engine.py"],
+    # extra roots for the ECO12x transitive-purity walk: host-boundary
+    # functions whose own bodies AND whole call chains must stay clean of
+    # impure calls (jit entries and pure-functions are roots automatically,
+    # but per-file ECO1xx already covers their direct bodies)
+    "transitive-roots": ["add_pair", "retire_pair"],
 }
 
 

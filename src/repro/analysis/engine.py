@@ -14,16 +14,21 @@ Suppression grammar (free-text justification may follow the id list)::
 
 An inline marker suppresses its own line; a standalone comment marker
 suppresses the next non-comment line (so a justification block may follow
-it); ``disable-file`` suppresses the whole file.  ``all`` (or ``*``) as an
-id disables every rule.
+it), and when that line starts a decorator stack the decorated ``def`` /
+``class`` line is covered too; ``disable-file`` suppresses the whole file.
+``all`` (or ``*``) as an id disables every rule.  Markers are read from
+real COMMENT tokens only — marker-shaped text inside docstrings or string
+literals is inert (it used to register phantom suppressions).
 """
 from __future__ import annotations
 
 import ast
 import dataclasses
 import fnmatch
+import io
 import os
 import re
+import tokenize
 from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
 
 _SUPPRESS_RE = re.compile(
@@ -71,43 +76,91 @@ class Violation:
                 f"{self.rule} {self.message}")
 
 
+@dataclasses.dataclass
+class Marker:
+    """One ``# repro-lint: disable[-file]=...`` comment marker."""
+    lineno: int
+    ids: Tuple[str, ...]
+    file_level: bool
+    targets: Set[int]                   # lines this marker covers
+    used_for: Set[str] = dataclasses.field(default_factory=set)
+
+    def names(self, rule_id: str) -> bool:
+        return rule_id in self.ids or "all" in self.ids or "*" in self.ids
+
+
+def _comment_tokens(text: str):
+    """(lineno, col, comment-text) for every real COMMENT token.  The text
+    already parsed under ``ast``, so tokenize errors are tail-only; comments
+    gathered before one are kept."""
+    out = []
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                out.append((tok.start[0], tok.start[1], tok.string))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        pass
+    return out
+
+
 class SourceFile:
-    """A parsed source file plus its suppression map."""
+    """A parsed source file plus its suppression markers."""
 
     def __init__(self, path: str, text: str):
         self.path = norm_path(path)
         self.text = text
         self.lines = text.splitlines()
         self.tree = ast.parse(text)  # caller converts SyntaxError to E001
-        self.file_suppress: Set[str] = set()
-        #: lineno -> rule ids suppressed on that line.  An inline marker
-        #: maps to its own line; a standalone comment marker maps to the
-        #: next non-comment line (a justification block may sit between).
-        self.line_suppress: Dict[int, Set[str]] = {}
-        for lineno, line in enumerate(self.lines, start=1):
-            m = _SUPPRESS_RE.search(line)
+        #: decorator-stack start line -> decorated def/class line, so a
+        #: standalone marker above ``@decorator`` also covers the def line
+        #: (rules report at the def, not the decorator).
+        dec_spans = {}
+        for node in ast.walk(self.tree):
+            decs = getattr(node, "decorator_list", None)
+            if decs:
+                first = min(d.lineno for d in decs)
+                for ln in range(first, node.lineno):
+                    dec_spans[ln] = node.lineno
+        self.markers: List[Marker] = []
+        for lineno, col, comment in _comment_tokens(text):
+            m = _SUPPRESS_RE.search(comment)
             if m is None:
                 continue
-            ids = {s.strip() for s in m.group(2).split(",") if s.strip()}
+            ids = tuple(dict.fromkeys(
+                s.strip() for s in m.group(2).split(",") if s.strip()))
             if m.group(1) == "disable-file":
-                self.file_suppress |= ids
+                self.markers.append(Marker(lineno, ids, True, set()))
                 continue
-            target = lineno
-            if line.lstrip().startswith("#"):
+            targets = {lineno}
+            standalone = self.lines[lineno - 1][:col].strip() == ""
+            if standalone:
+                targets = set()
                 for nxt in range(lineno + 1, len(self.lines) + 1):
                     stripped = self.lines[nxt - 1].strip()
                     if stripped and not stripped.startswith("#"):
-                        target = nxt
+                        targets = {nxt}
+                        if nxt in dec_spans:
+                            targets.add(dec_spans[nxt])
                         break
-                else:
+                if not targets:
                     continue  # trailing comment block: nothing to suppress
-            self.line_suppress.setdefault(target, set()).update(ids)
+            self.markers.append(Marker(lineno, ids, False, targets))
 
-    def suppressed(self, rule_id: str, line: int) -> bool:
-        for ids in (self.file_suppress, self.line_suppress.get(line, ())):
-            if rule_id in ids or "all" in ids or "*" in ids:
-                return True
-        return False
+    def suppressed(self, rule_id: str, line: int,
+                   explicit_only: bool = False) -> bool:
+        """True when a marker covers (rule, line); records marker usage so
+        the ECO900 meta-rule can flag markers that never matched.  With
+        ``explicit_only`` (used for ECO900's own findings) blanket
+        ``all``/``*`` markers do not match — a stale blanket marker must
+        not be able to swallow its own audit."""
+        hit = False
+        for m in self.markers:
+            if not (m.file_level or line in m.targets):
+                continue
+            if rule_id in m.ids or (not explicit_only and m.names(rule_id)):
+                m.used_for.add(rule_id)
+                hit = True
+        return hit
 
 
 @dataclasses.dataclass
@@ -154,7 +207,8 @@ def collect_paths(paths: Sequence[str],
             continue
         for dirpath, dirnames, filenames in os.walk(p):
             dirnames[:] = sorted(d for d in dirnames
-                                 if d not in (".git", "__pycache__"))
+                                 if d != "__pycache__"
+                                 and not d.startswith("."))
             for fn in sorted(filenames):
                 if not fn.endswith(".py"):
                     continue
@@ -172,11 +226,28 @@ def collect_paths(paths: Sequence[str],
 
 def run_rules(sources: Sequence[SourceFile], rules,
               extra_violations: Iterable[Violation] = ()):
-    """-> (sorted violations, suppressed count)."""
+    """-> (sorted violations, suppressed count).
+
+    Rules flagged ``runs_after`` (the ECO900 suppression audit) execute
+    once every other rule has consulted the suppression maps.  Rules
+    flagged ``requires_project`` share one lazily-built ``Project`` graph
+    — the single whole-tree parse pass the interprocedural families run
+    on.
+    """
     by_path = {s.path: s for s in sources}
     violations = list(extra_violations)
     suppressed = 0
-    for rule in rules:
+    project = None
+    enabled = frozenset(r.id for r in rules)
+    ordered = ([r for r in rules if not r.runs_after]
+               + [r for r in rules if r.runs_after])
+    for rule in ordered:
+        rule.enabled_ids = enabled
+        if rule.requires_project:
+            if project is None:
+                from repro.analysis.project import build_project
+                project = build_project(sources)
+            rule.project = project
         targets = [s for s in sources if rule.applies_to(s.path)]
         if rule.project_level:
             found = list(rule.check_project(targets))
@@ -184,7 +255,8 @@ def run_rules(sources: Sequence[SourceFile], rules,
             found = [v for src in targets for v in rule.check(src)]
         for v in found:
             src = by_path.get(v.path)
-            if src is not None and src.suppressed(v.rule, v.line):
+            if src is not None and src.suppressed(
+                    v.rule, v.line, explicit_only=rule.runs_after):
                 suppressed += 1
             else:
                 violations.append(v)
@@ -194,7 +266,8 @@ def run_rules(sources: Sequence[SourceFile], rules,
 
 def run_paths(paths: Sequence[str], *, select: Optional[Sequence[str]] = None,
               ignore: Optional[Sequence[str]] = None,
-              config: Optional[Dict[str, object]] = None) -> Report:
+              config: Optional[Dict[str, object]] = None,
+              project: bool = False) -> Report:
     """Lint files/directories on disk (the CLI entry point)."""
     from repro.analysis.config import load_config
     from repro.analysis.registry import make_rules
@@ -203,9 +276,14 @@ def run_paths(paths: Sequence[str], *, select: Optional[Sequence[str]] = None,
     exclude = tuple(DEFAULT_EXCLUDE) + tuple(cfg.get("exclude") or ())
     files = collect_paths(paths, exclude)
     sources, errors = [], []
+    loaded = 0
     for fp in files:
-        with open(fp, "r", encoding="utf-8") as fh:
-            text = fh.read()
+        try:
+            with open(fp, "r", encoding="utf-8") as fh:
+                text = fh.read()
+        except (UnicodeDecodeError, OSError):
+            continue  # binary / non-UTF8 / unreadable: not lintable source
+        loaded += 1
         src, err = parse_source(fp, text)
         if src is not None:
             sources.append(src)
@@ -214,16 +292,17 @@ def run_paths(paths: Sequence[str], *, select: Optional[Sequence[str]] = None,
     rules = make_rules(select=list(select or ()) or None,
                        ignore=list(ignore or ()) + list(cfg.get("ignore")
                                                         or ()),
-                       options=cfg)
+                       options=cfg, project=project)
     violations, suppressed = run_rules(sources, rules, errors)
-    return Report(files=len(files), rules=[r.id for r in rules],
+    return Report(files=loaded, rules=[r.id for r in rules],
                   violations=violations, suppressed=suppressed)
 
 
 def check_sources(named: Dict[str, str], *,
                   select: Optional[Sequence[str]] = None,
                   ignore: Optional[Sequence[str]] = None,
-                  options: Optional[Dict[str, object]] = None) -> Report:
+                  options: Optional[Dict[str, object]] = None,
+                  project: bool = False) -> Report:
     """Lint in-memory sources (``{path: text}``) — the fixture-test surface.
 
     Paths are virtual but still drive per-rule include/exclude matching, so
@@ -243,7 +322,8 @@ def check_sources(named: Dict[str, str], *,
         else:
             errors.append(err)
     rules = make_rules(select=list(select or ()) or None,
-                       ignore=list(ignore or ()) or None, options=cfg)
+                       ignore=list(ignore or ()) or None, options=cfg,
+                       project=project)
     violations, suppressed = run_rules(sources, rules, errors)
     return Report(files=len(named), rules=[r.id for r in rules],
                   violations=violations, suppressed=suppressed)

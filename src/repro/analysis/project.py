@@ -1,0 +1,689 @@
+"""Whole-project symbol graph: the interprocedural layer under ECO6xx/7xx/12x.
+
+Per-file AST rules cannot see the failure shapes that actually threaten the
+serving plane after PRs 7/8 — a drain reached under a lock through two call
+hops, two locks taken in opposite orders from different entry points, a host
+sync buried three calls below ``decide_state``.  This module parses NOTHING
+itself: it reuses the engine's already-parsed ``SourceFile`` trees (one
+parse pass total) and builds, in one walk per file:
+
+  * a module-level symbol table (top-level defs, classes + methods + base
+    links, import aliases including lazy function-local imports, module
+    globals assigned from factory calls);
+  * a conservative call graph — bare names resolve through lexical scope,
+    imports and module globals; ``self.m()`` through the enclosing class
+    and its bases; ``self.attr.m()`` / ``var.m()`` through constructor
+    assignments and parameter annotations; everything else stays OPAQUE
+    (an unresolved call creates no edge, so absence of a finding never
+    rests on a guessed target).  Function references passed as values
+    (``lax.scan(step, ...)``, ``executor.submit(fn)``, callbacks, lambda
+    bodies) become DEFERRED edges: reachability rules follow them, lock
+    rules do not (the callee runs later, on some other stack);
+  * a lock-region model — which ``with <lockish>`` locks are held at every
+    call site and acquisition, plus the blocking surface (``.join``,
+    ``.result``, ``.drain``, ``.close``, ``.wait``, sleeps, queue gets)
+    with ``Condition.wait`` on the currently-held lock sanctioned.
+
+Stdlib-only, like the rest of the analysis plane.  Rules receive one shared
+``Project`` per run (built lazily by the engine, cached); the whole-tree
+build stays well under the 5 s budget because it is a single O(nodes) pass
+plus memoized fix-points.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.engine import SourceFile
+from repro.analysis.rules.common import dotted_name
+
+_LOCKISH = re.compile(r"lock|cond|mutex|sem", re.I)
+_QUEUEISH = frozenset({"q", "_q", "queue", "_queue"})
+_THREADISH = ("Thread",)
+
+
+def module_name(path: str) -> str:
+    """``src/repro/serving/service.py`` -> ``repro.serving.service``."""
+    p = path[:-3] if path.endswith(".py") else path
+    parts = [s for s in p.split("/") if s not in (".", "")]
+    if "src" in parts:
+        parts = parts[parts.index("src") + 1:]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+@dataclasses.dataclass
+class CallSite:
+    """One resolved-or-opaque call (or function reference) in a body."""
+    node: ast.AST
+    raw: str                        # the dotted text as written
+    target: Optional["FunctionInfo"]
+    held: Tuple[str, ...]           # lock ids held at this site
+    deferred: bool                  # passed as a value / inside a lambda
+
+
+@dataclasses.dataclass
+class Acquire:
+    lock: str                       # canonical lock id
+    raw: str                        # dotted receiver as written
+    node: ast.AST
+    held: Tuple[str, ...]           # locks already held when acquiring
+
+
+@dataclasses.dataclass
+class Blocking:
+    node: ast.AST
+    kind: str                       # "result"|"join"|"sleep"|"get"|"wait"|
+                                    # "drain"|"close"
+    raw: str
+    held: Tuple[str, ...]
+    sanctioned: bool                # Condition.wait on a held lock
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str                   # "repro.x.y:Class.method" / ":f.inner"
+    name: str
+    path: str
+    node: ast.AST
+    module: "ModuleInfo"
+    cls: Optional["ClassInfo"] = None
+    calls: List[CallSite] = dataclasses.field(default_factory=list)
+    acquires: List[Acquire] = dataclasses.field(default_factory=list)
+    blocking: List[Blocking] = dataclasses.field(default_factory=list)
+    #: (node, receiver last segment) for asyncio-future set_result/
+    #: set_exception sites
+    completions: List[Tuple[ast.AST, str]] = dataclasses.field(
+        default_factory=list)
+    returns_fn: Optional["FunctionInfo"] = None
+    nested: Dict[str, "FunctionInfo"] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def jit_decorated(self) -> bool:
+        from repro.analysis.rules.common import is_jit_decorator
+        decs = getattr(self.node, "decorator_list", ())
+        return any(is_jit_decorator(d) for d in decs)
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    module: "ModuleInfo"
+    bases: List[str] = dataclasses.field(default_factory=list)
+    methods: Dict[str, FunctionInfo] = dataclasses.field(default_factory=dict)
+    #: instance attr -> raw class name (``self.x = Cls(...)`` in __init__,
+    #: or the annotation of the parameter assigned into the attr)
+    attr_types: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: class-level assignments (``batchable = True``) name -> value expr
+    class_assigns: Dict[str, ast.expr] = dataclasses.field(
+        default_factory=dict)
+    #: names bound by class-level AnnAssign (with or without a value)
+    annotations: Set[str] = dataclasses.field(default_factory=set)
+    #: every ``self.X`` assigned anywhere in ``__init__``
+    init_attrs: Set[str] = dataclasses.field(default_factory=set)
+    #: method names defined as @property
+    properties: Set[str] = dataclasses.field(default_factory=set)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    name: str
+    path: str
+    src: SourceFile
+    defs: Dict[str, FunctionInfo] = dataclasses.field(default_factory=dict)
+    classes: Dict[str, ClassInfo] = dataclasses.field(default_factory=dict)
+    #: local alias -> (module, symbol|None); symbol None = module alias
+    imports: Dict[str, Tuple[str, Optional[str]]] = dataclasses.field(
+        default_factory=dict)
+    #: module-global name -> candidate value exprs (module level first;
+    #: later function-body rebinds of an existing global are appended, so
+    #: ``_scan_kernel = _scan_jit()`` inside the wrapper resolves)
+    assigns: Dict[str, List[ast.expr]] = dataclasses.field(
+        default_factory=dict)
+    #: names known to hold asyncio futures (bound from ``.create_future()``)
+    afut_names: Set[str] = dataclasses.field(default_factory=set)
+
+
+def _is_lockish(expr) -> Optional[str]:
+    """Dotted receiver text when ``expr`` looks like a lock, else None."""
+    if isinstance(expr, ast.Call):
+        expr = expr.func
+    raw = dotted_name(expr)
+    if raw is None:
+        return None
+    last = raw.rsplit(".", 1)[-1]
+    return raw if _LOCKISH.search(last) else None
+
+
+def _blocking_kind(call: ast.Call) -> Optional[Tuple[str, str]]:
+    """(kind, receiver-dotted) for calls that can park the calling thread."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return ("sleep", "") if f.id == "sleep" else None
+    if not isinstance(f, ast.Attribute):
+        return None
+    raw = dotted_name(f.value) or ""
+    if dotted_name(f) == "time.sleep":
+        return ("sleep", raw)
+    if f.attr in ("result", "join", "drain", "close", "wait"):
+        return (f.attr, raw)
+    if f.attr == "get":
+        recv = raw.rsplit(".", 1)[-1]
+        if recv in _QUEUEISH or recv.endswith("_queue"):
+            return ("get", raw)
+    return None
+
+
+class Project:
+    """The built graph; rules receive one shared instance per run."""
+
+    def __init__(self, sources: Sequence[SourceFile]):
+        self.modules: Dict[str, ModuleInfo] = {}
+        self.functions: Dict[str, FunctionInfo] = {}
+        #: functions handed to Thread(target=...)/executor.submit/
+        #: add_done_callback — they run on a foreign thread
+        self.foreign_entries: Set[str] = set()
+        #: functions scheduled via call_soon_threadsafe — loop-thread safe
+        self.scheduled: Set[str] = set()
+        for src in sources:
+            mod = ModuleInfo(module_name(src.path), src.path, src)
+            # first module wins on a name collision (virtual fixture paths
+            # can alias); real trees have unique module names
+            self.modules.setdefault(mod.name, mod)
+            self._collect_symbols(mod)
+        for mod in self.modules.values():
+            for fi in self._module_functions(mod):
+                self._scan_function(fi)
+        self._block_memo: Dict[str, Optional[Tuple[str, Tuple[str, ...]]]] \
+            = {}
+        self._acq_memo: Dict[str, Dict[str, Tuple[str, ...]]] = {}
+
+    # ------------------------------------------------------------ pass 1
+
+    def _collect_symbols(self, mod: ModuleInfo) -> None:
+        tree = mod.src.tree
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = self._register_function(mod, None, node, prefix="")
+                mod.defs[node.name] = fi
+            elif isinstance(node, ast.ClassDef):
+                mod.classes[node.name] = self._register_class(mod, node)
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        mod.assigns.setdefault(tgt.id, []).append(node.value)
+        # imports anywhere (this repo leans on lazy function-local imports)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    mod.imports[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name, None)
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                if node.level:
+                    parent = mod.name.split(".")
+                    parent = parent[:len(parent) - node.level]
+                    base = ".".join(parent + ([node.module]
+                                              if node.module else []))
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    mod.imports[alias.asname or alias.name] = (
+                        base, alias.name)
+            elif isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                # function-body rebinding of an existing module global
+                # (``global _scan_kernel; _scan_kernel = _scan_jit()``)
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Name) and tgt.id in mod.assigns
+                            and node.value is not mod.assigns[tgt.id][0]):
+                        cands = mod.assigns[tgt.id]
+                        if node.value not in cands:
+                            cands.append(node.value)
+            # asyncio future bindings: x = loop.create_future() /
+            # self._afut = loop.create_future()
+            value = getattr(node, "value", None)
+            if (isinstance(node, (ast.Assign, ast.AnnAssign))
+                    and isinstance(value, ast.Call)
+                    and isinstance(value.func, ast.Attribute)
+                    and value.func.attr == "create_future"):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for tgt in targets:
+                    if isinstance(tgt, ast.Name):
+                        mod.afut_names.add(tgt.id)
+                    elif isinstance(tgt, ast.Attribute):
+                        mod.afut_names.add(tgt.attr)
+
+    def _register_function(self, mod: ModuleInfo, cls: Optional[ClassInfo],
+                           node, prefix: str) -> FunctionInfo:
+        qual = f"{mod.name}:{prefix}{node.name}"
+        fi = FunctionInfo(qualname=qual, name=node.name, path=mod.path,
+                          node=node, module=mod, cls=cls)
+        self.functions[qual] = fi
+        for child in node.body:
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi.nested[child.name] = self._register_function(
+                    mod, cls, child, prefix=f"{prefix}{node.name}.")
+        # factory shape: every ``return <name>`` of a nested def, one name
+        returned = {s.value.id for s in node.body
+                    if isinstance(s, ast.Return)
+                    and isinstance(s.value, ast.Name)
+                    and s.value.id in fi.nested}
+        if len(returned) == 1:
+            fi.returns_fn = fi.nested[returned.pop()]
+        return fi
+
+    def _register_class(self, mod: ModuleInfo, node: ast.ClassDef
+                        ) -> ClassInfo:
+        ci = ClassInfo(name=node.name, node=node, module=mod,
+                       bases=[d for b in node.bases
+                              if (d := dotted_name(b)) is not None])
+        for child in node.body:
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = self._register_function(mod, ci, child,
+                                             prefix=f"{node.name}.")
+                ci.methods[child.name] = fi
+                if any(dotted_name(d) in ("property", "cached_property",
+                                          "functools.cached_property")
+                       for d in child.decorator_list):
+                    ci.properties.add(child.name)
+            elif isinstance(child, ast.Assign):
+                for tgt in child.targets:
+                    if isinstance(tgt, ast.Name):
+                        ci.class_assigns[tgt.id] = child.value
+            elif isinstance(child, ast.AnnAssign) and isinstance(
+                    child.target, ast.Name):
+                ci.annotations.add(child.target.id)
+                if child.value is not None:
+                    ci.class_assigns[child.target.id] = child.value
+        init = ci.methods.get("__init__")
+        if init is not None:
+            self._collect_attr_types(ci, init.node)
+        return ci
+
+    @staticmethod
+    def _collect_attr_types(ci: ClassInfo, init) -> None:
+        """``self.x = Cls(...)`` and ``self.x = <annotated param>``."""
+        ann = {}
+        args = init.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if a.annotation is not None:
+                raw = dotted_name(a.annotation)
+                if raw is None and isinstance(a.annotation, ast.Constant) \
+                        and isinstance(a.annotation.value, str):
+                    raw = a.annotation.value
+                if raw:
+                    ann[a.arg] = raw
+        for node in ast.walk(init):
+            if isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+                tgt = node.target
+                if (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    ci.init_attrs.add(tgt.attr)
+                continue
+            if not isinstance(node, ast.Assign):
+                continue
+            for tgt in node.targets:
+                if not (isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"):
+                    continue
+                ci.init_attrs.add(tgt.attr)
+                if isinstance(node.value, ast.Call):
+                    raw = dotted_name(node.value.func)
+                    if raw:
+                        ci.attr_types.setdefault(tgt.attr, raw)
+                elif isinstance(node.value, ast.Name) \
+                        and node.value.id in ann:
+                    ci.attr_types.setdefault(tgt.attr, ann[node.value.id])
+
+    def _module_functions(self, mod: ModuleInfo) -> Iterable[FunctionInfo]:
+        for fi in self.functions.values():
+            if fi.module is mod:
+                yield fi
+
+    # ------------------------------------------------------ pass 2: edges
+
+    def _scan_function(self, fi: FunctionInfo) -> None:
+        # local instance types: ``svc = EcoreService(...)`` inside the body
+        local_insts: Dict[str, str] = {}
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Assign) and isinstance(
+                    node.value, ast.Call):
+                raw = dotted_name(node.value.func)
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and raw:
+                        local_insts.setdefault(tgt.id, raw)
+        scope = []
+        cur: Optional[FunctionInfo] = fi
+        while cur is not None:   # innermost-first chain of nested-def scopes
+            scope.append(cur.nested)
+            cur = self._parent_of(cur)
+        self._visit_body(fi, list(ast.iter_child_nodes(fi.node)),
+                         held=(), deferred=False,
+                         scope=scope, local_insts=local_insts)
+
+    def _parent_of(self, fi: FunctionInfo) -> Optional[FunctionInfo]:
+        if "." not in fi.qualname.split(":", 1)[1]:
+            return None
+        parent_qual = fi.qualname.rsplit(".", 1)[0]
+        parent = self.functions.get(parent_qual)
+        # class-qualified method names are not nesting parents
+        if parent is not None and fi.qualname in (
+                f"{parent.qualname}.{fi.name}",):
+            if fi.node in getattr(parent.node, "body", ()):
+                return parent
+        return None
+
+    def _visit_body(self, fi, nodes, held, deferred, scope, local_insts):
+        for node in nodes:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue        # separate FunctionInfo, scanned on its own
+            if isinstance(node, ast.Lambda):
+                self._visit_body(fi, [node.body], held, True,
+                                 scope, local_insts)
+                continue
+            if isinstance(node, (ast.With, ast.AsyncWith)):
+                self._visit_with(fi, node, held, deferred, scope,
+                                 local_insts)
+                continue
+            if isinstance(node, ast.Call):
+                self._visit_call(fi, node, held, deferred, scope,
+                                 local_insts)
+            self._visit_body(fi, list(ast.iter_child_nodes(node)),
+                             held, deferred, scope, local_insts)
+
+    def _visit_with(self, fi, node, held, deferred, scope, local_insts):
+        new_held = list(held)
+        for item in node.items:
+            self._visit_body(fi, [item.context_expr], tuple(new_held),
+                             deferred, scope, local_insts)
+            raw = _is_lockish(item.context_expr)
+            if raw is not None:
+                lock = self._lock_id(fi, raw)
+                fi.acquires.append(Acquire(lock=lock, raw=raw, node=node,
+                                           held=tuple(new_held)))
+                new_held.append(lock)
+        self._visit_body(fi, node.body, tuple(new_held), deferred,
+                         scope, local_insts)
+
+    def _lock_id(self, fi: FunctionInfo, raw: str) -> str:
+        """Canonical id: ``self.X`` -> ``module.Class.X``; else module.raw."""
+        if raw.startswith("self.") and fi.cls is not None:
+            return f"{fi.module.name}.{fi.cls.name}.{raw[5:]}"
+        return f"{fi.module.name}.{raw}"
+
+    def _visit_call(self, fi, node, held, deferred, scope, local_insts):
+        raw = dotted_name(node.func) or "<expr>"
+        blk = _blocking_kind(node)
+        if blk is not None:
+            kind, recv = blk
+            sanctioned = kind == "wait" and recv in {
+                a.raw for a in fi.acquires if a.lock in held}
+            fi.blocking.append(Blocking(node=node, kind=kind, raw=raw,
+                                        held=held, sanctioned=sanctioned))
+        if (isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("set_result", "set_exception")):
+            recv = node.func.value
+            key = recv.id if isinstance(recv, ast.Name) else (
+                recv.attr if isinstance(recv, ast.Attribute) else None)
+            if key is not None and key in fi.module.afut_names:
+                fi.completions.append((node, key))
+        target = self._resolve(node.func, fi, scope, local_insts,
+                               as_call=True)
+        fi.calls.append(CallSite(node=node, raw=raw, target=target,
+                                 held=held, deferred=deferred))
+        # function references passed as values -> deferred edges + intent
+        # markers (thread targets, scheduled callbacks)
+        refs: List[Tuple[Optional[str], ast.AST]] = []
+        for arg in node.args:
+            refs.append((None, arg))
+        for kw in node.keywords:
+            refs.append((kw.arg, kw.value))
+        fname = raw.rsplit(".", 1)[-1]
+        for kwname, expr in refs:
+            if not isinstance(expr, (ast.Name, ast.Attribute)):
+                continue
+            t = self._resolve(expr, fi, scope, local_insts, as_call=False)
+            if t is None:
+                continue
+            fi.calls.append(CallSite(node=expr, raw=dotted_name(expr) or "",
+                                     target=t, held=held, deferred=True))
+            if fname in _THREADISH and kwname == "target":
+                self.foreign_entries.add(t.qualname)
+            elif fname in ("submit", "add_done_callback") and kwname is None:
+                self.foreign_entries.add(t.qualname)
+            elif fname == "call_soon_threadsafe" and kwname is None:
+                self.scheduled.add(t.qualname)
+
+    # -------------------------------------------------------- resolution
+
+    def _resolve(self, expr, fi: FunctionInfo, scope, local_insts,
+                 as_call: bool) -> Optional[FunctionInfo]:
+        out = self._resolve_value(expr, fi, scope, local_insts)
+        if isinstance(out, ClassInfo):
+            return out.methods.get("__init__") if as_call else None
+        return out
+
+    def _resolve_value(self, expr, fi, scope, local_insts, depth: int = 0):
+        if depth > 8:
+            return None
+        mod = fi.module
+        if isinstance(expr, ast.Name):
+            for layer in scope:
+                if expr.id in layer:
+                    return layer[expr.id]
+            return self._module_symbol(mod, expr.id, fi, scope,
+                                       local_insts, depth)
+        if isinstance(expr, ast.Attribute):
+            raw = dotted_name(expr)
+            if raw is None:
+                return None
+            parts = raw.split(".")
+            if parts[0] == "self" and fi.cls is not None:
+                if len(parts) == 2:
+                    return self._method_of(fi.cls, parts[1], set())
+                if len(parts) == 3:
+                    cls_raw = fi.cls.attr_types.get(parts[1])
+                    ci = self._class_by_raw(mod, cls_raw)
+                    if ci is not None:
+                        return self._method_of(ci, parts[2], set())
+                return None
+            head = parts[0]
+            if head in local_insts and len(parts) == 2:
+                ci = self._class_by_raw(mod, local_insts[head])
+                if ci is not None:
+                    return self._method_of(ci, parts[1], set())
+            if head in mod.imports:
+                tgt_mod, sym = mod.imports[head]
+                if sym is None and len(parts) == 2:
+                    return self._external_symbol(tgt_mod, parts[1])
+                if sym is not None:
+                    obj = self._external_symbol(tgt_mod, sym)
+                    if isinstance(obj, ClassInfo) and len(parts) == 2:
+                        return self._method_of(obj, parts[1], set())
+            local = mod.classes.get(head)
+            if local is not None and len(parts) == 2:
+                return self._method_of(local, parts[1], set())
+            return None
+        return None
+
+    def _module_symbol(self, mod: ModuleInfo, name: str, fi, scope,
+                       local_insts, depth: int = 0):
+        if name in mod.defs:
+            return mod.defs[name]
+        if name in mod.classes:
+            return mod.classes[name]
+        if name in mod.imports:
+            tgt_mod, sym = mod.imports[name]
+            if sym is not None:
+                return self._external_symbol(tgt_mod, sym)
+            return None
+        for cand in mod.assigns.get(name, ()):
+            got = self._resolve_assigned(cand, fi, scope, local_insts, depth)
+            if got is not None:
+                return got
+        return None
+
+    def _resolve_assigned(self, expr, fi, scope, local_insts, depth):
+        """``g = factory()`` / ``g = jax.jit(f)`` / ``g = f`` aliases."""
+        if depth > 8:
+            return None
+        if isinstance(expr, (ast.Name, ast.Attribute)):
+            return self._resolve_value(expr, fi, scope, local_insts,
+                                       depth + 1)
+        if isinstance(expr, ast.Call):
+            fn = dotted_name(expr.func)
+            if fn in ("jit", "jax.jit") and expr.args:
+                return self._resolve_value(expr.args[0], fi, scope,
+                                           local_insts, depth + 1)
+            target = self._resolve_value(expr.func, fi, scope, local_insts,
+                                         depth + 1)
+            if isinstance(target, FunctionInfo):
+                return target.returns_fn
+            if isinstance(target, ClassInfo):
+                return target
+        return None
+
+    def _external_symbol(self, mod_name: str, sym: str):
+        tgt = self.modules.get(mod_name)
+        if tgt is None:
+            return None
+        return tgt.defs.get(sym) or tgt.classes.get(sym)
+
+    def _class_by_raw(self, mod: ModuleInfo, raw: Optional[str]
+                      ) -> Optional[ClassInfo]:
+        if not raw:
+            return None
+        head = raw.split(".")[0]
+        if raw in mod.classes:
+            return mod.classes[raw]
+        if head in mod.imports:
+            tgt_mod, sym = mod.imports[head]
+            if sym is None and "." in raw:
+                obj = self._external_symbol(tgt_mod, raw.split(".", 1)[1])
+            else:
+                obj = self._external_symbol(tgt_mod, sym or head)
+            if isinstance(obj, ClassInfo):
+                return obj
+        return None
+
+    def _method_of(self, ci: ClassInfo, name: str, visited: Set[str]
+                   ) -> Optional[FunctionInfo]:
+        key = f"{ci.module.name}.{ci.name}"
+        if key in visited:
+            return None
+        visited.add(key)
+        if name in ci.methods:
+            return ci.methods[name]
+        for base_raw in ci.bases:
+            base = self._class_by_raw(ci.module, base_raw)
+            if base is not None:
+                m = self._method_of(base, name, visited)
+                if m is not None:
+                    return m
+        return None
+
+    # ------------------------------------------------- contract queries
+
+    def method(self, ci: ClassInfo, name: str) -> Optional[FunctionInfo]:
+        """Method lookup through resolvable bases (None when unknown)."""
+        return self._method_of(ci, name, set())
+
+    def has_attr(self, ci: ClassInfo, name: str,
+                 _visited: Optional[Set[str]] = None) -> bool:
+        """Instance attribute presence: class assign/annotation, a
+        ``self.X = ...`` in ``__init__``, a @property, or a method —
+        searched through resolvable bases."""
+        visited = _visited if _visited is not None else set()
+        key = f"{ci.module.name}.{ci.name}"
+        if key in visited:
+            return False
+        visited.add(key)
+        if (name in ci.class_assigns or name in ci.annotations
+                or name in ci.init_attrs or name in ci.properties
+                or name in ci.methods):
+            return True
+        for braw in ci.bases:
+            base = self._class_by_raw(ci.module, braw)
+            if base is not None and self.has_attr(base, name, visited):
+                return True
+        return False
+
+    # -------------------------------------------------------- fix-points
+
+    def acquired_closure(self, fi: FunctionInfo
+                         ) -> Dict[str, Tuple[str, ...]]:
+        """lock id -> witness call chain (qualnames) for every lock this
+        function may acquire, directly or through direct (non-deferred)
+        calls.  Memoized; cycles contribute nothing new."""
+        memo = self._acq_memo
+        if fi.qualname in memo:
+            return memo[fi.qualname]
+        memo[fi.qualname] = {}          # cycle guard: in-progress = empty
+        out: Dict[str, Tuple[str, ...]] = {
+            a.lock: (fi.qualname,) for a in fi.acquires}
+        for cs in fi.calls:
+            if cs.deferred or cs.target is None:
+                continue
+            for lock, chain in self.acquired_closure(cs.target).items():
+                out.setdefault(lock, (fi.qualname,) + chain)
+        memo[fi.qualname] = out
+        return out
+
+    def may_block(self, fi: FunctionInfo
+                  ) -> Optional[Tuple[str, Tuple[str, ...]]]:
+        """(description, witness chain) when calling this function can park
+        the calling thread — its own blocking surface (a sanctioned wait on
+        its OWN condition still blocks a caller holding a DIFFERENT lock)
+        or any direct callee's.  Memoized; cycles resolve to non-blocking.
+        """
+        memo = self._block_memo
+        if fi.qualname in memo:
+            return memo[fi.qualname]
+        memo[fi.qualname] = None        # cycle guard
+        out: Optional[Tuple[str, Tuple[str, ...]]] = None
+        for b in fi.blocking:
+            out = (f"{b.raw}(...) [{b.kind}]", (fi.qualname,))
+            break
+        if out is None:
+            for cs in fi.calls:
+                if cs.deferred or cs.target is None:
+                    continue
+                sub = self.may_block(cs.target)
+                if sub is not None:
+                    out = (sub[0], (fi.qualname,) + sub[1])
+                    break
+        memo[fi.qualname] = out
+        return out
+
+    def reachable(self, roots: Sequence[FunctionInfo], *,
+                  deferred: bool = True
+                  ) -> Dict[str, Tuple[FunctionInfo, Tuple[str, ...]]]:
+        """BFS over call edges: qualname -> (fn, chain from its root)."""
+        from collections import deque
+        seen: Dict[str, Tuple[FunctionInfo, Tuple[str, ...]]] = {}
+        dq = deque((r, (r.qualname,)) for r in roots)
+        for r in roots:
+            seen.setdefault(r.qualname, (r, (r.qualname,)))
+        while dq:
+            fi, chain = dq.popleft()
+            for cs in fi.calls:
+                if cs.target is None or (cs.deferred and not deferred):
+                    continue
+                t = cs.target
+                if t.qualname not in seen:
+                    seen[t.qualname] = (t, chain + (t.qualname,))
+                    dq.append((t, chain + (t.qualname,)))
+        return seen
+
+
+def build_project(sources: Sequence[SourceFile]) -> Project:
+    return Project(sources)

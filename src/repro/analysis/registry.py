@@ -20,6 +20,15 @@ class Rule:
     include: Tuple[str, ...] = ("*.py",)
     exclude: Tuple[str, ...] = ()
     project_level: bool = False
+    #: needs the interprocedural graph — only runs under ``--project``;
+    #: the engine injects the shared, lazily-built ``Project`` here
+    requires_project: bool = False
+    #: runs after every other rule (the ECO900 suppression-usage audit)
+    runs_after: bool = False
+
+    def __init__(self) -> None:
+        self.project = None             # engine-injected Project graph
+        self.enabled_ids: frozenset = frozenset()
 
     def configure(self, options: Dict[str, object]) -> None:
         """Consume ``[tool.repro-lint]`` options (called once per run)."""
@@ -73,9 +82,12 @@ def _enabled(rule_id: str, name: str, select: Optional[Sequence[str]],
 
 def make_rules(select: Optional[Sequence[str]] = None,
                ignore: Optional[Sequence[str]] = None,
-               options: Optional[Dict[str, object]] = None) -> List[Rule]:
+               options: Optional[Dict[str, object]] = None,
+               project: bool = False) -> List[Rule]:
     out: List[Rule] = []
     for rid, cls in all_rules().items():
+        if cls.requires_project and not project:
+            continue
         if not _enabled(rid, cls.name, select, ignore):
             continue
         rule = cls()

@@ -1,3 +1,4 @@
 """Rule catalogue: importing this package registers every rule family."""
-from repro.analysis.rules import (hotpath, kernels, pins,  # noqa: F401
-                                  purity, threads)
+from repro.analysis.rules import (concurrency, contracts,  # noqa: F401
+                                  hotpath, kernels, meta, pins, purity,
+                                  threads, transitive)

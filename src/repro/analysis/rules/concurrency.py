@@ -1,0 +1,164 @@
+"""Family 6 — interprocedural concurrency (ECO601/602/603, ``--project``).
+
+The serving plane coordinates a cluster lock, per-pod service conditions,
+flusher/retrier threads, an executor, and an asyncio bridge.  ECO3xx sees
+one file at a time; the deadlocks that actually bite cross call and file
+boundaries:
+
+* ECO601 — two locks acquired in opposite orders on two different
+  call-graph paths (the classic ABBA deadlock; PR 7's pod-retire path
+  avoids it only by convention until now);
+* ECO602 — a blocking call (``drain``/``close``/``result``/``join``/
+  ``Future.result``/queue ``get``/foreign ``wait``) reachable while a lock
+  is held, through any chain of direct calls — "drain outside the lock"
+  (PR 8 prose) as an enforced rule.  ``Condition.wait`` on the lock being
+  held is the sanctioned consumer idiom, but the enclosing function still
+  counts as may-block for callers holding a DIFFERENT lock;
+* ECO603 — completing an asyncio future from a function reachable from a
+  thread entry point (``Thread(target=...)``, ``executor.submit``,
+  ``add_done_callback``) without going through ``call_soon_threadsafe``.
+  ECO302 catches the syntactic same-function case; this one follows the
+  call graph.
+
+Direct edges only: a deferred reference runs on some other stack, so the
+lock is no longer held there.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.analysis.registry import Rule, register
+
+_SERVING = ("*/repro/serving/*.py", "*/repro/traffic/*.py")
+
+
+class _ProjectRule(Rule):
+    requires_project = True
+    project_level = True
+    include = _SERVING
+
+
+@register
+class LockOrderInversion(_ProjectRule):
+    id = "ECO601"
+    name = "lock-order-inversion"
+    description = ("two locks acquired in opposite orders on two call-graph "
+                   "paths — an ABBA deadlock waiting for the right "
+                   "interleaving of serving threads (--project)")
+
+    def check_project(self, sources):
+        proj = self.project
+        if proj is None:
+            return
+        linted = {s.path for s in sources}
+        # ordered-pair edge (A, B): B acquirable while A is held, with one
+        # witness (function, node, human chain) per edge
+        edges: Dict[Tuple[str, str], Tuple[object, object, str]] = {}
+        for fi in proj.functions.values():
+            for acq in fi.acquires:
+                for held in acq.held:
+                    if held != acq.lock:
+                        edges.setdefault(
+                            (held, acq.lock),
+                            (fi, acq.node,
+                             f"{fi.qualname} takes {acq.lock} while "
+                             f"holding {held}"))
+            for cs in fi.calls:
+                if cs.deferred or cs.target is None or not cs.held:
+                    continue
+                for lock, chain in proj.acquired_closure(cs.target).items():
+                    for held in cs.held:
+                        if lock != held:
+                            via = " -> ".join((fi.qualname,) + chain)
+                            edges.setdefault(
+                                (held, lock),
+                                (fi, cs.node,
+                                 f"{via} takes {lock} while holding "
+                                 f"{held}"))
+        reported = set()
+        for (a, b) in sorted(edges):
+            if (b, a) not in edges or frozenset((a, b)) in reported:
+                continue
+            reported.add(frozenset((a, b)))
+            fi, node, fwd = edges[(a, b)]
+            _, _, rev = edges[(b, a)]
+            path = fi.path
+            if path in linted and self.applies_to(path):
+                yield self.hit(node, path,
+                               f"lock-order inversion between {a} and {b}: "
+                               f"{fwd}; but {rev}")
+
+
+@register
+class BlockingUnderLock(_ProjectRule):
+    id = "ECO602"
+    name = "lock-held-blocking-call"
+    description = ("a blocking call (drain/close/result/join/queue get/"
+                   "foreign wait) is reachable while a lock is held — "
+                   "every thread needing that lock stalls behind the "
+                   "blocked holder; move the blocking step outside the "
+                   "with block (--project)")
+
+    #: lexical kinds flagged here; result/join/sleep/get stay ECO301's
+    #: per-file territory and are only flagged transitively (depth >= 1)
+    _LEXICAL = frozenset({"drain", "close", "wait"})
+
+    def check_project(self, sources):
+        proj = self.project
+        if proj is None:
+            return
+        linted = {s.path for s in sources}
+        for fi in proj.functions.values():
+            if fi.path not in linted or not self.applies_to(fi.path):
+                continue
+            for b in fi.blocking:
+                if b.held and not b.sanctioned and b.kind in self._LEXICAL:
+                    yield self.hit(
+                        b.node, fi.path,
+                        f"{b.raw}(...) [{b.kind}] under lock "
+                        f"{b.held[-1]} in {fi.qualname} parks the thread "
+                        "while holding the lock")
+            for cs in fi.calls:
+                if cs.deferred or cs.target is None or not cs.held:
+                    continue
+                blocked = proj.may_block(cs.target)
+                if blocked is None:
+                    continue
+                what, chain = blocked
+                yield self.hit(
+                    cs.node, fi.path,
+                    f"{cs.raw}(...) under lock {cs.held[-1]} in "
+                    f"{fi.qualname} reaches blocking {what} via "
+                    f"{' -> '.join(chain)}")
+
+
+@register
+class CrossThreadFutureCompletion(_ProjectRule):
+    id = "ECO603"
+    name = "cross-thread-future-completion"
+    description = ("an asyncio future is completed from a function "
+                   "reachable from a thread entry (Thread target, "
+                   "executor.submit, done-callback) without "
+                   "call_soon_threadsafe — set_result off the owning loop "
+                   "thread races the event loop (--project)")
+
+    def check_project(self, sources):
+        proj = self.project
+        if proj is None:
+            return
+        linted = {s.path for s in sources}
+        entries = [proj.functions[q] for q in sorted(proj.foreign_entries)
+                   if q in proj.functions]
+        reach = proj.reachable(entries, deferred=False)
+        for fi, chain in reach.values():
+            if fi.qualname in proj.scheduled:
+                continue  # explicitly hopped onto the loop thread
+            if fi.path not in linted or not self.applies_to(fi.path):
+                continue
+            for node, name in fi.completions:
+                yield self.hit(
+                    node, fi.path,
+                    f"asyncio future {name!r} completed in {fi.qualname}, "
+                    f"reachable from thread entry {chain[0]} via "
+                    f"{' -> '.join(chain)} — schedule it with "
+                    "loop.call_soon_threadsafe")

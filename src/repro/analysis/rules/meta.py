@@ -1,0 +1,52 @@
+"""Family 9 — lint-plane hygiene (ECO900, ``--project``).
+
+A suppression that no longer matches a finding is worse than dead code: it
+documents a hazard that moved, and when the hazard comes back on a nearby
+line the stale marker quietly eats the new finding.  This rule runs after
+every other enabled rule has consulted the suppression maps (the engine
+orders ``runs_after`` rules last) and flags markers that never fired:
+unused ids, blanket ``all`` markers that matched nothing, and ids that
+name no known rule (typos).  Ids naming known-but-disabled rules are
+skipped — under ``--select`` there is no way to judge them.
+"""
+from __future__ import annotations
+
+from repro.analysis.registry import Rule, all_rules, register
+
+
+@register
+class UnusedSuppression(Rule):
+    id = "ECO900"
+    name = "unused-suppression"
+    description = ("a # repro-lint: disable=... marker matched no finding — "
+                   "remove it, or fix the rule id / target line it drifted "
+                   "away from (--project)")
+    requires_project = True
+    project_level = True
+    runs_after = True
+
+    def check_project(self, sources):
+        known = set(all_rules()) | {"E001"}
+        enabled = set(self.enabled_ids)
+        for src in sources:
+            for m in src.markers:
+                for rid in m.ids:
+                    if rid in ("all", "*"):
+                        if not m.used_for:
+                            yield self._flag(src, m,
+                                             "blanket suppression matched "
+                                             "no finding")
+                    elif rid not in known:
+                        yield self._flag(src, m,
+                                         f"{rid!r} names no known rule")
+                    elif rid in enabled and rid not in m.used_for:
+                        yield self._flag(src, m,
+                                         f"no {rid} finding on the target "
+                                         "line")
+
+    def _flag(self, src, marker, why):
+        from repro.analysis.engine import Violation
+        scope = "disable-file" if marker.file_level else "disable"
+        return Violation(self.id, src.path, marker.lineno, 0,
+                         f"unused suppression ({scope}): {why} — remove "
+                         "the marker or repair it")

@@ -1,0 +1,141 @@
+"""Family 12 — transitive scan/jit purity (ECO120/121, ``--project`` only).
+
+ECO101/102 inspect jit-scope bodies; jax traces the whole call CHAIN.  A
+host sync two helpers below ``decide_state`` stalls the scanned closed loop
+exactly as badly as one written inline, and nothing per-file can see it.
+These rules walk the project call graph from every jit entry, every
+configured pure function, and every configured transitive root
+(``add_pair``/``retire_pair`` — the host-boundary halves of fleet
+elasticity), following deferred edges too (a ``lax.scan`` step function or
+a factory-built kernel is still traced), and flag impure primitives in any
+reachable callee.  Root bodies of jit entries / pure functions are NOT
+re-scanned — ECO101/102 own those — but transitive-root bodies are, since
+no per-file rule covers them.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set, Tuple
+
+from repro.analysis.registry import Rule, register
+from repro.analysis.rules.common import NP_NAMES, call_name
+
+_HOST_CASTS = frozenset({"float", "int", "bool", "complex"})
+_HOST_METHODS = frozenset({"item", "tolist"})
+_IMPURE_ROOTS = ("random.", "time.", "os.")
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _own_body_nodes(fnode) -> Iterable[ast.AST]:
+    """Walk a function body without descending into nested defs (separate
+    graph functions, scanned when reached); lambda bodies stay in."""
+    stack = list(ast.iter_child_nodes(fnode))
+    while stack:
+        node = stack.pop()
+        if isinstance(node, _FUNCS):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+class _TransitiveRule(Rule):
+    """Base: BFS the call graph from the purity roots, scan reached
+    callees' own bodies with ``check_node``, prefix the witness chain."""
+
+    requires_project = True
+    project_level = True
+    # pallas kernel packages do trace-time np math on static grids by
+    # design, and have their own contract family (ECO4xx/ECO704)
+    exclude = ("*/repro/kernels/*",)
+
+    pure: Tuple[str, ...] = ()
+    roots: Tuple[str, ...] = ()
+
+    def configure(self, options):
+        self.pure = tuple(options.get("pure-functions") or ())
+        self.roots = tuple(options.get("transitive-roots") or ())
+
+    def check_project(self, sources):
+        proj = self.project
+        if proj is None:
+            return
+        linted = {s.path for s in sources}
+        entries: List = []
+        for fi in proj.functions.values():
+            if (fi.jit_decorated or fi.name in self.pure
+                    or fi.name in self.roots):
+                entries.append(fi)
+        reach = proj.reachable(entries, deferred=True)
+        seen: Set[Tuple[str, int, int]] = set()
+        for fi, chain in reach.values():
+            # jit-entry / pure bodies are per-file ECO101/102 territory;
+            # everything else reached — including transitive roots — is
+            # invisible to per-file rules and scanned here
+            if fi.jit_decorated or fi.name in self.pure:
+                continue
+            if fi.path not in linted or not self.applies_to(fi.path):
+                continue
+            via = " -> ".join(chain)
+            for node in _own_body_nodes(fi.node):
+                for v in self.check_node(node, fi, via):
+                    key = (v.path, v.line, v.col)
+                    if key not in seen:
+                        seen.add(key)
+                        yield v
+
+    def check_node(self, node, fi, via):
+        return ()
+
+
+@register
+class TransitiveHostSync(_TransitiveRule):
+    id = "ECO120"
+    name = "transitive-host-sync"
+    description = ("host synchronisation reachable from a jit/scan root "
+                   "through the call graph: a helper calling int()/float() "
+                   "on traced values, .item()/.tolist(), or np.* stalls "
+                   "the stream exactly like doing it inline (--project)")
+
+    def check_node(self, node, fi, via):
+        if not isinstance(node, ast.Call):
+            return
+        func = node.func
+        if (isinstance(func, ast.Name) and func.id in _HOST_CASTS
+                and node.args):
+            yield self.hit(node, fi.path,
+                           f"{func.id}(...) reachable from a jit root via "
+                           f"{via} forces a host sync on traced values")
+        elif isinstance(func, ast.Attribute) and func.attr in _HOST_METHODS:
+            yield self.hit(node, fi.path,
+                           f".{func.attr}() reachable from a jit root via "
+                           f"{via} pulls the array to host")
+        else:
+            name = call_name(node) or ""
+            if name.split(".", 1)[0] in NP_NAMES:
+                yield self.hit(node, fi.path,
+                               f"{name}(...) reachable from a jit root via "
+                               f"{via} is a host-side numpy call — use jnp")
+
+
+@register
+class TransitiveImpureCall(_TransitiveRule):
+    id = "ECO121"
+    name = "transitive-impure-call"
+    description = ("print/random./time./os. reachable from a jit/scan root "
+                   "through the call graph runs at trace time only — the "
+                   "compiled chain replays a stale value (--project)")
+
+    def check_node(self, node, fi, via):
+        if not isinstance(node, ast.Call):
+            return
+        if isinstance(node.func, ast.Name) and node.func.id == "print":
+            yield self.hit(node, fi.path,
+                           f"print(...) reachable from a jit root via {via} "
+                           "fires once at trace time — use jax.debug.print")
+            return
+        name = call_name(node) or ""
+        if any(name.startswith(root) for root in _IMPURE_ROOTS):
+            yield self.hit(node, fi.path,
+                           f"{name}(...) reachable from a jit root via "
+                           f"{via} is trace-time-only impurity — thread "
+                           "randomness/clocks in as arguments")

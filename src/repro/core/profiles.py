@@ -166,6 +166,10 @@ def add_pair(state: ProfileState, *, map_pct, time_ms, energy_mwh,
     import jax.numpy as jnp
     G, _ = jnp.shape(state.pair_id)
     if pair_idx is None:
+        # repro-lint: disable=ECO120 -- add_pair is the host-side half of
+        # fleet elasticity by contract (shapes change, so it cannot run
+        # under jit; retire_pair is the in-scan inverse) — the sync picks
+        # the next free index
         pair_idx = int(jnp.max(state.pair_id)) + 1
 
     def col(v, dtype=jnp.float32):
@@ -182,7 +186,7 @@ def add_pair(state: ProfileState, *, map_pct, time_ms, energy_mwh,
         fails=(None if state.fails is None else
                jnp.concatenate([state.fails, jnp.zeros((G, 1), jnp.int32)],
                                axis=1)))
-    return new, int(pair_idx)
+    return new, int(pair_idx)  # repro-lint: disable=ECO120 -- host contract
 
 
 def retire_pair(state: ProfileState, pair_idx) -> ProfileState:

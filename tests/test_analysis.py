@@ -591,3 +591,638 @@ def test_module_entrypoint_subprocess(tmp_path):
                        capture_output=True, text=True, timeout=120, env=env)
     assert r.returncode == 1, r.stderr
     assert "ECO502" in r.stdout
+
+
+# --------------------------------------- project graph (src/repro/analysis)
+
+
+def _project(named):
+    from repro.analysis.engine import parse_source
+    from repro.analysis.project import build_project
+    sources = []
+    for path, text in named.items():
+        s, err = parse_source(path, textwrap.dedent(text))
+        assert err is None, err
+        sources.append(s)
+    return build_project(sources)
+
+
+def test_project_call_cycles_terminate():
+    proj = _project({"src/repro/core/mod.py": """
+        import threading
+        _lock = threading.Lock()
+
+        def a():
+            with _lock:
+                pass
+            return b()
+
+        def b():
+            return a()
+    """})
+    fa = proj.functions["repro.core.mod:a"]
+    fb = proj.functions["repro.core.mod:b"]
+    reach = proj.reachable([fa])
+    assert set(reach) == {"repro.core.mod:a", "repro.core.mod:b"}
+    # fix-points terminate on the a <-> b cycle and still see a's lock
+    assert "repro.core.mod._lock" in proj.acquired_closure(fb)
+    assert proj.may_block(fa) is None
+
+
+def test_project_resolves_aliased_imports():
+    proj = _project({
+        "src/repro/pkgx/util.py": """
+            def helper():
+                return 1
+        """,
+        "src/repro/pkgx/mainmod.py": """
+            from repro.pkgx.util import helper as h
+
+            def run():
+                return h()
+        """})
+    (call,) = [c for c in
+               proj.functions["repro.pkgx.mainmod:run"].calls
+               if c.target is not None]
+    assert call.target.qualname == "repro.pkgx.util:helper"
+
+
+def test_project_resolves_self_methods_and_opaque_calls():
+    proj = _project({"src/repro/serving/mod.py": """
+        class Svc:
+            def top(self):
+                self.unknown_external.thing()
+                return self.inner()
+
+            def inner(self):
+                return 1
+    """})
+    calls = proj.functions["repro.serving.mod:Svc.top"].calls
+    resolved = [c.target.qualname for c in calls if c.target is not None]
+    assert resolved == ["repro.serving.mod:Svc.inner"]
+    # the unresolved receiver stays opaque: a call site with no edge
+    assert any(c.target is None for c in calls)
+
+
+# ----------------------------- family 12: transitive purity (ECO120/121)
+
+
+def test_eco120_host_sync_reached_through_call_chain():
+    bad = src("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+
+        def helper(x):
+            return np.sum(x)
+    """)
+    report = check_sources({CORE: bad}, select=["ECO120"], project=True)
+    assert rules_of(report.violations) == ["ECO120"]
+    assert "entry -> " in report.violations[0].message
+
+    good = src("""
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+
+        def helper(x):
+            return jnp.sum(x)
+    """)
+    assert check_sources({CORE: good}, select=["ECO120"],
+                         project=True).violations == []
+
+
+def test_eco120_without_project_flag_stays_silent():
+    bad = "import numpy as np\n\ndef add_pair(s):\n    return np.sum(s)\n"
+    assert check_sources({CORE: bad}, select=["ECO120"]).violations == []
+
+
+def test_eco120_follows_factory_and_scan_step_chain():
+    # the scan_stream shape: a factory returns a jit kernel whose step
+    # function is passed to lax.scan by VALUE — a deferred edge the walk
+    # must still follow into the helper
+    bad = src("""
+        import jax
+        from jax import lax
+
+        def _factory():
+            @jax.jit
+            def kernel(xs):
+                def step(c, x):
+                    return helper(c), x
+                return lax.scan(step, 0, xs)
+            return kernel
+
+        def helper(c):
+            return int(c)
+    """)
+    report = check_sources({CORE: bad}, select=["ECO120"], project=True)
+    assert rules_of(report.violations) == ["ECO120"]
+    assert "kernel -> " in report.violations[0].message
+
+
+def test_eco120_transitive_root_bodies_are_scanned():
+    bad = "def add_pair(state):\n    return int(state.max())\n"
+    report = check_sources({CORE: bad}, select=["ECO120"], project=True)
+    assert rules_of(report.violations) == ["ECO120"]
+
+
+def test_eco121_impure_call_reached_through_call_chain():
+    bad = src("""
+        import jax
+        import time
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+
+        def helper(x):
+            return x * time.time()
+    """)
+    report = check_sources({CORE: bad}, select=["ECO121"], project=True)
+    assert rules_of(report.violations) == ["ECO121"]
+
+    good = bad.replace("time.time()", "2.0")
+    assert check_sources({CORE: good}, select=["ECO121"],
+                         project=True).violations == []
+
+
+# ------------------------------- family 6: concurrency (ECO601/602/603)
+
+
+def test_eco601_lock_order_inversion_across_calls():
+    bad = src("""
+        import threading
+
+        class Pool:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cond = threading.Condition()
+
+            def a(self):
+                with self._lock:
+                    self.takes_cond()
+
+            def takes_cond(self):
+                with self._cond:
+                    pass
+
+            def b(self):
+                with self._cond:
+                    with self._lock:
+                        pass
+    """)
+    report = check_sources({SERVING: bad}, select=["ECO601"], project=True)
+    assert rules_of(report.violations) == ["ECO601"]
+    assert "inversion" in report.violations[0].message
+
+    good = bad.replace("with self._cond:\n            with self._lock:",
+                       "with self._lock:\n            with self._cond:")
+    assert good != bad
+    assert check_sources({SERVING: good}, select=["ECO601"],
+                         project=True).violations == []
+
+
+def test_eco602_blocking_reachable_under_lock():
+    bad = src("""
+        import threading
+
+        class Svc:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def close(self):
+                with self._lock:
+                    self._stop()
+
+            def _stop(self):
+                self.fut.result()
+    """)
+    report = check_sources({SERVING: bad}, select=["ECO602"], project=True)
+    assert rules_of(report.violations) == ["ECO602"]
+    assert "_stop" in report.violations[0].message
+
+    good = src("""
+        import threading
+
+        class Svc:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def close(self):
+                with self._lock:
+                    fut = self.fut
+                self._stop(fut)
+
+            def _stop(self, fut):
+                fut.result()
+    """)
+    assert check_sources({SERVING: good}, select=["ECO602"],
+                         project=True).violations == []
+
+
+def test_eco602_lexical_drain_under_lock_and_sanctioned_wait():
+    bad = src("""
+        class Cluster:
+            def retire(self):
+                with self._lock:
+                    self.pod.drain()
+    """)
+    report = check_sources({SERVING: bad}, select=["ECO602"], project=True)
+    assert rules_of(report.violations) == ["ECO602"]
+
+    # Condition.wait on the lock being held is the consumer idiom
+    good = src("""
+        class Svc:
+            def wait_done(self):
+                with self._cond:
+                    while not self.done:
+                        self._cond.wait(0.1)
+    """)
+    assert check_sources({SERVING: good}, select=["ECO602"],
+                         project=True).violations == []
+
+
+def test_eco603_future_completed_from_thread_entry():
+    bad = src("""
+        import threading
+
+        class Bridge:
+            def __init__(self, loop):
+                self.loop = loop
+                self.fut = loop.create_future()
+                threading.Thread(target=self._worker).start()
+
+            def _worker(self):
+                self._finish()
+
+            def _finish(self):
+                self.fut.set_result(1)
+    """)
+    report = check_sources({SERVING: bad}, select=["ECO603"], project=True)
+    assert rules_of(report.violations) == ["ECO603"]
+    assert "_worker" in report.violations[0].message
+
+    good = bad.replace("self._finish()",
+                       "self.loop.call_soon_threadsafe(self._finish)")
+    assert check_sources({SERVING: good}, select=["ECO603"],
+                         project=True).violations == []
+
+
+# ------------------------------ family 7: contracts (ECO701/702/703/704)
+
+
+def test_eco701_backend_conformance():
+    bad = src("""
+        from repro.serving.backend import register_backend
+
+        class Bad:
+            name = "bad"
+            max_batch = 4
+
+            def serve_batch(self):
+                return []
+
+            def profile_row(self):
+                return {}
+
+        register_backend("bad", Bad)
+    """)
+    report = check_sources({SERVING: bad}, select=["ECO701"], project=True)
+    assert rules_of(report.violations) == ["ECO701"]
+    assert "serve_batch" in report.violations[0].message
+
+    duck = src("""
+        class Duck:
+            def serve_batch(self, requests):
+                return list(requests)
+
+            def profile_row(self):
+                return {}
+    """)
+    report = check_sources({SERVING: duck}, select=["ECO701"], project=True)
+    assert sorted(rules_of(report.violations)) == ["ECO701", "ECO701"]
+    assert {("name" in v.message or "max_batch" in v.message)
+            for v in report.violations} == {True}
+
+    good = src("""
+        class Good:
+            def __init__(self, name):
+                self.name = name
+                self.max_batch = 8
+
+            def serve_batch(self, requests):
+                return list(requests)
+
+            def profile_row(self):
+                return {"name": self.name}
+    """)
+    assert check_sources({SERVING: good}, select=["ECO701"],
+                         project=True).violations == []
+
+
+def test_eco702_policy_conformance():
+    bad = src("""
+        class HalfPolicy:
+            batchable = False
+
+            def decide(self, request):
+                return request
+
+            def observe(self, observation):
+                pass
+    """)
+    report = check_sources({CORE: bad}, select=["ECO702"], project=True)
+    assert rules_of(report.violations) == ["ECO702", "ECO702"]
+
+    good = src("""
+        class FullPolicy:
+            batchable = False
+
+            def decide(self, request):
+                return request
+
+            def decide_batch(self, requests):
+                return [None for _ in requests]
+
+            def observe(self, observation):
+                pass
+
+            def reset(self):
+                pass
+    """)
+    assert check_sources({CORE: good}, select=["ECO702"],
+                         project=True).violations == []
+
+
+def test_eco703_batchable_honesty():
+    looped = src("""
+        class P:
+            batchable = %s
+
+            def decide(self, request):
+                return request
+
+            def decide_batch(self, requests):
+                return [self.decide(r) for r in requests]
+
+            def observe(self, observation):
+                pass
+
+            def reset(self):
+                pass
+    """)
+    report = check_sources({CORE: looped % "True"}, select=["ECO703"],
+                           project=True)
+    assert rules_of(report.violations) == ["ECO703"]
+    # an honest batchable = False may loop all it wants
+    assert check_sources({CORE: looped % "False"}, select=["ECO703"],
+                         project=True).violations == []
+
+
+def _contract_kernel(ops):
+    return {
+        "src/repro/kernels/foo/__init__.py": "",
+        "src/repro/kernels/foo/ops.py": src(ops),
+        "src/repro/kernels/foo/ref.py": src("""
+            def run(x, scale=1.0):
+                return x * scale
+        """),
+    }
+
+
+def test_eco704_entry_without_oracle_dispatch():
+    report = check_sources(_contract_kernel("""
+        from . import ref
+
+        def run(x):
+            return x + 1
+    """), select=["ECO704"], project=True)
+    assert rules_of(report.violations) == ["ECO704"]
+    assert "never dispatches" in report.violations[0].message
+
+
+def test_eco704_signature_mismatches():
+    report = check_sources(_contract_kernel("""
+        from . import ref
+
+        def run(x):
+            return ref.run(x, mode=3)
+
+        def gone(x):
+            return ref.vanished(x)
+    """), select=["ECO704"], project=True)
+    assert rules_of(report.violations) == ["ECO704", "ECO704"]
+    msgs = " | ".join(v.message for v in report.violations)
+    assert "mode" in msgs and "vanished" in msgs
+
+
+def test_eco704_conforming_dispatch_and_jit_alias():
+    report = check_sources(_contract_kernel("""
+        import jax
+        from . import ref
+
+        def run(x, scale=1.0):
+            return ref.run(x, scale=scale)
+
+        run_fast = jax.jit(ref.run)
+    """), select=["ECO704"], project=True)
+    assert report.violations == []
+
+    report = check_sources(_contract_kernel("""
+        import jax
+        from . import ref
+
+        def run(x):
+            return ref.run(x)
+
+        broken = jax.jit(ref.vanished)
+    """), select=["ECO704"], project=True)
+    assert rules_of(report.violations) == ["ECO704"]
+
+
+# ----------------------------- family 9: suppression hygiene (ECO900)
+
+
+def test_eco900_flags_unused_suppression():
+    report = check_sources(
+        {"x.py": "x = 1  # repro-lint: disable=ECO503\n"},
+        select=["ECO900", "ECO503"], project=True)
+    assert rules_of(report.violations) == ["ECO900"]
+    assert "no ECO503 finding" in report.violations[0].message
+
+
+def test_eco900_used_suppression_is_silent():
+    report = check_sources(
+        {"x.py": "from hypothesis import given"
+                 "  # repro-lint: disable=ECO503\n"},
+        select=["ECO900", "ECO503"], project=True)
+    assert report.violations == [] and report.suppressed == 1
+
+
+def test_eco900_unknown_id_and_blanket_marker():
+    report = check_sources(
+        {"x.py": "# repro-lint: disable=ECO999 -- typo\nx = 1\n"},
+        select=["ECO900"], project=True)
+    assert rules_of(report.violations) == ["ECO900"]
+    assert "ECO999" in report.violations[0].message
+
+    report = check_sources(
+        {"x.py": "x = 1  # repro-lint: disable=all\n"},
+        select=["ECO900", "ECO503"], project=True)
+    assert rules_of(report.violations) == ["ECO900"]
+
+
+def test_eco900_skips_ids_of_disabled_rules():
+    # under --select there is no way to judge a marker for a rule that
+    # did not run, so it must not be called unused
+    report = check_sources(
+        {"x.py": "x = 1  # repro-lint: disable=ECO503\n"},
+        select=["ECO900"], project=True)
+    assert report.violations == []
+
+
+# ------------------------------------------- suppression parsing edges
+
+
+def test_suppression_standalone_above_decorated_def():
+    # ECO702 reports at the class line; the marker sits above the
+    # decorator stack and must cover the decorated line too
+    fixture = src("""
+        import dataclasses
+
+        # repro-lint: disable=ECO702 -- intentionally partial face
+        @dataclasses.dataclass
+        class Partial:
+            batchable: bool = False
+
+            def decide(self, request):
+                return request
+
+            def observe(self, observation):
+                pass
+    """)
+    report = check_sources({CORE: fixture}, select=["ECO702"], project=True)
+    assert report.violations == [] and report.suppressed == 2
+
+
+def test_suppression_multiple_ids_in_one_marker():
+    fixture = src("""
+        import jax
+        import time
+
+        @jax.jit
+        def f(x):
+            # repro-lint: disable=ECO101, ECO102 -- fixture for both
+            y = float(time.time())
+            return x + y
+    """)
+    report = check_sources({CORE: fixture}, select=["ECO101", "ECO102"])
+    assert report.violations == [] and report.suppressed == 2
+
+
+def test_suppression_disable_file_mid_file():
+    fixture = ("import hypothesis\n"
+               "# repro-lint: disable-file=ECO503\n"
+               "from hypothesis import given\n")
+    report = check_sources({"x.py": fixture}, select=["ECO503"])
+    assert report.violations == [] and report.suppressed == 2
+
+
+def test_suppression_marker_inside_string_is_inert():
+    fixture = ('"""docs quoting the grammar:\n\n'
+               "    # repro-lint: disable-file=ECO503\n"
+               '"""\n'
+               "import hypothesis\n")
+    report = check_sources({"x.py": fixture}, select=["ECO503"])
+    assert rules_of(report.violations) == ["ECO503"]
+    assert report.suppressed == 0
+
+
+# ------------------------------------------------------- CLI (project era)
+
+
+def test_run_paths_skips_pycache_hidden_and_non_utf8(tmp_path, capsys):
+    pkg = tmp_path / "pkg"
+    cache = pkg / "__pycache__"
+    hidden = tmp_path / ".hidden"
+    for d in (pkg, cache, hidden):
+        d.mkdir()
+    (pkg / "good.py").write_text("x = 1\n")
+    (cache / "stale.py").write_text("from hypothesis import given\n")
+    (hidden / "secret.py").write_text("from hypothesis import given\n")
+    (pkg / "blob.py").write_bytes(b"\xff\xfe\x00 not utf8")
+    assert main([str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "1 files" in out
+
+
+def test_cli_format_github_annotations(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", "from hypothesis import given\n")
+    assert main([str(bad), "--format", "github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=" in out
+    assert "line=1," in out and "ECO503" in out
+
+
+def test_cli_report_file_written_regardless_of_format(tmp_path, capsys):
+    bad = _write(tmp_path, "bad.py", "from hypothesis import given\n")
+    dest = tmp_path / "lint-report.json"
+    assert main([str(bad), "--format", "github",
+                 "--report", str(dest)]) == 1
+    capsys.readouterr()
+    doc = json.loads(dest.read_text())
+    assert doc["version"] == 1
+    assert doc["counts"] == {"ECO503": 1}
+
+
+def test_cli_project_flag_enables_interprocedural_rules(tmp_path, capsys):
+    bad = _write(tmp_path, "mod.py", src("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def entry(x):
+            return helper(x)
+
+        def helper(x):
+            return np.sum(x)
+    """))
+    assert main([str(bad)]) == 0
+    capsys.readouterr()
+    assert main([str(bad), "--project"]) == 1
+    assert "ECO120" in capsys.readouterr().out
+
+
+def test_cli_project_clean_and_fast_on_this_repo(capsys):
+    """The acceptance gate: the whole-tree interprocedural pass is clean
+    and completes well inside the 5 s budget."""
+    import time
+    paths = [str(REPO / d) for d in ("src", "tests", "benchmarks",
+                                     "examples") if (REPO / d).exists()]
+    t0 = time.monotonic()
+    rc = main(["--project", *paths])
+    elapsed = time.monotonic() - t0
+    assert rc == 0, capsys.readouterr().out
+    assert elapsed < 5.0, f"--project pass took {elapsed:.2f}s"
+
+
+def test_cli_list_rules_markdown_and_rules_md_drift(capsys):
+    from repro.analysis.cli import catalogue_markdown
+    assert main(["--list-rules", "--format", "markdown"]) == 0
+    out = capsys.readouterr().out
+    assert out == catalogue_markdown()
+    for rid in ("ECO120", "ECO601", "ECO701", "ECO900"):
+        assert rid in out
+    # docs/RULES.md is generated from this exact output
+    assert (REPO / "docs" / "RULES.md").read_text() == out
+    # --format markdown without --list-rules is a usage error
+    assert main([str(REPO / "src" / "repro" / "analysis"),
+                 "--format", "markdown"]) == 2
+    capsys.readouterr()
