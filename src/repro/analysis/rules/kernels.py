@@ -1,4 +1,4 @@
-"""Family 4 — kernel oracle contract (ECO401/402/403/404), project-level.
+"""Family 4 — kernel oracle contract (ECO401-ECO405).
 
 Every Pallas kernel package ``kernels/<name>/`` ships as: ``__init__.py``
 (importable without path tricks), ``ops.py`` (the dispatching public
@@ -6,6 +6,10 @@ surface), ``ref.py`` (the jnp-only oracle the parity tests compare
 against), and at least one test under ``tests/`` that references it.  A
 kernel without an oracle or without a parity test is unverifiable; an
 oracle that imports pallas can no longer disagree with the kernel.
+ECO405 (per-file) keeps ops.py honest the other way: a shape-guarded
+branch that silently rewrites dispatch to the oracle hides exactly the
+frames the kernel exists to accelerate — fall-backs must carry a
+``# repro-lint`` justification or be deleted.
 """
 from __future__ import annotations
 
@@ -101,6 +105,67 @@ class KernelUntested(_KernelRule):
                             f"kernel {name!r} is not referenced by any "
                             "file under tests/ — add a parity test "
                             f"importing repro.kernels.{name}")
+
+
+_LIMIT_NAME = re.compile(r"^[A-Z][A-Z0-9_]*$")
+_LIMIT_HINT = re.compile(r"MAX|WIDTH|HEIGHT|LIMIT|CAP|SIZE")
+
+
+def _shape_guard(test: ast.expr) -> bool:
+    """Does this ``if`` test consult the input's geometry — a
+    ``.shape``/``.size``/``.ndim`` attribute or an ALL-CAPS limit
+    constant (``MAX_WIDTH``-style)?"""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Attribute) and node.attr in ("shape",
+                                                             "size", "ndim"):
+            return True
+        if isinstance(node, ast.Name) and _LIMIT_NAME.match(node.id) \
+                and _LIMIT_HINT.search(node.id):
+            return True
+    return False
+
+
+def _falls_back_to_oracle(body: List[ast.stmt]) -> bool:
+    """Does the guarded branch reroute dispatch to the oracle — assign an
+    ``impl``-style variable a string constant, or return/call ``ref.*``?"""
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Assign):
+                targets = [t.id for t in node.targets
+                           if isinstance(t, ast.Name)]
+                consts = [n.value for n in ast.walk(node.value)
+                          if isinstance(n, ast.Constant)
+                          and isinstance(n.value, str)]
+                if any("impl" in t for t in targets) and consts:
+                    return True
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "ref":
+                return True
+    return False
+
+
+@register
+class KernelSilentFallback(Rule):
+    id = "ECO405"
+    name = "kernel-silent-fallback"
+    description = ("ops.py silently reroutes dispatch to the oracle behind "
+                   "a shape guard — the kernel quietly stops serving "
+                   "exactly the inputs it exists for; delete the guard or "
+                   "justify it with a # repro-lint disable")
+    include = ("*/kernels/*/ops.py",)
+
+    def check(self, src: SourceFile):
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.If) or not _shape_guard(node.test):
+                continue
+            if _falls_back_to_oracle(node.body):
+                yield self.hit(
+                    node, src.path,
+                    "shape-guarded branch silently falls back to the "
+                    "oracle — every input the kernel claims to serve must "
+                    "reach it, or the fallback needs a # repro-lint "
+                    "justification naming why")
 
 
 @register

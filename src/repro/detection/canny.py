@@ -16,7 +16,7 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.kernels.canny_fused.ops import canny_edge
+from repro.kernels.canny_fused.ops import canny_edge, canny_edge_batch
 from repro.kernels.canny_fused.ref import gaussian_blur  # noqa: F401  (re-export)
 
 
@@ -65,8 +65,16 @@ def canny_count(img: np.ndarray) -> int:
     return _label_count(edge)
 
 
-def canny_count_batch(imgs: np.ndarray) -> np.ndarray:
-    """Estimate object counts for a whole [B, H, W] batch: ONE edge-map
-    launch for the batch, then per-image component counting."""
-    edges = np.asarray(_canny_map(jnp.asarray(imgs)))
+def canny_count_batch(imgs) -> np.ndarray:
+    """Estimate object counts for a whole batch: edge maps first (as few
+    kernel launches as the frame shapes allow), then per-image component
+    counting.
+
+    Accepts a uniform [B, H, W] ndarray (ONE launch, unchanged fast path)
+    or a sequence of [H, W] frames of mixed sizes, which is routed through
+    the ragged pad-and-mask bucket path (one launch per size bucket)."""
+    if getattr(imgs, "ndim", None) == 3:
+        edges = np.asarray(_canny_map(jnp.asarray(imgs)))
+    else:
+        edges = canny_edge_batch(imgs)
     return np.asarray([_label_count(e) for e in edges])

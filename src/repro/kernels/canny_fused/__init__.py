@@ -1,1 +1,1 @@
-from .ops import canny_edge  # noqa: F401
+from .ops import bucket_shape, canny_edge, canny_edge_batch  # noqa: F401

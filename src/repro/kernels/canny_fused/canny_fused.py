@@ -10,39 +10,58 @@ bool edge map is written back.
 
 Tiling / halo scheme
 --------------------
-Grid = (batch, row_tiles): each program owns ``tile_rows`` output rows and
-sees three stacked input blocks — the PREVIOUS, CURRENT and NEXT row-tile
-(index maps clamped at the frame edges) — from which it assembles a
-``tile_rows + 2*HALO`` row window.  Fetching whole neighbour tiles (rather
-than an overlapping element-offset window, which BlockSpec's block-index
-granularity cannot express) means each input tile is DMA'd up to 3x, but
-that is input traffic only — still far below the staged pipeline's ~6 full
-frame read+write round-trips, and the win grows with everything that never
-leaves VMEM.  HALO = 12 rows per side is exactly the receptive-field height
-of one output row:
+Grid = (batch, row_tiles, lane_tiles): each program owns a
+``tile_rows x tile_lanes`` output window and sees its 3x3 neighbourhood of
+input blocks (index maps clamped at the frame edges), from which it
+assembles a ``(tile_rows + 2*HALO, tile_lanes + 2*HALO)`` window — 12 halo
+rows above/below plus 12 halo lanes left/right.  Fetching whole neighbour
+blocks (rather than an overlapping element-offset window, which BlockSpec's
+block-index granularity cannot express) means each input block is DMA'd up
+to 9x, but that is input traffic only — still far below the staged
+pipeline's ~6 full frame read+write round-trips, and the win grows with
+everything that never leaves VMEM.  HALO = 12 rows/lanes per side is
+exactly the receptive field of one output pixel in each dimension:
 
     2 (gaussian blur) + 1 (Sobel) + 1 (NMS) + 8 (hysteresis dilations) = 12
 
-so every window row that influences an emitted row is computed from real
-neighbour data; window rows closer than HALO to the window edge may be
-corrupt (they see the window's own replicated/zero padding instead of the
-true neighbour tile) and are discarded.  This is why ``tile_rows >= HALO`` is
-required: the halo must fit inside one neighbouring block.
+so every window pixel that influences an emitted pixel is computed from
+real neighbour data; window rows/lanes closer than HALO to the window edge
+may be corrupt (they see the window's own replicated/zero padding instead
+of the true neighbour block) and are discarded.  This is why
+``tile_rows >= HALO`` and ``tile_lanes >= HALO`` are required: the halo
+must fit inside one neighbouring block in each dimension.
 
 Frame-boundary parity: the jnp oracle pads each stage differently (blur and
 Sobel replicate their INPUT at the frame edge; NMS and hysteresis zero-pad),
 and replicating the raw frame before blurring is NOT the same as replicating
 the blurred frame before Sobel.  The kernel therefore re-applies the
-per-stage semantics to the out-of-frame window rows between stages — edge
-rows re-replicated after blur, magnitudes zeroed outside the frame — which
-makes the emitted rows bit-identical to ``ref.canny_edge`` (tested exactly,
-not to a tolerance, in tests/test_canny_fused.py).
+per-stage semantics to the out-of-frame window pixels between stages — edge
+rows/lanes re-replicated after blur, magnitudes zeroed outside the frame —
+which makes the emitted pixels bit-identical to ``ref.canny_edge`` (tested
+exactly, not to a tolerance, in tests/test_canny_fused.py).
 
-VMEM budget: the working set is the window (~[tile_rows+24, W]) in f32 for
-the frame/blur/magnitude stages plus a few bool maps — ~5 f32-equivalent
-buffers.  At the default tile_rows=128 and W=1024 that is ~3 MB, well inside
-the ~16 MB/core budget; frames wider than ~4k columns should shrink
-``tile_rows`` (the grid already scales to any frame HEIGHT).
+Ragged batches (pad-and-mask): the per-frame TRUE extent is carried by the
+``dims`` input ([B, 2] int32 (height, width) per frame), so a batch of
+mixed-resolution frames zero-padded to a common bucket shape streams
+through ONE launch — every pixel at or beyond a frame's true extent is
+out-of-frame for that frame (replicated for blur/Sobel, zeroed for
+NMS/hysteresis) and the emitted map is False there, so callers just crop.
+When ``dims`` is omitted every frame spans the full array.  (On a real TPU
+``dims`` belongs in SMEM / scalar prefetch; the plain input keeps the
+kernel portable to interpret mode, and the two scalar reads per program are
+noise next to the window compute.)
+
+VMEM budget model (``pick_tiles``): the working set is ~6 f32-equivalent
+``(tile_rows + 24, tile_lanes + 24)`` window buffers (frame/blur/gradients/
+magnitude stages plus bool maps) + the 9 fetched ``(tile_rows, tile_lanes)``
+input blocks + the bool output block.  When tile sizes are not given,
+``pick_tiles`` starts from the widest lane tile (whole width up to 2048
+lanes, 128-lane granularity — fewer lane tiles means less halo refetch) and
+the tallest row tile (up to 128 rows, 8-row granularity), then shrinks rows
+first and lanes second until the working set fits ``VMEM_BUDGET_BYTES``
+(8 MiB — half the ~16 MiB/core, leaving room for pipelining).  A 4K
+(2160x3840) frame lands on (56, 2048): ~7.8 MiB resident, 39x2 programs.
+Arbitrary frame sizes stream through VMEM — there is no width limit.
 """
 from __future__ import annotations
 
@@ -54,40 +73,109 @@ from jax.experimental import pallas as pl
 
 from .ref import HYSTERESIS_ITERS
 
-#: rows of neighbour context one output row depends on (see module docstring)
+#: rows/lanes of neighbour context one output pixel depends on per side
+#: (see module docstring)
 HALO = 2 + 1 + 1 + HYSTERESIS_ITERS
 
-#: widest frame the row-tiled kernel accepts: the working set is ~5
-#: f32-equivalent [tile_rows + 2*HALO, W] buffers, so at the minimum
-#: tile_rows=HALO a 4096-column frame is ~3 MB of VMEM — comfortably inside
-#: the ~16 MB/core budget; wider frames need lane-dim (width) tiling, which
-#: this kernel does not implement (ROADMAP: "lane-dim (width) tiling for
-#: frames wider than ~4k columns" is an open item)
-MAX_WIDTH = 4096
+#: working-set ceiling pick_tiles fits the default tile sizes into — half
+#: the ~16 MiB/core VMEM, leaving headroom for double-buffered pipelines
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+#: TPU-native tile granularities (f32): 128-wide lanes, 8-row sublanes
+LANE = 128
+SUBLANE = 8
+
+#: f32-equivalent window-sized buffers live at the working-set peak
+#: (frame/blur/magnitude/direction stages + bool maps)
+_WINDOW_BUFFERS = 6
 
 
-def _canny_kernel(prev_ref, cur_ref, next_ref, out_ref, *,
-                  h: int, tile: int, lo: float, hi: float):
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def tile_bytes(tile_rows: int, tile_lanes: int) -> int:
+    """Modeled VMEM working set of one program at these tile sizes."""
+    rows, cols = tile_rows + 2 * HALO, tile_lanes + 2 * HALO
+    window = _WINDOW_BUFFERS * 4 * rows * cols
+    blocks = 9 * 4 * tile_rows * tile_lanes  # the 3x3 neighbour input blocks
+    out = tile_rows * tile_lanes             # bool output block
+    return window + blocks + out
+
+
+def pick_tiles(h: int, w: int, *, tile_rows: int | None = None,
+               tile_lanes: int | None = None,
+               vmem_budget_bytes: int = VMEM_BUDGET_BYTES
+               ) -> tuple[int, int]:
+    """(tile_rows, tile_lanes) for an [h, w] frame from the VMEM budget
+    model (see module docstring); explicit values are honored as-is, and a
+    missing dimension is auto-picked around the fixed one."""
+    if tile_rows is not None and tile_lanes is not None:
+        return tile_rows, tile_lanes
+    max_tl = (tile_lanes if tile_lanes is not None
+              else min(_round_up(max(w, 1), LANE), 16 * LANE))
+    max_tr = (tile_rows if tile_rows is not None
+              else min(_round_up(max(h, HALO), SUBLANE), 128))
+    # the smallest tile the auto-picker may shrink to: 2 sublanes (>= HALO)
+    floor_tr = max_tr if tile_rows is not None else min(max_tr, 2 * SUBLANE)
+    tl = max_tl
+    while True:
+        tr = max_tr
+        while tr > floor_tr and tile_bytes(tr, tl) > vmem_budget_bytes:
+            tr -= SUBLANE
+        if (tile_bytes(tr, tl) <= vmem_budget_bytes
+                or tile_lanes is not None or tl <= LANE):
+            return tr, tl
+        tl -= LANE
+
+
+def _canny_kernel(dims_ref, tl_ref, tc_ref, tr_ref, ml_ref, mc_ref, mr_ref,
+                  bl_ref, bc_ref, br_ref, out_ref, *,
+                  tile_r: int, tile_l: int, lo: float, hi: float):
     i = pl.program_id(1)
-    win = jnp.concatenate([prev_ref[0][tile - HALO:], cur_ref[0],
-                           next_ref[0][:HALO]], axis=0)  # [tile+2*HALO, W]
-    rows, w = win.shape
-    # global frame row of every window row; rows outside [0, h) only occur in
-    # frame-edge tiles (or grid padding past a non-tile-multiple height)
+    j = pl.program_id(2)
+    h = dims_ref[0, 0]   # this frame's TRUE extent (<= the padded array)
+    w = dims_ref[0, 1]
+
+    def slab(left, mid, right, rs):
+        """One window row-slab: halo lanes from the left/right neighbour
+        blocks around the middle block, over row slice ``rs``."""
+        return jnp.concatenate(
+            [left[0][rs, tile_l - HALO:], mid[0][rs],
+             right[0][rs, :HALO]], axis=1)
+
+    win = jnp.concatenate(
+        [slab(tl_ref, tc_ref, tr_ref, slice(tile_r - HALO, None)),
+         slab(ml_ref, mc_ref, mr_ref, slice(None, None)),
+         slab(bl_ref, bc_ref, br_ref, slice(None, HALO))],
+        axis=0)  # [tile_r + 2*HALO, tile_l + 2*HALO]
+    rows, cols = win.shape
+    # global frame row/lane of every window pixel; positions outside
+    # [0, h) x [0, w) only occur in frame-edge tiles, grid padding past a
+    # non-tile-multiple extent, or a ragged frame's pad region
     gr = (jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0)
-          + i * tile - HALO)
+          + i * tile_r - HALO)
+    gc = (jax.lax.broadcasted_iota(jnp.int32, (1, cols), 1)
+          + j * tile_l - HALO)
     oob_top = gr < 0
     oob_bot = gr > h - 1
-    oob = oob_top | oob_bot
+    oob_left = gc < 0
+    oob_right = gc > w - 1
+    oob = (oob_top | oob_bot) | (oob_left | oob_right)
     # frame row 0 sits at window index HALO whenever oob_top is non-empty
-    # (only tile 0); frame row h-1 sits at HALO + (h-1) - i*tile whenever
-    # oob_bot is non-empty (clamped to a no-op position otherwise)
-    bot_pos = jnp.clip(HALO + (h - 1) - i * tile, 0, rows - 1)
+    # (only tile i=0), and symmetrically lane 0 at HALO for tile j=0; frame
+    # row h-1 sits at HALO + (h-1) - i*tile_r whenever oob_bot is non-empty
+    # (clamped to a no-op position otherwise), lane w-1 likewise
+    bot_pos = jnp.clip(HALO + (h - 1) - i * tile_r, 0, rows - 1)
+    right_pos = jnp.clip(HALO + (w - 1) - j * tile_l, 0, cols - 1)
 
     def replicate_frame_edges(a):
         top = a[HALO][None, :]
         bot = jax.lax.dynamic_slice_in_dim(a, bot_pos, 1, axis=0)
-        return jnp.where(oob_bot, bot, jnp.where(oob_top, top, a))
+        a = jnp.where(oob_bot, bot, jnp.where(oob_top, top, a))
+        left = a[:, HALO][:, None]
+        right = jax.lax.dynamic_slice_in_dim(a, right_pos, 1, axis=1)
+        return jnp.where(oob_right, right, jnp.where(oob_left, left, a))
 
     # ---- gaussian blur (oracle pads the INPUT with edge replication)
     win = replicate_frame_edges(win)
@@ -98,9 +186,9 @@ def _canny_kernel(prev_ref, cur_ref, next_ref, out_ref, *,
     k = jnp.exp(-0.5 * (xs / 1.0) ** 2)
     k = (k / k.sum())[:, 0]
     padh = jnp.pad(win, ((0, 0), (r, r)), mode="edge")
-    blur_h = sum(padh[:, j:j + w] * k[j] for j in range(2 * r + 1))
+    blur_h = sum(padh[:, t:t + cols] * k[t] for t in range(2 * r + 1))
     padv = jnp.pad(blur_h, ((r, r), (0, 0)), mode="edge")
-    sm = sum(padv[j:j + rows, :] * k[j] for j in range(2 * r + 1))
+    sm = sum(padv[t:t + rows, :] * k[t] for t in range(2 * r + 1))
 
     # ---- Sobel (oracle pads the BLURRED map with edge replication)
     sm = replicate_frame_edges(sm)
@@ -116,12 +204,12 @@ def _canny_kernel(prev_ref, cur_ref, next_ref, out_ref, *,
     # ---- NMS (oracle zero-pads the magnitude at the frame border)
     mag = jnp.where(oob, 0.0, mag)
     p = jnp.pad(mag, ((1, 1), (1, 1)))
-    c = p[1:rows + 1, 1:w + 1]
+    c = p[1:rows + 1, 1:cols + 1]
     neigh = [
-        (p[1:rows + 1, 2:], p[1:rows + 1, :w]),        # 0: E/W
-        (p[2:, 2:], p[:rows, :w]),                     # 1: SE/NW
-        (p[2:, 1:w + 1], p[:rows, 1:w + 1]),           # 2: S/N
-        (p[2:, :w], p[:rows, 2:]),                     # 3: SW/NE
+        (p[1:rows + 1, 2:], p[1:rows + 1, :cols]),     # 0: E/W
+        (p[2:, 2:], p[:rows, :cols]),                  # 1: SE/NW
+        (p[2:, 1:cols + 1], p[:rows, 1:cols + 1]),     # 2: S/N
+        (p[2:, :cols], p[:rows, 2:]),                  # 3: SW/NE
     ]
     keep = jnp.zeros_like(c, bool)
     for d, (a, b2) in enumerate(neigh):
@@ -129,52 +217,62 @@ def _canny_kernel(prev_ref, cur_ref, next_ref, out_ref, *,
     thin = mag * keep
 
     # ---- double threshold + hysteresis (zero-padded at the frame border:
-    # out-of-frame rows must stay False so growth matches the oracle)
+    # out-of-frame pixels must stay False so growth matches the oracle)
     strong = (thin > hi) & ~oob
     weak = (thin > lo) & ~oob
     for _ in range(HYSTERESIS_ITERS):
         sp = jnp.pad(strong, ((1, 1), (1, 1)))
-        dil = (sp[:rows, 1:w + 1] | sp[2:, 1:w + 1] | sp[1:rows + 1, :w]
-               | sp[1:rows + 1, 2:] | sp[:rows, :w] | sp[:rows, 2:]
-               | sp[2:, :w] | sp[2:, 2:] | strong)
+        dil = (sp[:rows, 1:cols + 1] | sp[2:, 1:cols + 1]
+               | sp[1:rows + 1, :cols] | sp[1:rows + 1, 2:]
+               | sp[:rows, :cols] | sp[:rows, 2:]
+               | sp[2:, :cols] | sp[2:, 2:] | strong)
         strong = dil & weak
 
-    out_ref[0] = strong[HALO:HALO + tile]
+    out_ref[0] = strong[HALO:HALO + tile_r, HALO:HALO + tile_l]
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("lo", "hi", "tile_rows", "interpret"))
-def canny_edge_pallas(img, *, lo: float = 0.6, hi: float = 1.0,
-                      tile_rows: int | None = None, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "tile_rows",
+                                             "tile_lanes", "interpret"))
+def canny_edge_pallas(img, dims=None, *, lo: float = 0.6, hi: float = 1.0,
+                      tile_rows: int | None = None,
+                      tile_lanes: int | None = None,
+                      interpret: bool = False):
     """img [B,H,W] f32 -> edge map [B,H,W] bool, one fused pallas_call.
 
-    ``tile_rows`` picks the row-tile height (defaults to whole-frame up to
-    128 rows); any frame height works, including non-multiples of the tile.
+    ``tile_rows``/``tile_lanes`` pick the 2D tile (default: the VMEM budget
+    model, ``pick_tiles``); any frame size works — heights AND widths that
+    are odd, non-square, or non-multiples of the tile simply leave the last
+    tile ragged.  ``dims`` ([B, 2] int32 (height, width) per frame, default
+    whole-array) is the pad-and-mask plane for ragged batches: pixels at or
+    beyond a frame's true extent come back False.
     """
     b, h, w = img.shape
-    if w > MAX_WIDTH:
-        raise ValueError(
-            f"frame width {w} exceeds the fused kernel's column limit "
-            f"({MAX_WIDTH}): the row-tiled megakernel keeps whole rows in "
-            f"VMEM and only tiles the HEIGHT; frames this wide need "
-            f"lane-dim (width) tiling — an open ROADMAP item ('lane-dim "
-            f"(width) tiling for frames wider than ~4k columns').  Use "
-            f"impl='xla' (the staged oracle) for now.")
-    tile = tile_rows if tile_rows is not None else min(max(h, HALO), 128)
-    if tile < HALO:
-        raise ValueError(
-            f"tile_rows={tile} < HALO={HALO}: the halo must fit inside one "
-            f"neighbouring row-tile block")
-    n = pl.cdiv(h, tile)
-    kernel = functools.partial(_canny_kernel, h=h, tile=tile, lo=lo, hi=hi)
-    block = lambda f: pl.BlockSpec((1, tile, w), f)  # noqa: E731
+    tile_r, tile_l = pick_tiles(h, w, tile_rows=tile_rows,
+                                tile_lanes=tile_lanes)
+    for name, t in (("tile_rows", tile_r), ("tile_lanes", tile_l)):
+        if t < HALO:
+            raise ValueError(
+                f"{name}={t} < HALO={HALO}: the halo must fit inside one "
+                f"neighbouring block")
+    if dims is None:
+        dims = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    nr = pl.cdiv(h, tile_r)
+    nl = pl.cdiv(w, tile_l)
+    kernel = functools.partial(_canny_kernel, tile_r=tile_r, tile_l=tile_l,
+                               lo=lo, hi=hi)
+    block = lambda f: pl.BlockSpec((1, tile_r, tile_l), f)  # noqa: E731
+
+    def neighbour(di, dj):
+        return block(lambda bi, i, j: (bi, jnp.clip(i + di, 0, nr - 1),
+                                       jnp.clip(j + dj, 0, nl - 1)))
+
+    in_specs = [pl.BlockSpec((1, 2), lambda bi, i, j: (bi, 0))]
+    in_specs += [neighbour(di, dj) for di in (-1, 0, 1) for dj in (-1, 0, 1)]
     return pl.pallas_call(
         kernel,
-        grid=(b, n),
-        in_specs=[block(lambda bi, i: (bi, jnp.maximum(i - 1, 0), 0)),
-                  block(lambda bi, i: (bi, i, 0)),
-                  block(lambda bi, i: (bi, jnp.minimum(i + 1, n - 1), 0))],
-        out_specs=block(lambda bi, i: (bi, i, 0)),
+        grid=(b, nr, nl),
+        in_specs=in_specs,
+        out_specs=block(lambda bi, i, j: (bi, i, j)),
         out_shape=jax.ShapeDtypeStruct((b, h, w), jnp.bool_),
         interpret=interpret,
-    )(img, img, img)
+    )(dims, *([img] * 9))

@@ -1,29 +1,98 @@
-"""Dispatch wrapper for the fused Canny gateway kernel."""
+"""Dispatch wrapper for the fused Canny gateway kernel.
+
+The 2D lane-tiled kernel accepts arbitrary frame sizes (the old
+``MAX_WIDTH`` column limit is gone), so ``impl='auto'`` never falls back
+to the staged oracle for shape reasons — backend availability alone picks
+the implementation.
+
+``canny_edge_batch`` is the ragged entry point the serving plane uses:
+frames of mixed sizes are grouped into pad-and-mask buckets (one
+``pallas_call`` per bucket, per-frame true dims masked in-kernel) instead
+of launching once per frame.
+"""
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 
 
 def canny_edge(img, lo: float = 0.6, hi: float = 1.0, *,
-               impl: str = "auto", tile_rows: int | None = None):
+               impl: str = "auto", tile_rows: int | None = None,
+               tile_lanes: int | None = None):
     """img [B,H,W] f32 -> edge map [B,H,W] bool.
 
-    impl: 'auto' (pallas on TPU, xla oracle elsewhere; frames wider than
-    the row-tiled kernel's ``MAX_WIDTH`` column limit fall back to the xla
-    oracle) | 'xla' | 'pallas' (TPU megakernel; fails fast on wide frames)
-    | 'interpret' (CPU parity check).
+    impl: 'auto' (pallas on TPU, xla oracle elsewhere) | 'xla' | 'pallas'
+    (TPU megakernel) | 'interpret' (CPU parity check).  The 2D-tiled
+    kernel serves any frame size, so auto never falls back on width.
     """
     if impl == "auto":
-        from .canny_fused import MAX_WIDTH
         impl = "pallas" if jax.default_backend() == "tpu" else "xla"
-        if img.shape[-1] > MAX_WIDTH:
-            # auto picks the implementation that can serve the frame;
-            # explicit impl='pallas' keeps the fail-fast ValueError
-            impl = "xla"
     if impl == "xla":
         return ref.canny_edge(img, lo, hi)
     from .canny_fused import canny_edge_pallas
     return canny_edge_pallas(img, lo=lo, hi=hi, tile_rows=tile_rows,
+                             tile_lanes=tile_lanes,
                              interpret=(impl == "interpret"))
+
+
+# repro-lint: disable=ECO704 -- host-side bucket geometry, no kernel
+# dispatch to verify against an oracle
+def bucket_shape(h: int, w: int) -> tuple[int, int]:
+    """Padded bucket shape for a ragged frame: rounds h up to 64 and w up
+    to 128 so nearby frame sizes share one compiled kernel instance
+    instead of triggering a recompile per unique (h, w)."""
+    return (-(-h // 64) * 64, -(-w // 128) * 128)
+
+
+def canny_edge_batch(frames, lo: float = 0.6, hi: float = 1.0, *,
+                     impl: str = "auto", tile_rows: int | None = None,
+                     tile_lanes: int | None = None) -> list[np.ndarray]:
+    """Ragged batch entry point: frames is a sequence of [H,W] f32 arrays
+    of possibly different sizes; returns per-frame [H,W] bool edge maps in
+    input order.
+
+    Pallas/interpret path: frames are grouped by ``bucket_shape``,
+    zero-padded into one [Nb,Hb,Wb] tensor per bucket, and served by ONE
+    ``pallas_call`` per bucket with per-frame true dims passed through the
+    kernel's pad-and-mask plane (out-of-frame output is guaranteed False;
+    the host crop just drops it).  XLA path: one oracle call per
+    exact-shape group.
+    """
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    frames = [np.asarray(f, np.float32) for f in frames]
+    out: list[np.ndarray | None] = [None] * len(frames)
+
+    if impl == "xla":
+        groups: dict[tuple[int, int], list[int]] = {}
+        for i, f in enumerate(frames):
+            groups.setdefault(f.shape, []).append(i)
+        for shape, idxs in groups.items():
+            batch = jnp.asarray(np.stack([frames[i] for i in idxs]))
+            maps = np.asarray(ref.canny_edge(batch, lo, hi))
+            for j, i in enumerate(idxs):
+                out[i] = maps[j]
+        return out  # type: ignore[return-value]
+
+    from .canny_fused import canny_edge_pallas
+    buckets: dict[tuple[int, int], list[int]] = {}
+    for i, f in enumerate(frames):
+        buckets.setdefault(bucket_shape(*f.shape), []).append(i)
+    for (bh, bw), idxs in buckets.items():
+        batch = np.zeros((len(idxs), bh, bw), np.float32)
+        dims = np.empty((len(idxs), 2), np.int32)
+        for j, i in enumerate(idxs):
+            h, w = frames[i].shape
+            batch[j, :h, :w] = frames[i]
+            dims[j] = (h, w)
+        maps = np.asarray(canny_edge_pallas(
+            jnp.asarray(batch), jnp.asarray(dims), lo=lo, hi=hi,
+            tile_rows=tile_rows, tile_lanes=tile_lanes,
+            interpret=(impl == "interpret")))
+        for j, i in enumerate(idxs):
+            h, w = frames[i].shape
+            out[i] = maps[j, :h, :w]
+    return out  # type: ignore[return-value]

@@ -124,6 +124,17 @@ class DetectorBackend:
     fleet timestep (the Gateway numbers requests by stream position, so
     fleet costs are identical no matter how dispatch batches or reorders).
 
+    Frames in one dispatch batch need not share a shape: ``serve_batch``
+    groups ragged frames into pad-and-mask buckets
+    (``kernels.canny_fused.bucket_shape``) and runs the detector once per
+    bucket — a uniform batch is a single exact-shape bucket and takes the
+    old one-``np.stack``-one-launch path unchanged.  ``edge_stage=True``
+    additionally runs the fused Canny gateway stage over the whole dispatch
+    batch first (ONE ``pallas_call`` per size bucket via
+    ``canny_edge_batch``) and records each frame's edge density in
+    ``self.edge_density`` keyed by request uid — the EdgeNet-style
+    pre-detector complexity signal the router can consult.
+
     ``run_fn`` defaults to the trained-detector path
     (``detection.train.run_detector``); tests and benches inject stubs.
     ``realtime_scale`` > 0 makes ``serve_batch`` occupy wall-clock time for
@@ -138,7 +149,8 @@ class DetectorBackend:
     def __init__(self, model: str, device: str, params=None, *,
                  max_batch: int = 1, fleet=None,
                  run_fn: Optional[Callable] = None,
-                 realtime_scale: float = 0.0, table=None):
+                 realtime_scale: float = 0.0, table=None,
+                 edge_stage: bool = False):
         from repro.detection.detectors import DETECTOR_CONFIGS
         from repro.detection.devices import DEVICES
         self.name = f"{model}@{device}"
@@ -149,6 +161,9 @@ class DetectorBackend:
         self.fleet = fleet
         self.realtime_scale = realtime_scale
         self.table = table
+        self.edge_stage = edge_stage
+        #: uid -> fraction of edge pixels, filled when edge_stage is on
+        self.edge_density: Dict[int, float] = {}
         self._device = DEVICES[device]
         self._flops = DETECTOR_CONFIGS[model].flops
         if run_fn is None:
@@ -164,11 +179,47 @@ class DetectorBackend:
         return (self._device.time_ms(self._flops),
                 self._device.energy_mwh(self._flops))
 
+    def _run_buckets(self, frames: List[np.ndarray]) -> List[tuple]:
+        """Run the detector over ragged frames: group by pad-and-mask
+        bucket shape, ONE ``self._run`` per bucket, results in input
+        order.  A uniform batch is a single bucket with zero padding, so
+        it degenerates to the old one-stack-one-launch path."""
+        if len({f.shape for f in frames}) == 1:
+            # uniform batch (any payload rank): the old exact-shape path
+            return self._run(self.params, np.stack(frames))
+        from repro.kernels.canny_fused import bucket_shape
+        buckets: Dict[tuple, List[int]] = {}
+        for i, f in enumerate(frames):
+            if f.ndim < 2:
+                raise ValueError(
+                    "ragged serve_batch needs [H, W(, C)] frame payloads; "
+                    f"got a {f.ndim}-d payload of shape {f.shape}")
+            buckets.setdefault(bucket_shape(*f.shape[:2]) + f.shape[2:],
+                               []).append(i)
+        out: List[tuple] = [None] * len(frames)  # type: ignore[list-item]
+        for shape, idxs in buckets.items():
+            batch = np.zeros((len(idxs),) + shape, np.float32)
+            for j, i in enumerate(idxs):
+                h, w = frames[i].shape[:2]
+                batch[j, :h, :w] = frames[i]
+            for i, dets in zip(idxs, self._run(self.params, batch)):
+                out[i] = dets
+        return out
+
     def serve_batch(self, requests: List[Request]) -> List[Result]:
         assert requests
-        imgs = np.stack([r.prompt for r in requests])
+        frames = [np.asarray(r.prompt) for r in requests]
         t0 = time.perf_counter()
-        detections = self._run(self.params, imgs)
+        if self.edge_stage:
+            from repro.kernels.canny_fused import canny_edge_batch
+            for r, edge in zip(requests,
+                               canny_edge_batch([f if f.ndim == 2 else
+                                                 f.mean(axis=-1)
+                                                 for f in frames])):
+                # the maps are host-side numpy already: np.mean is an
+                # explicit host reduction, not a per-item device sync
+                self.edge_density[r.uid] = float(np.mean(edge))
+        detections = self._run_buckets(frames)
         wall_s = time.perf_counter() - t0
         results = []
         total_modeled_ms = 0.0

@@ -444,6 +444,76 @@ def test_eco404_oracle_importing_pallas():
     assert rules_of(report.violations) == ["ECO404"]
 
 
+def test_eco405_flags_shape_guarded_impl_rewrite():
+    ops = src("""
+        from . import ref
+
+        def foo(img, *, impl="auto"):
+            if impl == "auto":
+                from .kern import MAX_WIDTH
+                impl = "pallas"
+                if img.shape[-1] > MAX_WIDTH:
+                    impl = "xla"
+            if impl == "xla":
+                return ref.foo(img)
+            return img
+    """)
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/ops.py": ops}),
+        select=["ECO405"])
+    assert rules_of(report.violations) == ["ECO405"]
+    assert "silently falls back" in report.violations[0].message
+
+
+def test_eco405_flags_shape_guarded_oracle_return():
+    ops = src("""
+        from . import ref
+
+        def foo(img):
+            if img.shape[-1] > 4096:
+                return ref.foo(img)
+            return img
+    """)
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/ops.py": ops}),
+        select=["ECO405"])
+    assert rules_of(report.violations) == ["ECO405"]
+
+
+def test_eco405_clean_dispatch_and_justified_fallback_pass():
+    # backend choice alone (no geometry in the test) is sanctioned...
+    ops = src("""
+        from . import ref
+        import jax
+
+        def foo(img, *, impl="auto"):
+            if impl == "auto":
+                impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+            if impl == "xla":
+                return ref.foo(img)
+            return img
+    """)
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/ops.py": ops}),
+        select=["ECO405"])
+    assert report.violations == []
+    # ...and a justified shape fallback is suppressed, not silent
+    ops = src("""
+        from . import ref
+
+        def foo(img, *, impl="auto"):
+            # repro-lint: disable=ECO405 -- interpret mode cannot fit 8K
+            if img.shape[-1] > 8192:
+                return ref.foo(img)
+            return img
+    """)
+    report = check_sources(
+        _kernel_files(**{"src/repro/kernels/foo/ops.py": ops}),
+        select=["ECO405"])
+    assert report.violations == []
+    assert report.suppressed == 1
+
+
 # --------------------------------------------- family 5: environment pins
 
 

@@ -102,6 +102,64 @@ def test_detector_backend_fleet_cost_keyed_on_request_uid():
     assert by_uid[2].time_ms == pytest.approx(10.0 * base)  # dropout step
 
 
+def test_detector_backend_serves_ragged_batch_in_buckets():
+    """Frames of mixed sizes in ONE dispatch batch: serve_batch pads each
+    size bucket and launches the detector once per bucket, yielding results
+    in request order with the per-frame profiled cost untouched."""
+    launches = []
+
+    def spy_run(params, images):
+        launches.append(images.shape)
+        return _fake_run(params, images)
+
+    be = DetectorBackend("ssd_v1", "orin_nano", run_fn=spy_run, max_batch=8)
+    shapes = [(8, 8), (40, 200), (8, 8), (37, 41)]
+    reqs = [Request(uid=i, prompt=np.zeros(s, np.float32))
+            for i, s in enumerate(shapes)]
+    results = be.serve_batch(reqs)
+    assert [r.uid for r in results] == [0, 1, 2, 3]
+    # (8,8) and (37,41) share the (64,128) bucket; (40,200) gets (64,256):
+    # 2 launches for 4 ragged frames, never 4
+    assert sorted(launches) == [(1, 64, 256), (3, 64, 128)]
+    flops = DETECTOR_CONFIGS["ssd_v1"].flops
+    for r in results:
+        assert r.time_ms == DEVICES["orin_nano"].time_ms(flops)
+
+
+def test_detector_backend_uniform_batch_is_one_unpadded_launch():
+    """A uniform batch must keep the old exact-shape single-stack path —
+    no padding, one launch."""
+    launches = []
+
+    def spy_run(params, images):
+        launches.append(images.shape)
+        return _fake_run(params, images)
+
+    be = DetectorBackend("ssd_v1", "orin_nano", run_fn=spy_run, max_batch=4)
+    be.serve_batch([Request(uid=i, prompt=np.zeros((8, 8), np.float32))
+                    for i in range(3)])
+    assert launches == [(3, 8, 8)]
+
+
+def test_detector_backend_edge_stage_records_density_per_uid():
+    """edge_stage=True runs the fused Canny gateway stage over the whole
+    dispatch batch (ragged sizes included) and records per-frame edge
+    density keyed by uid."""
+    rng = np.random.default_rng(3)
+    be = DetectorBackend("ssd_v1", "orin_nano", run_fn=_fake_run,
+                         max_batch=8, edge_stage=True)
+    reqs = [Request(uid=u, prompt=rng.random(s).astype(np.float32))
+            for u, s in ((7, (32, 32)), (9, (40, 200)))]
+    be.serve_batch(reqs)
+    assert set(be.edge_density) == {7, 9}
+    for uid, req in ((7, reqs[0]), (9, reqs[1])):
+        from repro.kernels.canny_fused import ref
+        import jax.numpy as jnp
+        want = float(np.asarray(
+            ref.canny_edge(jnp.asarray(req.prompt)[None])).mean())
+        assert be.edge_density[uid] == pytest.approx(want)
+
+
 # -------------------------------------------------- cross-face parity test
 
 def _longhand_episode(scenes, table):

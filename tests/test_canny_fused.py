@@ -1,7 +1,11 @@
 """Fused Canny megakernel: bit-exact parity with the jnp oracle.
 
 All Pallas runs use interpret mode (CPU) — marked ``pallas`` so a TPU CI
-lane can select them; they stay in tier-1 (fast, not ``slow``).
+lane can select them; they stay in tier-1 (fast, not ``slow``).  The 2D
+lane-tiled grid means there is no width limit any more: the cases below
+cover lane tiling, the column halo, frames narrower than one lane tile,
+widths straddling the tile boundary, a >4096-wide frame (the old
+``MAX_WIDTH`` fallback territory), and the ragged pad-and-mask batch path.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -9,9 +13,10 @@ import pytest
 from _propcheck import given, settings, st
 
 from repro.kernels.canny_fused import ref
-from repro.kernels.canny_fused.canny_fused import (HALO, MAX_WIDTH,
-                                                   canny_edge_pallas)
-from repro.kernels.canny_fused.ops import canny_edge
+from repro.kernels.canny_fused.canny_fused import (
+    HALO, VMEM_BUDGET_BYTES, canny_edge_pallas, pick_tiles, tile_bytes)
+from repro.kernels.canny_fused.ops import (bucket_shape, canny_edge,
+                                           canny_edge_batch)
 
 pytestmark = pytest.mark.pallas
 
@@ -20,19 +25,45 @@ def _rand(shape, seed=0):
     return jnp.asarray(np.random.default_rng(seed).random(shape, np.float32))
 
 
-@pytest.mark.parametrize("shape,tile_rows", [
-    ((1, 32, 32), None),    # single tile, whole frame
-    ((3, 64, 64), None),    # batch, whole frame (the scene size)
-    ((1, 96, 64), 32),      # row-tiled: 3 even tiles
-    ((2, 40, 56), 16),      # row-tiled, non-tile-multiple height (3rd ragged)
-    ((1, 37, 41), 13),      # odd, non-square, ragged last tile
+@pytest.mark.parametrize("shape,tiles", [
+    ((1, 32, 32), {}),                  # single program, whole frame
+    ((3, 64, 64), {}),                  # batch, whole frame (the scene size)
+    ((1, 96, 64), dict(tile_rows=32)),  # row-tiled: 3 even row tiles
+    ((2, 40, 56), dict(tile_rows=16)),  # ragged last row tile
+    ((1, 37, 41), dict(tile_rows=13)),  # odd, non-square
+    ((1, 64, 200), dict(tile_rows=32, tile_lanes=64)),   # 2x4 lane grid
+    ((2, 80, 600), dict(tile_rows=32, tile_lanes=256)),  # 3x3, ragged both
+    ((1, 48, 31), dict(tile_lanes=64)),  # frame NARROWER than one lane tile
+    ((1, 48, 65), dict(tile_lanes=64)),  # width = tile_lanes + 1
+    ((1, 48, 63), dict(tile_lanes=64)),  # width = tile_lanes - 1
+    ((1, 48, 64), dict(tile_lanes=64)),  # width exactly tile_lanes
 ])
-def test_fused_bit_identical_to_oracle(shape, tile_rows):
+def test_fused_bit_identical_to_oracle(shape, tiles):
     img = _rand(shape, seed=sum(shape))
-    got = np.asarray(canny_edge_pallas(img, tile_rows=tile_rows,
-                                       interpret=True))
+    got = np.asarray(canny_edge_pallas(img, interpret=True, **tiles))
     want = np.asarray(ref.canny_edge(img))
     np.testing.assert_array_equal(got, want)
+
+
+def test_frame_wider_than_old_limit_is_served():
+    """w > 4096 used to raise in the row-tiled kernel and silently fall
+    back to the staged oracle under impl='auto'; the 2D grid serves it."""
+    img = _rand((1, 24, 4224), seed=11)
+    got = np.asarray(canny_edge_pallas(img, tile_rows=24, tile_lanes=1024,
+                                       interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(ref.canny_edge(img)))
+    # and the dispatch wrapper has no width-based impl rewrite left
+    got = np.asarray(canny_edge(img, impl="interpret", tile_rows=24,
+                                tile_lanes=1024))
+    np.testing.assert_array_equal(got, np.asarray(ref.canny_edge(img)))
+
+
+def test_4k_frame_bit_identical():
+    """The acceptance shape: one 2160x3840 frame, no width guard."""
+    img = _rand((1, 2160, 3840), seed=4)
+    got = np.asarray(canny_edge_pallas(img, tile_rows=1088, tile_lanes=1984,
+                                       interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(ref.canny_edge(img)))
 
 
 def test_fused_thresholds_forwarded():
@@ -51,29 +82,56 @@ def test_tile_smaller_than_halo_is_an_error():
     with pytest.raises(ValueError, match="HALO"):
         canny_edge_pallas(_rand((1, 32, 32)), tile_rows=HALO - 1,
                           interpret=True)
+    with pytest.raises(ValueError, match="HALO"):
+        canny_edge_pallas(_rand((1, 32, 32)), tile_lanes=HALO - 1,
+                          interpret=True)
 
 
-def test_frame_wider_than_column_limit_is_a_clear_error():
-    """The row-tiled kernel keeps whole rows in VMEM; frames wider than the
-    column limit must fail with a pointer at the ROADMAP's lane-tiling
-    item, not opaquely inside pallas_call."""
-    wide = jnp.zeros((1, 16, MAX_WIDTH + 128), jnp.float32)
-    with pytest.raises(ValueError, match="lane-dim \\(width\\) tiling"):
-        canny_edge_pallas(wide, tile_rows=16, interpret=True)
-    # the staged oracle remains the documented wide-frame fallback
-    assert np.asarray(canny_edge(wide, impl="xla")).shape == wide.shape
+def test_pick_tiles_respects_vmem_budget():
+    """Auto-picked tiles fit the VMEM working-set model at every size the
+    bench exercises, and never shrink below the halo."""
+    for h, w in ((64, 64), (1080, 1920), (1440, 2560), (2160, 3840),
+                 (4320, 7680), (17, 9)):
+        tr, tl = pick_tiles(h, w)
+        assert tr >= HALO and tl >= HALO
+        assert tile_bytes(tr, tl) <= VMEM_BUDGET_BYTES
+    # explicit tiles are honored untouched
+    assert pick_tiles(256, 256, tile_rows=40, tile_lanes=72) == (40, 72)
 
 
-def test_auto_dispatches_wide_frames_to_xla_fallback():
-    """impl='auto' must SERVE a wide frame (xla fallback) instead of
-    surfacing the Pallas kernel's column-limit ValueError; the fail-fast
-    behavior stays with explicit impl='pallas'."""
-    wide = _rand((1, 16, MAX_WIDTH + 128), seed=2)
-    got = canny_edge(wide, impl="auto")
-    np.testing.assert_array_equal(np.asarray(got),
-                                  np.asarray(ref.canny_edge(wide)))
-    with pytest.raises(ValueError, match="lane-dim \\(width\\) tiling"):
-        canny_edge(wide, impl="pallas")
+def test_ragged_batch_parity_and_masking():
+    """canny_edge_batch pads mixed frame sizes into buckets, serves each
+    with ONE launch, and crops — every frame must match its solo oracle
+    run exactly (the pad-and-mask plane leaks nothing across frames)."""
+    rng = np.random.default_rng(9)
+    shapes = [(37, 41), (64, 64), (40, 200), (64, 64)]
+    frames = [rng.random(s, np.float32) for s in shapes]
+    for impl in ("xla", "interpret"):
+        maps = canny_edge_batch(frames, impl=impl)
+        assert [m.shape for m in maps] == shapes
+        for m, f in zip(maps, frames):
+            want = np.asarray(ref.canny_edge(jnp.asarray(f)[None]))[0]
+            np.testing.assert_array_equal(m, want)
+
+
+def test_padded_region_output_is_false():
+    """Out-of-frame output from the masked kernel is guaranteed False —
+    the host crop merely drops it, it never hides garbage."""
+    f = np.random.default_rng(10).random((37, 41), np.float32)
+    dims = jnp.asarray([[37, 41]], jnp.int32)
+    padded = np.zeros((1, 64, 128), np.float32)
+    padded[0, :37, :41] = f
+    out = np.asarray(canny_edge_pallas(jnp.asarray(padded), dims,
+                                       tile_rows=16, tile_lanes=64,
+                                       interpret=True))
+    assert not out[0, 37:, :].any() and not out[0, :, 41:].any()
+
+
+def test_bucket_shape_granularity():
+    assert bucket_shape(1, 1) == (64, 128)
+    assert bucket_shape(64, 128) == (64, 128)
+    assert bucket_shape(65, 129) == (128, 256)
+    assert bucket_shape(1080, 1920) == (1088, 1920)
 
 
 def test_ops_dispatch():
@@ -99,4 +157,17 @@ def test_fused_parity_property(h, w, tile, seed):
     tile height produce bit-identical edge maps in interpret mode."""
     img = _rand((1, h, w), seed=seed)
     got = np.asarray(canny_edge_pallas(img, tile_rows=tile, interpret=True))
+    np.testing.assert_array_equal(got, np.asarray(ref.canny_edge(img)))
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(13, 60), w=st.integers(8, 300),
+       tile_r=st.integers(HALO, 32), tile_l=st.integers(HALO, 128),
+       seed=st.integers(0, 10_000))
+def test_fused_parity_property_2d(h, w, tile_r, tile_l, seed):
+    """The 2D property: any (frame, tile) geometry — lane tiles narrower
+    or wider than the frame, ragged in both dims — stays bit-identical."""
+    img = _rand((1, h, w), seed=seed)
+    got = np.asarray(canny_edge_pallas(img, tile_rows=tile_r,
+                                       tile_lanes=tile_l, interpret=True))
     np.testing.assert_array_equal(got, np.asarray(ref.canny_edge(img)))
